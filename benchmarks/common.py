@@ -1,0 +1,34 @@
+"""Shared benchmark helpers: closed-loop drivers + percentile extraction."""
+
+from __future__ import annotations
+
+import sys
+from typing import Callable, List, Optional
+
+import numpy as np
+
+
+def percentiles(lats: List[float], ps=(50, 90, 95, 99)) -> dict:
+    arr = np.asarray(sorted(lats))
+    return {f"p{p}": float(np.percentile(arr, p)) for p in ps}
+
+
+def closed_loop_cluster(cluster, client, payload_fn, n: int,
+                        timeout: float = 30_000_000.0) -> List[float]:
+    """Issue n requests back-to-back on a uBFT cluster; return latencies."""
+    state = {"left": n}
+
+    def fire(*_):
+        state["left"] -= 1
+        if state["left"] > 0:
+            client.request(payload_fn(n - state["left"]), fire)
+
+    client.request(payload_fn(0), fire)
+    ok = cluster.sim.run_until(lambda: state["left"] <= 0, timeout=timeout)
+    if not ok:
+        raise TimeoutError(f"closed loop stalled with {state['left']} left")
+    return list(client.latencies)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")

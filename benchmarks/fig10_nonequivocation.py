@@ -1,0 +1,63 @@
+"""Figure 10: median latency of non-equivocation mechanisms vs message size
+(one sender, two receivers): CTBcast fast path, CTBcast slow path, SGX
+trusted counter.
+
+Paper targets: CTBcast fast 2.2–11 µs; SGX ≈ 16 µs minimum; CTBcast slow
+≈ 86 µs; fast path up to 6.5× faster than SGX.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.baselines.sgx_counter import build_ctbcast, build_sgx_broadcast
+
+SIZES = (32, 256, 1024, 4096, 8192)
+N = 100
+
+
+def _ctb_lat(fast: bool, size: int) -> float:
+    sim, nodes, deliv = build_ctbcast(fast=fast)
+    bc = nodes[0]
+    lats = []
+    for k in range(N):
+        t0 = sim.now
+        bc.ctb.broadcast(k, b"m" * size)
+        ok = sim.run_until(lambda: len(deliv.get(k, {})) >= 3,
+                           timeout=1_000_000)
+        assert ok, f"ctbcast({fast=}) stalled at k={k}"
+        lats.append(max(deliv[k].values()) - t0)
+    return float(np.median(lats))
+
+
+def _sgx_lat(size: int) -> float:
+    sim, sender, delivered = build_sgx_broadcast()
+    lats = []
+    for k in range(1, N + 1):
+        t0 = sim.now
+        sender.broadcast(b"m" * size)
+        ok = sim.run_until(lambda: len(delivered.get(k, [])) >= 2,
+                           timeout=1_000_000)
+        assert ok
+        lats.append(max(delivered[k]) - t0)
+    return float(np.median(lats))
+
+
+def run() -> dict:
+    out = {}
+    for size in SIZES:
+        fast = _ctb_lat(True, size)
+        sgx = _sgx_lat(size)
+        out[size] = {"ctb_fast": fast, "sgx": sgx}
+        emit(f"fig10.{size}B.ctb_fast", fast,
+             f"vs_sgx={sgx / fast:.2f}x_faster")
+        emit(f"fig10.{size}B.sgx_counter", sgx)
+    slow = _ctb_lat(False, 32)
+    out["slow32"] = slow
+    emit("fig10.32B.ctb_slow", slow, "paper~86us")
+    return out
+
+
+if __name__ == "__main__":
+    run()

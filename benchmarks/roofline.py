@@ -1,0 +1,121 @@
+"""Roofline analysis (deliverable g): three-term roofline per
+(architecture × shape × mesh) from the dry-run artifacts.
+
+    compute    = HLO_FLOPs_per_dev / peak_FLOP/s      (197 TFLOP/s bf16)
+    memory     = HLO_bytes_per_dev / HBM_bw           (819 GB/s)
+    collective = link_bytes_per_dev / link_bw         (50 GB/s/link ICI)
+
+(cost_analysis reports post-SPMD per-device numbers, so the per-chip form of
+the assignment's formulas is used directly.)  MODEL_FLOPS = 6·N·D for
+training (2·N·D prefill, 2·N·B decode), N_active for MoE.  Writes
+artifacts/roofline.csv + .md and prints summary rows.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+_IMPROVE = {
+    "compute": "reduce recompute (remat policy) / increase arithmetic "
+               "intensity per chip",
+    "memory": "cut activation traffic: fuse softmax/norm chains, bf16 "
+              "logits, larger per-chip tiles",
+    "collective": "reshard to cut all-gathers (FSDP prefetch), overlap "
+                  "collectives with compute, gradient compression",
+}
+
+
+def _model_flops(arch: str, shape: str) -> Optional[float]:
+    import jax
+    from repro.configs import get_config
+    from repro.launch.shapes import SHAPES, params_spec
+    cfg = get_config(arch)
+    shapes = params_spec(cfg)
+    n_total = 0
+    n_moe = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        sz = 1
+        for d in leaf.shape:
+            sz *= d
+        n_total += sz
+        name = None
+        for e in reversed(path):
+            if hasattr(e, "key"):
+                name = e.key
+                break
+        if name in ("w_gate", "w_up", "w_down") and len(leaf.shape) == 4:
+            n_moe += sz
+    n_active = n_total
+    if cfg.moe is not None and n_moe:
+        n_active = n_total - n_moe * (1.0 - cfg.moe.top_k / cfg.moe.n_experts)
+    sp = SHAPES[shape]
+    if sp.kind == "train":
+        return 6.0 * n_active * sp.batch * sp.seq
+    if sp.kind == "prefill":
+        return 2.0 * n_active * sp.batch * sp.seq
+    return 2.0 * n_active * sp.batch     # decode: one token per sequence
+
+
+def run() -> Dict:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, "dryrun", "*.json"))):
+        r = json.load(open(path))
+        if r.get("status") == "skipped":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "status": "skipped",
+                         "note": r.get("reason", "")})
+            continue
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "status": r.get("status"),
+                         "note": str(r.get("error", ""))[:90]})
+            continue
+        c = r.get("corrected") or r["raw"]
+        chips = 512 if r["mesh"] == "pod2x16x16" else 256
+        t_comp = c["flops"] / PEAK_FLOPS
+        t_mem = c["bytes"] / HBM_BW
+        link = c["collectives"].get("total_link", 0.0)
+        t_coll = link / LINK_BW
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        dom = max(terms, key=terms.get)
+        bound = max(terms.values())
+        mf = _model_flops(r["arch"], r["shape"])
+        hlo_global = c["flops"] * chips
+        ratio = mf / hlo_global if hlo_global else 0.0
+        frac = (mf / chips / PEAK_FLOPS) / bound if bound > 0 else 0.0
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok", "compute_s": t_comp, "memory_s": t_mem,
+            "collective_s": t_coll, "dominant": dom,
+            "model_flops": mf, "hlo_flops_global": hlo_global,
+            "useful_ratio": ratio, "roofline_fraction": frac,
+            "hbm_fit": r["memory"]["total_hbm_bytes"] < 16e9,
+            "note": _IMPROVE[dom],
+        })
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(os.path.join(ARTIFACTS, "roofline.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    # CSV + printed summary
+    for row in rows:
+        if row["status"] != "ok":
+            print(f"roofline.{row['arch']}.{row['shape']}.{row['mesh']},0,"
+                  f"{row['status']}:{row['note']}")
+            continue
+        print(f"roofline.{row['arch']}.{row['shape']}.{row['mesh']},"
+              f"{max(row['compute_s'], row['memory_s'], row['collective_s']) * 1e6:.1f},"
+              f"dom={row['dominant']};frac={row['roofline_fraction']:.3f};"
+              f"useful={row['useful_ratio']:.2f}")
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

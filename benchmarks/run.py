@@ -1,0 +1,47 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  The roofline benchmark reads
+the dry-run artifacts (artifacts/dryrun/*.json) when present.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [figure ...]
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks import (fig7_app_latency, fig8_request_size,
+                            fig9_breakdown, fig10_nonequivocation,
+                            fig11_tail_latency, table2_memory, throughput,
+                            roofline)
+    mods = {
+        "fig7": fig7_app_latency,
+        "fig8": fig8_request_size,
+        "fig9": fig9_breakdown,
+        "fig10": fig10_nonequivocation,
+        "fig11": fig11_tail_latency,
+        "table2": table2_memory,
+        "throughput": throughput,
+        "roofline": roofline,
+    }
+    wanted = sys.argv[1:] or list(mods)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        t0 = time.time()
+        try:
+            mods[name].run()
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception as e:  # keep going — report the failure as a row
+            import traceback
+            traceback.print_exc()
+            print(f"{name}.FAILED,0,{type(e).__name__}:{str(e)[:120]}")
+
+
+if __name__ == "__main__":
+    main()

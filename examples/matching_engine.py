@@ -1,0 +1,44 @@
+"""Replicated financial order matching (the paper's Liquibook workload):
+50/50 BUY/SELL limit orders against a price-time-priority book, replicated
+across 3 replicas with ~10 µs of added latency.
+
+    PYTHONPATH=src python examples/matching_engine.py
+"""
+
+import os
+import struct
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.apps.matching import MatchingEngineApp, order_req
+from repro.core.smr import build_cluster
+
+
+def main() -> None:
+    cluster = build_cluster(MatchingEngineApp)
+    client = cluster.new_client()
+    rng = np.random.default_rng(1)
+    lats, fills_total = [], 0
+    for i in range(200):
+        side = "buy" if rng.random() < 0.5 else "sell"
+        price = int(100 + rng.integers(-5, 6))
+        r, lat = cluster.run_request(client, order_req(side, i, price, 10))
+        nfills = struct.unpack_from("<Q", r, 0)[0]
+        fills_total += nfills
+        lats.append(lat)
+    lats.sort()
+    print(f"200 orders | fills={fills_total} | "
+          f"latency p50={lats[100]:.1f}us p90={lats[180]:.1f}us "
+          f"p99={lats[198]:.1f}us")
+    books = [(len(r.app.bids), len(r.app.asks), r.app.fills)
+             for r in cluster.replicas]
+    assert books[0] == books[1] == books[2]
+    print(f"book state identical across replicas: bids={books[0][0]} "
+          f"asks={books[0][1]} fills={books[0][2]}")
+
+
+if __name__ == "__main__":
+    main()

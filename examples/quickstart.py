@@ -1,0 +1,49 @@
+"""Quickstart: Byzantine fault tolerance in microseconds.
+
+Replicates a key-value store across 2f+1 = 3 replicas with uBFT, shows the
+~10 µs fast path, then crashes the leader and shows the system recover via
+a view change — all on the discrete-event simulator with a calibrated
+RDMA-class network model.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.apps.kvstore import KVStoreApp, get_req, set_req
+from repro.core.consensus import ConsensusConfig
+from repro.core.smr import build_cluster
+
+
+def main() -> None:
+    cluster = build_cluster(KVStoreApp,
+                            cfg=ConsensusConfig(view_timeout_us=2000.0))
+    client = cluster.new_client()
+
+    print("== fast path (no failures) ==")
+    for i in range(5):
+        r, lat = cluster.run_request(client, set_req(b"key%d" % i, b"v%d" % i))
+        print(f"  SET key{i} -> {r.decode()}  ({lat:.1f} us end-to-end)")
+    r, lat = cluster.run_request(client, get_req(b"key3"))
+    print(f"  GET key3 -> {r.decode()}  ({lat:.1f} us)")
+
+    print("\n== leader crash -> view change -> continue ==")
+    cluster.replicas[0].crash()
+    r, lat = cluster.run_request(client, set_req(b"after", b"crash"),
+                                 timeout=60_000_000)
+    views = [rep.view for rep in cluster.replicas[1:]]
+    print(f"  SET after -> {r.decode()}  ({lat:.1f} us, views now {views})")
+    r, lat = cluster.run_request(client, get_req(b"key3"), timeout=60_000_000)
+    print(f"  GET key3 -> {r.decode()}  (state preserved across the change)")
+
+    stores = [rep.app.store for rep in cluster.replicas[1:]]
+    assert stores[0] == stores[1]
+    print("\nreplica states identical; total simulated time:",
+          f"{cluster.sim.now / 1000:.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

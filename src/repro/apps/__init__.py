@@ -1,0 +1,7 @@
+"""Replicated applications (§7: Flip, Memcached/Redis-style KV, Liquibook)."""
+
+from repro.apps.flip import FlipApp
+from repro.apps.kvstore import KVStoreApp
+from repro.apps.matching import MatchingEngineApp
+
+__all__ = ["FlipApp", "KVStoreApp", "MatchingEngineApp"]

@@ -1,0 +1,44 @@
+"""In-memory KV store — the Memcached/Redis analog of §7.1.
+
+Request wire format (binary, matching the paper's 16 B keys / 32 B values):
+    b"G" + key            -> GET
+    b"S" + klen(1) + key + value -> SET
+Responses: value bytes (b"" on miss) or b"OK".
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core.consensus import App
+
+
+def get_req(key: bytes) -> bytes:
+    return b"G" + key
+
+
+def set_req(key: bytes, value: bytes) -> bytes:
+    return b"S" + bytes([len(key)]) + key + value
+
+
+class KVStoreApp(App):
+    def __init__(self) -> None:
+        self.store: Dict[bytes, bytes] = {}
+
+    def apply(self, req: bytes) -> bytes:
+        op = req[:1]
+        if op == b"G":
+            return self.store.get(req[1:], b"")
+        if op == b"S":
+            klen = req[1]
+            key = req[2:2 + klen]
+            value = req[2 + klen:]
+            self.store[key] = value
+            return b"OK"
+        return b"ERR"
+
+    def snapshot(self):
+        return tuple(sorted(self.store.items()))
+
+    def adopt(self, snap) -> None:
+        self.store = dict(snap)

@@ -1,0 +1,6 @@
+from repro.configs.registry import (ARCHS, LONG_CONTEXT_OK,
+                                    get_config, get_smoke_config,
+                                    list_archs)
+
+__all__ = ["ARCHS", "LONG_CONTEXT_OK", "get_config",
+           "get_smoke_config", "list_archs"]

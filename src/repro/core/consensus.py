@@ -1,0 +1,1006 @@
+"""uBFT consensus + SMR replica — Algorithms 2, 3, 4, 5 of the paper.
+
+Layout of one replica (Figure 2):
+
+    RPC ──> consensus ──> execution ──> RPC reply
+             │  fast path: CTBcast(PREPARE) → TB(WILL_CERTIFY) → TB(WILL_COMMIT)
+             │  slow path: CTBcast(PREPARE) → TB(CERTIFY,σ) → CTBcast(COMMIT,P_Σ)
+             └─ view change: CTBcast(SEAL_VIEW) → direct CRTFY_VC → CTBcast(NEW_VIEW)
+
+Every replica owns one CTBcast *instance per broadcaster* and interprets each
+peer's CTBcast messages in FIFO order (Alg. 2 line 1), applying the Byzantine
+checks of Algorithm 5 before accepting each message; a check violation
+*blocks* that peer permanently.  Tail-validity gaps are healed by CTBcast
+summaries (Algorithm 4): the broadcaster blocks every t/2 broadcasts until
+f+1 receivers certify a digest of its recent window (double buffering,
+footnote 3), and the resulting SUMMARY lets laggards jump their FIFO pointer.
+
+Memory is practically bounded: prepares/commits/promises are dropped when the
+application checkpoint (f+1 signed) slides the consensus window forward.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+from repro.core import crypto
+from repro.core.crypto import SignedBundle
+from repro.core.ctbcast import CTBcast
+from repro.core.node import Node
+from repro.core.registers import RegisterClient
+from repro.core.tbcast import TBcastService
+from repro.sim.events import Simulator
+from repro.sim.net import NetworkModel
+
+
+# --------------------------------------------------------------------------
+# Configuration
+# --------------------------------------------------------------------------
+@dataclass
+class ConsensusConfig:
+    window: int = 256          # consensus slots per checkpoint (§7)
+    t: int = 128               # CTBcast tail parameter (§7)
+    f: int = 1                 # Byzantine replicas tolerated (n = 2f+1)
+    f_m: int = 1               # crash-faulty memory nodes (2f_m+1 total)
+    slow_after_us: float = 400.0   # fast→slow escalation timeout
+    view_timeout_us: float = 4000.0
+    fast_enabled: bool = True
+    ctb_fast_enabled: bool = True  # CTBcast's own fast path (LOCK/LOCKED)
+    slow_mode: str = "timeout"     # "timeout" | "always" (bench the slow path)
+    echo_timeout_us: float = 100.0
+    max_request_bytes: int = 8192
+
+
+# --------------------------------------------------------------------------
+# Application interface (the replicated state machine)
+# --------------------------------------------------------------------------
+class App:
+    """Deterministic state machine: bytes request -> bytes response."""
+
+    def apply(self, req: bytes) -> bytes:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def snapshot(self) -> Any:
+        return None
+
+    def adopt(self, snap: Any) -> None:
+        pass
+
+    def snapshot_fp(self) -> bytes:
+        return crypto.fingerprint(crypto.encode(self.snapshot()))
+
+
+# --------------------------------------------------------------------------
+# Per-peer consensus state (Alg. 2 lines 6-12)
+# --------------------------------------------------------------------------
+@dataclass
+class PeerState:
+    view: int = 0
+    seal_view: Optional[int] = None
+    new_view: Optional[Any] = None
+    noncp_msgs_in_view: int = 0    # non-CHECKPOINT messages since last SEAL_VIEW
+    prepares: Dict[int, Tuple[int, Any]] = field(default_factory=dict)  # slot -> (view, req)
+    commits: Dict[int, Any] = field(default_factory=dict)               # slot -> commit cert
+    checkpoint: Optional[Any] = None
+    blocked: bool = False          # Byzantine message observed → stop
+    # FIFO reorder machinery for this peer's CTBcast stream
+    fifo_pending: Dict[int, Any] = field(default_factory=dict)
+    fifo_next: int = 0
+    recent: Dict[int, Any] = field(default_factory=dict)  # last t processed (k -> msg)
+
+
+def _cp_payload(start: int, window: int, app_fp: bytes) -> tuple:
+    return ("cp", start, window, app_fp)
+
+
+def _noop_request(v: int, s: int) -> tuple:
+    """⊥ proposal used by a new leader to fill unconstrained holes."""
+    return (("noop", v, s), "", b"")
+
+
+class Checkpoint:
+    """An f+1-signed application checkpoint (genesis has no sigs)."""
+
+    def __init__(self, start: int, window: int, app_fp: bytes,
+                 sigs: Tuple[Tuple[str, bytes], ...] = ()):  # ((pid, sig), ...)
+        self.start = start
+        self.window = window
+        self.app_fp = app_fp
+        self.sigs = sigs
+
+    @property
+    def open_slots(self) -> range:
+        return range(self.start, self.start + self.window)
+
+    def payload(self) -> tuple:
+        return _cp_payload(self.start, self.window, self.app_fp)
+
+    def supersedes(self, other: "Checkpoint") -> bool:
+        return self.start > other.start
+
+    def valid(self, registry: crypto.KeyRegistry, quorum: int) -> bool:
+        if self.start == 0:
+            return True  # genesis
+        pids = {pid for pid, _ in self.sigs}
+        return (len(pids) >= quorum and
+                all(registry.verify(pid, self.payload(), sig)
+                    for pid, sig in self.sigs))
+
+    def to_wire(self) -> tuple:
+        return ("CPCERT", self.start, self.window, self.app_fp, tuple(self.sigs))
+
+    @staticmethod
+    def from_wire(w: tuple) -> "Checkpoint":
+        _tag, start, window, app_fp, sigs = w
+        return Checkpoint(start, window, app_fp, tuple(sigs))
+
+
+# --------------------------------------------------------------------------
+# The replica
+# --------------------------------------------------------------------------
+class UbftReplica(Node):
+    """A uBFT replica: consensus engine + execution + RPC endpoint."""
+
+    def __init__(self, sim: Simulator, net: NetworkModel,
+                 registry: crypto.KeyRegistry, pid: str,
+                 replicas: List[str], mem_nodes: List[str],
+                 app: App, cfg: Optional[ConsensusConfig] = None):
+        super().__init__(sim, net, registry, pid)
+        self.cfg = cfg or ConsensusConfig()
+        self.replicas = list(replicas)
+        self.n = len(replicas)
+        self.f = self.cfg.f
+        assert self.n == 2 * self.f + 1, "uBFT runs with 2f+1 replicas"
+        self.quorum = self.f + 1
+        self.app = app
+
+        self.tb = TBcastService(self, t=self.cfg.t,
+                                max_msg_bytes=self.cfg.max_request_bytes + 512)
+        self.regs = RegisterClient(self, mem_nodes, self.cfg.f_m)
+
+        # --- consensus state (Alg. 2 lines 1-12) ---
+        self.view = 0
+        self.next_slot = 0
+        self.checkpoint = Checkpoint(0, self.cfg.window, app.snapshot_fp())
+        self.state: Dict[str, PeerState] = {r: PeerState() for r in replicas}
+        for st in self.state.values():
+            st.checkpoint = self.checkpoint
+
+        self.decided: Dict[int, tuple] = {}        # slot -> request tuple
+        self.exec_upto = -1                         # highest executed slot
+        self.results: Dict[int, bytes] = {}
+        self._last_cp_broadcast = 0
+
+        # fast-path bookkeeping (bounded by window; pruned at checkpoints)
+        self.will_certify: Dict[Tuple[int, int], Set[str]] = {}
+        self.will_commit: Dict[Tuple[int, int], Set[str]] = {}
+        self.my_will_certifies: Set[Tuple[int, int]] = set()
+        self.my_will_commits: Set[Tuple[int, int]] = set()
+        self.my_certified: Set[Tuple[int, int]] = set()
+        self.my_prepared: Dict[int, Tuple[int, tuple]] = {}   # slot -> (view, req)
+        self.certify_sigs: Dict[Tuple[int, int, bytes], Dict[str, bytes]] = {}
+        self.my_commits: Dict[int, Any] = {}        # slot -> commit cert I broadcast
+        self.cp_sigs: Dict[tuple, Dict[str, bytes]] = {}
+
+        # RPC / client handling
+        self.pending_req: Dict[tuple, tuple] = {}   # rid -> request tuple
+        self.echoes: Dict[tuple, Set[str]] = {}
+        self.propose_queue: List[tuple] = []
+        self.proposed_rids: Set[tuple] = set()
+        self.decided_rids: Set[tuple] = set()
+        self.waiting_prepare: Dict[tuple, List[Tuple[int, int]]] = {}
+
+        # view change
+        self.vc_shares: Dict[Tuple[int, str], Dict[str, Tuple[bytes, bytes]]] = {}
+        self.vc_snapshots: Dict[Tuple[int, str], Any] = {}
+        self.changing_view = False
+        self.new_view_sent: Set[int] = set()
+        self.progress_deadline: Optional[float] = None
+        # Patience grows exponentially with consecutive failed views and
+        # resets on progress (needed for liveness under eventual synchrony:
+        # a view must eventually outlast the slow path).
+        self.view_patience = self.cfg.view_timeout_us
+        self.executed_rids: Set[tuple] = set()
+
+        # summaries (Alg. 4)
+        self.summary_sigs: Dict[int, Dict[str, bytes]] = {}
+
+        # CTBcast instance per broadcaster (self included)
+        self.ctb: Dict[str, CTBcast] = {}
+        for p in replicas:
+            self.ctb[p] = CTBcast(
+                self, self.tb, self.regs, broadcaster=p, group=replicas,
+                t=self.cfg.t,
+                deliver=(lambda k, m, p=p: self._ctb_deliver(p, k, m)),
+                auto_slow_after_us=(0.0 if self.cfg.slow_mode == "always"
+                                    else self.cfg.slow_after_us),
+                on_summary_needed=(lambda seg, p=p: self._need_summary(seg))
+                if p == pid else None,
+                fast_enabled=self.cfg.ctb_fast_enabled,
+            )
+        self.my_ctb = self.ctb[pid]
+        self.ctb_k = 0
+
+        # TBcast streams for consensus messages
+        self.tb.register("cons/", self._on_tb_consensus)
+
+        # direct messages
+        self.handle("REQ", self._on_client_request)
+        self.handle("ECHO", self._on_echo)
+        self.handle("CRTFY_VC", self._on_crtfy_vc)
+        self.handle("CERTIFY_SUMMARY", self._on_certify_summary)
+        self.handle("STATE_REQ", self._on_state_req)
+        self.handle("STATE_RESP", self._on_state_resp)
+
+        # decided callback hooks (runtime integration)
+        self.on_decide_hooks: List[Callable[[int, tuple], None]] = []
+
+        self._progress_timer_armed = False
+
+    # ------------------------------------------------------------------
+    # helpers
+    # ------------------------------------------------------------------
+    def leader(self, view: Optional[int] = None) -> str:
+        v = self.view if view is None else view
+        return self.replicas[v % self.n]
+
+    def is_leader(self) -> bool:
+        return self.leader() == self.pid
+
+    def _ctb_broadcast(self, msg: tuple, slow: bool = False) -> None:
+        k = self.ctb_k
+        self.ctb_k += 1
+        self.my_ctb.broadcast(k, msg, slow=slow)
+
+    def _tb_broadcast(self, stream: str, key: int, payload: Any) -> None:
+        self.tb.broadcast(f"cons/{stream}", key, payload, self.replicas)
+
+    # ==================================================================
+    # RPC (client requests; §5.4 Echo round)
+    # ==================================================================
+    def _on_client_request(self, src: str, body: Any) -> None:
+        rid, payload = body
+        req = (rid, src, payload)
+        if rid in self.decided_rids:
+            # retransmitted request — resend cached reply if executed
+            for s, r in self.decided.items():
+                if r[0] == rid and s <= self.exec_upto:
+                    self.send(src, "REP", (rid, self.results[s]))
+            return
+        self.pending_req[rid] = req
+        if len(self.pending_req) > 4 * self.cfg.window:  # Byzantine clients
+            self.pending_req.pop(next(iter(self.pending_req)))
+        # release any PREPARE that waited for the direct client copy
+        for (v, s) in self.waiting_prepare.pop(rid, []):
+            self._endorse(v, s)
+        if self.is_leader():
+            self._note_echo(rid, self.pid)
+        else:
+            self.send(self.leader(), "ECHO", (rid,))
+            self._arm_progress_timer()
+
+    def _on_echo(self, src: str, body: Any) -> None:
+        (rid,) = body
+        if self.is_leader():
+            self._note_echo(rid, src)
+
+    def _note_echo(self, rid: tuple, who: str) -> None:
+        s = self.echoes.setdefault(rid, set())
+        s.add(who)
+        if rid in self.proposed_rids or rid in self.decided_rids:
+            return
+        need = self.n  # timely fast path wants everyone on board
+        if len(s) >= need and rid in self.pending_req:
+            self._enqueue_proposal(self.pending_req[rid])
+        elif len(s) == 1:
+            # echo timeout: propose with whoever echoed (slow path will cope)
+            self.timer(self.cfg.echo_timeout_us,
+                       lambda: self._echo_timeout(rid))
+
+    def _echo_timeout(self, rid: tuple) -> None:
+        if rid in self.proposed_rids or rid in self.decided_rids:
+            return
+        if rid in self.pending_req and len(self.echoes.get(rid, ())) >= 1:
+            self._enqueue_proposal(self.pending_req[rid])
+
+    def _enqueue_proposal(self, req: tuple) -> None:
+        rid = req[0]
+        if rid in self.proposed_rids:
+            return
+        self.proposed_rids.add(rid)
+        self.propose_queue.append(req)
+        self._drain_proposals()
+
+    # ==================================================================
+    # Propose (Alg. 2 lines 14-16)
+    # ==================================================================
+    def _drain_proposals(self) -> None:
+        if not self.is_leader():
+            return
+        if self.view > 0 and self.view not in self.new_view_sent:
+            return  # NEW_VIEW must precede proposals in this view
+        while (self.propose_queue and
+               self.next_slot in self.checkpoint.open_slots):
+            req = self.propose_queue.pop(0)
+            if req[0] in self.decided_rids:
+                continue
+            s = self.next_slot
+            self.next_slot += 1
+            self._ctb_broadcast(("PREPARE", self.view, s, req))
+
+    # ==================================================================
+    # CTBcast delivery → FIFO interpretation (Alg. 2 line 1)
+    # ==================================================================
+    def _ctb_deliver(self, p: str, k: int, m: Any) -> None:
+        st = self.state[p]
+        if st.blocked:
+            return
+        if k < st.fifo_next:
+            return
+        st.fifo_pending[k] = m
+        self._fifo_drain(p)
+
+    def _fifo_drain(self, p: str) -> None:
+        st = self.state[p]
+        while not st.blocked and st.fifo_next in st.fifo_pending:
+            k = st.fifo_next
+            m = st.fifo_pending.pop(k)
+            st.fifo_next += 1
+            st.recent[k] = m
+            for kk in [x for x in st.recent if x <= k - self.cfg.t]:
+                del st.recent[kk]
+            if not self._byz_check(p, m):       # Algorithm 5
+                st.blocked = True               # "block upon a Byzantine message"
+                return
+            self._process_ctb(p, k, m)
+            if (k + 1) % self.my_ctb.summary_interval == 0:
+                self._send_certify_summary(p, k)
+
+    # ------------------------------------------------------------------
+    # Algorithm 5 — CTBcast's Byzantine checks
+    # ------------------------------------------------------------------
+    def _byz_check(self, p: str, m: tuple) -> bool:
+        st = self.state[p]
+        kind = m[0]
+        if kind == "PREPARE":
+            _, v, s, req = m
+            cp = st.checkpoint or self.checkpoint
+            prepared_in_v = s in st.prepares and st.prepares[s][0] == v
+            return (st.view == v and self.leader(v) == p and
+                    s in cp.open_slots and
+                    not prepared_in_v and       # never prepared s before in v
+                    (v == 0 or (st.new_view is not None and
+                                self._must_propose_ok(s, req, st.new_view))))
+        if kind == "COMMIT":
+            cert = m[1]
+            v, s = cert["view"], cert["slot"]
+            cp = st.checkpoint or self.checkpoint
+            return (s in cp.open_slots and v == st.view and
+                    st.commits.get(s) is not cert)
+        if kind == "CHECKPOINT":
+            cp = Checkpoint.from_wire(m[1])
+            old = st.checkpoint or self.checkpoint
+            return cp.supersedes(old) and cp.valid(self.registry, self.quorum)
+        if kind == "SEAL_VIEW":
+            return st.view < m[1]
+        if kind == "NEW_VIEW":
+            certs = m[1]
+            if self.leader(st.view) != p:
+                return False
+            if st.noncp_msgs_in_view > 0:
+                return False   # must be p's first non-CHECKPOINT msg this view
+            seen = set()
+            for q, (snap, shares) in certs.items():
+                if q in seen:
+                    return False
+                seen.add(q)
+                digest = crypto.fingerprint(crypto.encode(snap))
+                pids = {pid for pid, _ in shares}
+                if len(pids) < self.quorum:
+                    return False
+                for pid, sig in shares:
+                    if not self.registry.verify(
+                            pid, ("vc", st.view, q, digest), sig):
+                        return False
+            return len(seen) >= self.quorum
+        return True
+
+    def _must_propose_ok(self, slot: int, req: Any, new_view: Any) -> bool:
+        must = self._must_propose(slot, new_view)
+        if must is None:        # any request may be proposed
+            return True
+        return crypto.encode(req) == crypto.encode(must)
+
+    # ------------------------------------------------------------------
+    # FIFO message processing (Alg. 2 / Alg. 3 receive sides)
+    # ------------------------------------------------------------------
+    def _process_ctb(self, p: str, k: int, m: tuple) -> None:
+        kind = m[0]
+        st = self.state[p]
+        if kind == "PREPARE":
+            st.noncp_msgs_in_view += 1
+            self._on_prepare(p, m)
+        elif kind == "COMMIT":
+            st.noncp_msgs_in_view += 1
+            self._on_commit(p, m)
+        elif kind == "CHECKPOINT":
+            self._on_checkpoint_msg(p, m)
+        elif kind == "SEAL_VIEW":
+            self._on_seal_view(p, m)   # resets the per-view counters
+        elif kind == "NEW_VIEW":
+            st.noncp_msgs_in_view += 1
+            self._on_new_view(p, m)
+
+    # --- PREPARE (lines 18-22) ---
+    def _on_prepare(self, p: str, m: tuple) -> None:
+        _, v, s, req = m
+        self.state[p].prepares[s] = (v, req)
+        if v != self.view or s not in self.checkpoint.open_slots:
+            return
+        self.my_prepared[s] = (v, req)
+        rid = req[0]
+        if rid in self.pending_req or p == self.pid:
+            self._endorse(v, s)
+        else:
+            # wait for the client's direct copy before endorsing (§5.4)
+            self.waiting_prepare.setdefault(rid, []).append((v, s))
+            self._arm_progress_timer()
+        if self.cfg.slow_mode == "always":
+            self._do_certify(v, s)
+        else:
+            self.timer(self.cfg.slow_after_us,
+                       lambda: self._slow_path_kick(v, s))
+
+    def _endorse(self, v: int, s: int) -> None:
+        if v != self.view or s not in self.checkpoint.open_slots:
+            return
+        if self.cfg.fast_enabled:
+            self.my_will_certifies.add((v, s))
+            self._tb_broadcast("WILL_CERTIFY", s, (v, s))      # line 21
+        else:
+            self._do_certify(v, s)
+
+    def _slow_path_kick(self, v: int, s: int) -> None:
+        if s in self.decided or v != self.view:
+            return
+        self._do_certify(v, s)
+
+    # --- CERTIFY (lines 22, 34-36) ---
+    def _do_certify(self, v: int, s: int) -> None:
+        if (v, s) in self.my_certified:
+            return
+        pr = self.my_prepared.get(s)
+        if pr is None or pr[0] != v:
+            return
+        self.my_certified.add((v, s))
+        req = pr[1]
+        fp = crypto.fingerprint(crypto.encode(req))
+        payload = ("certify", v, s, fp)
+        self.async_sign(payload, lambda sig: self._tb_broadcast(
+            "CERTIFY", s, (v, s, fp, sig)))
+
+    def _on_certify(self, q: str, body: tuple) -> None:
+        v, s, fp, sig = body
+        # accept certificates for any view ≤ ours (they may be completing a
+        # promise from the view we are sealing); the signature binds (v,s,fp)
+        if v > self.view or s not in self.checkpoint.open_slots:
+            return
+        self.async_verify(q, ("certify", v, s, fp), sig,
+                          lambda ok: self._certify_verified(ok, q, v, s, fp, sig))
+
+    def _certify_verified(self, ok: bool, q: str, v: int, s: int,
+                          fp: bytes, sig: bytes) -> None:
+        if not ok:
+            return
+        sigs = self.certify_sigs.setdefault((v, s, fp), {})
+        sigs[q] = sig
+        if len(sigs) >= self.quorum and s not in self.my_commits:
+            pr = self.my_prepared.get(s)
+            if pr is None or pr[0] != v:
+                return
+            if crypto.fingerprint(crypto.encode(pr[1])) != fp:
+                return
+            if v != self.view:
+                return   # never broadcast a COMMIT for a view I have sealed
+            cert = {"view": v, "slot": s, "fp": fp, "req": pr[1],
+                    "sigs": tuple(sorted(sigs.items()))}
+            self.my_commits[s] = cert
+            self._ctb_broadcast(("COMMIT", cert))              # line 36
+
+    # --- COMMIT (lines 38-41) ---
+    def _on_commit(self, p: str, m: tuple) -> None:
+        cert = m[1]
+        v, s, fp, req = cert["view"], cert["slot"], cert["fp"], cert["req"]
+        if crypto.fingerprint(crypto.encode(req)) != fp:
+            return
+        items = [(pid, ("certify", v, s, fp), sig) for pid, sig in cert["sigs"]]
+        if len({pid for pid, _, _ in items}) < self.quorum:
+            return
+        self.async_verify_many(items, lambda oks: self._commit_verified(
+            oks, p, cert))
+
+    def _commit_verified(self, oks: List[bool], p: str, cert: dict) -> None:
+        if not all(oks):
+            return
+        s = cert["slot"]
+        st = self.state[p]
+        prev = st.commits.get(s)
+        if prev is None or prev["view"] <= cert["view"]:
+            st.commits[s] = cert
+        # f+1 COMMITs with a matching PREPARE → decide (line 40)
+        matching = [q for q in self.replicas
+                    if (c := self.state[q].commits.get(s)) is not None
+                    and c["fp"] == cert["fp"] and c["view"] == cert["view"]]
+        if len(matching) >= self.quorum:
+            self._decide(s, cert["req"])
+
+    # --- fast path (lines 24-31) ---
+    def _on_tb_consensus(self, origin: str, stream: str, key: int,
+                         payload: Any) -> None:
+        kind = stream.split("/", 1)[1]
+        if kind == "WILL_CERTIFY":
+            v, s = payload
+            ws = self.will_certify.setdefault((v, s), set())
+            ws.add(origin)
+            if (len(ws) >= 2 * self.f + 1 and v == self.view and
+                    s in self.checkpoint.open_slots and
+                    (v, s) not in self.my_will_commits):
+                self.my_will_commits.add((v, s))
+                self._tb_broadcast("WILL_COMMIT", s, (v, s))   # line 27
+        elif kind == "WILL_COMMIT":
+            v, s = payload
+            ws = self.will_commit.setdefault((v, s), set())
+            ws.add(origin)
+            if (len(ws) >= 2 * self.f + 1 and v == self.view and
+                    s in self.checkpoint.open_slots):
+                pr = self.state[self.leader(v)].prepares.get(s)
+                if pr is not None and pr[0] == v:
+                    self._decide(s, pr[1])                     # line 31
+        elif kind == "CERTIFY":
+            self._on_certify(origin, payload)
+        elif kind == "CERTIFY_CHECKPOINT":
+            self._on_certify_checkpoint(origin, payload)
+        elif kind == "SUMMARY":
+            self._on_summary(origin, payload)
+
+    # ==================================================================
+    # Decide → execute → reply
+    # ==================================================================
+    def _decide(self, s: int, req: tuple) -> None:
+        if s in self.decided:
+            return
+        self.decided[s] = req
+        self.decided_rids.add(req[0])
+        self.progress_deadline = None
+        self.view_patience = self.cfg.view_timeout_us  # progress resets patience
+        for hook in self.on_decide_hooks:
+            hook(s, req)
+        self._execute_ready()
+
+    def _execute_ready(self) -> None:
+        while self.exec_upto + 1 in self.decided:
+            s = self.exec_upto + 1
+            rid, client, payload = self.decided[s]
+            if client == "" or rid in self.executed_rids:
+                result = b""      # no-op / duplicate: does not touch the app
+            else:
+                result = self.app.apply(payload)
+                self.executed_rids.add(rid)
+            self.results[s] = result
+            self.exec_upto = s
+            self.pending_req.pop(rid, None)
+            self.echoes.pop(rid, None)
+            if client and client in self.sim.processes:
+                self.send(client, "REP", (rid, result))
+        self._maybe_checkpoint_round()
+        self._drain_proposals()
+
+    # ==================================================================
+    # Checkpoints (Alg. 2 lines 43-61)
+    # ==================================================================
+    def _maybe_checkpoint_round(self) -> None:
+        last = self.checkpoint.open_slots[-1]
+        if self.exec_upto >= last:
+            payload = _cp_payload(last + 1, self.cfg.window, self.app.snapshot_fp())
+            self.async_sign(payload, lambda sig: self._tb_broadcast(
+                "CERTIFY_CHECKPOINT", last + 1, (payload, sig)))
+
+    def _on_certify_checkpoint(self, q: str, body: tuple) -> None:
+        payload, sig = body
+        self.async_verify(q, payload, sig,
+                          lambda ok: self._cp_sig_verified(ok, q, payload, sig))
+
+    def _cp_sig_verified(self, ok: bool, q: str, payload: tuple,
+                         sig: bytes) -> None:
+        if not ok:
+            return
+        sigs = self.cp_sigs.setdefault(payload, {})
+        sigs[q] = sig
+        if len(sigs) >= self.quorum:
+            _tag, start, window, app_fp = payload
+            cp = Checkpoint(start, window, app_fp, tuple(sorted(sigs.items())))
+            self._maybe_checkpoint(cp)
+
+    def _on_checkpoint_msg(self, p: str, m: tuple) -> None:
+        cp = Checkpoint.from_wire(m[1])
+        st = self.state[p]
+        st.checkpoint = cp
+        # forget this peer's prepares/commits outside the window (line 54)
+        for s in [s for s in st.prepares if s not in cp.open_slots]:
+            del st.prepares[s]
+        for s in [s for s in st.commits if s not in cp.open_slots]:
+            del st.commits[s]
+        self._maybe_checkpoint(cp)
+
+    def _maybe_checkpoint(self, cp: Checkpoint) -> bool:
+        if not cp.supersedes(self.checkpoint):
+            return False
+        if not cp.valid(self.registry, self.quorum):
+            return False
+        self.checkpoint = cp
+        # Re-broadcast the checkpoint on MY OWN CTBcast stream *before* any
+        # proposal into the new window: peers validate my PREPAREs against
+        # state[me].checkpoint (Alg. 5), which only advances when they
+        # FIFO-process my CHECKPOINT.  This is also the liveness relay of
+        # §B.3 ("re-broadcast by the potentially single correct process").
+        if cp.start > self._last_cp_broadcast:
+            self._last_cp_broadcast = cp.start
+            self._ctb_broadcast(("CHECKPOINT", cp.to_wire()))
+        # drop fast-path promises outside the window (§5.4)
+        for d in (self.will_certify, self.will_commit):
+            for key in [k for k in d if k[1] not in cp.open_slots]:
+                del d[key]
+        self.my_will_commits = {k for k in self.my_will_commits
+                                if k[1] in cp.open_slots}
+        self.my_will_certifies = {k for k in self.my_will_certifies
+                                  if k[1] in cp.open_slots}
+        self.my_certified = {k for k in self.my_certified
+                             if k[1] in cp.open_slots}
+        for d2 in (self.my_prepared, self.my_commits, self.decided,
+                   self.results):
+            for s in [s for s in d2 if s < cp.start]:
+                del d2[s]
+        for key in [k for k in self.certify_sigs if k[1] < cp.start]:
+            del self.certify_sigs[key]
+        for key in [k for k in self.cp_sigs if k[1] < cp.start]:
+            del self.cp_sigs[key]
+        if self.exec_upto < cp.start - 1:
+            # we are behind: adopt via state transfer (fp-verified)
+            self._request_state(cp)
+        self.next_slot = max(self.next_slot, cp.start)
+        self._drain_proposals()
+        return True
+
+    # --- state transfer (checkpoint adoption) ---
+    def _request_state(self, cp: Checkpoint) -> None:
+        for q in self.replicas:
+            if q != self.pid:
+                self.send(q, "STATE_REQ", (cp.start,))
+
+    def _on_state_req(self, src: str, body: tuple) -> None:
+        (start,) = body
+        if self.checkpoint.start >= start and self.exec_upto >= start - 1:
+            snap = self.app.snapshot()
+            self.send(src, "STATE_RESP",
+                      (start, snap, self.exec_upto),
+                      extra_bytes=256)
+
+    def _on_state_resp(self, src: str, body: tuple) -> None:
+        start, snap, upto = body
+        if self.exec_upto >= start - 1:
+            return
+        fp = crypto.fingerprint(crypto.encode(snap))
+        if fp != self.checkpoint.app_fp:
+            return  # unverifiable snapshot — ignore
+        self.app.adopt(snap)
+        self.exec_upto = max(self.exec_upto, self.checkpoint.start - 1)
+        self._execute_ready()
+
+    # ==================================================================
+    # View change (Algorithm 3)
+    # ==================================================================
+    def _arm_progress_timer(self) -> None:
+        if self.progress_deadline is None:
+            self.progress_deadline = self.sim.now + self.view_patience
+        if self._progress_timer_armed:
+            return
+        self._progress_timer_armed = True
+
+        def _check() -> None:
+            self._progress_timer_armed = False
+            if not self._has_pending():
+                self.progress_deadline = None
+                return
+            if (self.progress_deadline is not None and
+                    self.sim.now >= self.progress_deadline):
+                # patience for the next leader starts now, doubled (liveness
+                # under eventual synchrony: a view must outlast the slow path)
+                self.view_patience = min(self.view_patience * 2,
+                                         64 * self.cfg.view_timeout_us)
+                self.progress_deadline = self.sim.now + self.view_patience
+                self.change_view()
+            self._arm_progress_timer()
+
+        self.timer(self.cfg.view_timeout_us / 4, _check)
+
+    def _has_pending(self) -> bool:
+        undecided = any(rid not in self.decided_rids for rid in self.pending_req)
+        return undecided or bool(self.waiting_prepare)
+
+    def change_view(self) -> None:
+        if self.changing_view:
+            return
+        self.changing_view = True
+        self._fulfill_promises_then_seal()
+
+    def _fulfill_promises_then_seal(self) -> None:
+        """Alg. 3 lines 4-5 + §5.4 promises.
+
+        Before SEAL_VIEW: (1) every WILL_CERTIFY promise of this view is
+        fulfilled by broadcasting CERTIFY (unconditional — this is what makes
+        the WILL_COMMIT waits below live at *other* replicas), and (2) every
+        WILL_COMMIT promise is fulfilled by broadcasting a COMMIT certificate
+        (or the slot is covered by a checkpoint).  fast-path decisions
+        survive the view change exactly because of these waits.
+        """
+        for (v, s) in sorted(self.my_will_certifies):
+            if v == self.view and s in self.checkpoint.open_slots:
+                self._do_certify(v, s)
+        pending = [s for (v, s) in self.my_will_commits
+                   if v == self.view and s not in self.my_commits
+                   and s in self.checkpoint.open_slots]
+        if pending:
+            self.timer(50.0, self._fulfill_promises_then_seal)
+            return
+        self.view += 1
+        self._ctb_broadcast(("SEAL_VIEW", self.view))
+        self.changing_view = False
+        self._after_view_entered()
+
+    def _after_view_entered(self) -> None:
+        """RPC re-routing after a view change: followers re-echo pending
+        requests to the new leader; the new leader re-notes them."""
+        # requests proposed in dead views may be proposed again
+        self.proposed_rids = {rid for rid in self.proposed_rids
+                              if rid in self.decided_rids}
+        # rids with a live PREPARE in an open slot will be re-proposed by
+        # _repropose — don't also queue them (double assignment)
+        prepared_rids = {req[0] for s, (_v, req) in self.my_prepared.items()
+                         if s > self.exec_upto}
+        for rid, req in list(self.pending_req.items()):
+            if rid in self.decided_rids or rid in prepared_rids:
+                continue
+            if self.is_leader():
+                self._note_echo(rid, self.pid)
+            else:
+                self.send(self.leader(), "ECHO", (rid,))
+        if self._has_pending():
+            self._arm_progress_timer()
+
+    def _on_seal_view(self, p: str, m: tuple) -> None:
+        v = m[1]
+        st = self.state[p]
+        st.seal_view = v
+        st.view = v
+        st.noncp_msgs_in_view = 0
+        st.new_view = None
+        # certificate share attesting q's state (as of this FIFO point)
+        snap = self._peer_snapshot(p)
+        digest = crypto.fingerprint(crypto.encode(snap))
+        self.vc_snapshots[(v, p)] = snap
+        ldr = self.leader(v)
+        self.async_sign(("vc", v, p, digest), lambda sig: self.send(
+            ldr, "CRTFY_VC", (v, p, digest, sig)))
+        if v > self.view:
+            # peer is ahead: join the view change
+            self._catch_up_view(v)
+
+    def _catch_up_view(self, v: int) -> None:
+        while self.view < v:
+            self.view += 1
+            self._ctb_broadcast(("SEAL_VIEW", self.view))
+        self._after_view_entered()
+
+    def _peer_snapshot(self, p: str) -> tuple:
+        st = self.state[p]
+        cp = st.checkpoint or self.checkpoint
+        commits = tuple(sorted(
+            (s, self._cert_wire(c)) for s, c in st.commits.items()
+            if s in cp.open_slots))
+        return ("snap", p, st.view, cp.to_wire(), commits)
+
+    @staticmethod
+    def _cert_wire(c: dict) -> tuple:
+        return (c["view"], c["slot"], c["fp"], c["req"], tuple(c["sigs"]))
+
+    def _on_crtfy_vc(self, src: str, body: tuple) -> None:
+        v, q, digest, sig = body
+        if self.leader(v) != self.pid:
+            return
+        self.async_verify(src, ("vc", v, q, digest), sig,
+                          lambda ok: self._vc_share_verified(ok, src, v, q,
+                                                             digest, sig))
+
+    def _vc_share_verified(self, ok: bool, src: str, v: int, q: str,
+                           digest: bytes, sig: bytes) -> None:
+        if not ok:
+            return
+        shares = self.vc_shares.setdefault((v, q), {})
+        shares[src] = (digest, sig)
+        self._try_new_view(v)
+
+    def _try_new_view(self, v: int) -> None:
+        if (self.leader(v) != self.pid or v in self.new_view_sent or
+                self.view != v):
+            return
+        certs: Dict[str, tuple] = {}
+        for q in self.replicas:
+            shares = self.vc_shares.get((v, q), {})
+            snap = self.vc_snapshots.get((v, q))
+            if snap is None:
+                continue
+            my_digest = crypto.fingerprint(crypto.encode(snap))
+            matching = tuple((pid, sig) for pid, (dg, sig) in sorted(shares.items())
+                             if dg == my_digest)
+            if len({pid for pid, _ in matching}) >= self.quorum:
+                certs[q] = (snap, matching)
+        if len(certs) < self.quorum:
+            return
+        self.new_view_sent.add(v)
+        self._ctb_broadcast(("NEW_VIEW", certs))
+        # leader applies its own NEW_VIEW when it FIFO-delivers it
+
+    def _on_new_view(self, p: str, m: tuple) -> None:
+        certs = m[1]
+        st = self.state[p]
+        st.new_view = certs
+        v = st.view
+        while self.view < v:
+            self.view += 1
+            self._ctb_broadcast(("SEAL_VIEW", self.view))
+        # adopt the highest checkpoint in the certificates
+        best_cp = self.checkpoint
+        for q, (snap, _shares) in certs.items():
+            cp = Checkpoint.from_wire(snap[3])
+            if cp.supersedes(best_cp):
+                best_cp = cp
+        self._maybe_checkpoint(best_cp)
+        if self.leader(v) == self.pid:
+            self._repropose(v, certs)
+
+    def _repropose(self, v: int, certs: Dict[str, tuple]) -> None:
+        """Alg. 3 lines 17-19: transfer constrained slots, no-op the holes,
+        then open the remaining slots for new requests."""
+        committed_slots = [s for _q, (snap, _sh) in certs.items()
+                           for s, _cw in snap[4]]
+        max_committed = max(committed_slots, default=self.checkpoint.start - 1)
+        proposed_upto = self.checkpoint.start - 1
+        for s in self.checkpoint.open_slots:
+            must = self._must_propose(s, certs)
+            prior = self.my_prepared.get(s)
+            if must is not None:
+                req = must
+            elif (prior is not None and s > self.exec_upto and
+                  prior[1][0] not in self.executed_rids):
+                req = prior[1]              # re-propose the in-flight request
+            elif s <= max_committed or s <= self.exec_upto:
+                req = _noop_request(v, s)   # ⊥ slot below a committed one
+            elif self.propose_queue:
+                req = self.propose_queue.pop(0)
+            else:
+                break
+            proposed_upto = s
+            self._ctb_broadcast(("PREPARE", v, s, req))
+        self.next_slot = max(self.next_slot, proposed_upto + 1,
+                             self.checkpoint.start)
+        self._drain_proposals()
+
+    def _must_propose(self, slot: int, certs: Dict[str, tuple]) -> Optional[tuple]:
+        """Latest committed request for slot among the certificates, or None."""
+        best: Optional[Tuple[int, tuple]] = None
+        for q, (snap, _shares) in certs.items():
+            commits = snap[4]
+            for s, cw in commits:
+                if s != slot:
+                    continue
+                cv, cs, cfp, creq, csigs = cw
+                if best is None or cv > best[0]:
+                    best = (cv, creq)
+        return None if best is None else best[1]
+
+    # ==================================================================
+    # CTBcast summaries (Algorithm 4)
+    # ==================================================================
+    def _need_summary(self, seg: int) -> None:
+        """My CTBcast finished segment ``seg`` — gather f+1 certificates."""
+        # Receivers send CERTIFY_SUMMARY when their FIFO pointer passes the
+        # segment end (see _fifo_drain); nothing to send here — we simply
+        # wait.  Self-certify immediately (we trivially know our own stream).
+        k_end = (seg + 1) * self.my_ctb.summary_interval - 1
+        self._send_certify_summary(self.pid, k_end)
+
+    def _send_certify_summary(self, p: str, k: int) -> None:
+        """I have FIFO-processed p's stream up to k (a segment boundary) —
+        sign a certificate share of p's recent window (Alg. 4 line 2)."""
+        if p == self.pid:
+            recent = dict(self.my_ctb.buf)
+        else:
+            recent = self.state[p].recent
+        window = tuple(sorted((kk, crypto.fingerprint(crypto.encode(m)))
+                              for kk, m in recent.items()
+                              if k - self.cfg.t < kk <= k))
+        digest = crypto.fingerprint(crypto.encode(("sum", p, k, window)))
+        # bookkeeping signature → background task (§3), not the critical path
+        self.background(lambda: self.async_sign(
+            ("sum", p, k, digest),
+            lambda sig: self.send(p, "CERTIFY_SUMMARY", (k, digest, sig))))
+
+    def _on_certify_summary(self, src: str, body: tuple) -> None:
+        k, digest, sig = body
+        si = self.my_ctb.summary_interval
+        if (k + 1) % si != 0:
+            return
+        my_window = tuple(sorted((kk, crypto.fingerprint(crypto.encode(m)))
+                                 for kk, m in self.my_ctb.buf.items()
+                                 if k - self.cfg.t < kk <= k))
+        my_digest = crypto.fingerprint(crypto.encode(("sum", self.pid, k,
+                                                      my_window)))
+        if digest != my_digest:
+            return
+        self.background(lambda: self.async_verify(
+            src, ("sum", self.pid, k, digest), sig,
+            lambda ok: self._summary_sig_ok(ok, src, k, digest, sig)))
+
+    def _summary_sig_ok(self, ok: bool, src: str, k: int, digest: bytes,
+                        sig: bytes) -> None:
+        if not ok:
+            return
+        sigs = self.summary_sigs.setdefault(k, {})
+        sigs[src] = sig
+        si = self.my_ctb.summary_interval
+        seg = k // si
+        if len(sigs) >= self.quorum and seg > self.my_ctb.summaries_ok:
+            history = tuple(sorted((kk, m) for kk, m in self.my_ctb.buf.items()
+                                   if k - self.cfg.t < kk <= k))
+            bundle = (k, digest, tuple(sorted(sigs.items())), history)
+            self._tb_broadcast("SUMMARY", k, bundle)
+            self.my_ctb.summary_certified(seg)
+
+    def _on_summary(self, origin: str, payload: tuple) -> None:
+        k, digest, sigs, history = payload
+        window = tuple((kk, crypto.fingerprint(crypto.encode(m)))
+                       for kk, m in history)
+        if crypto.fingerprint(crypto.encode(("sum", origin, k, window))) != digest:
+            return
+        pids = {pid for pid, _ in sigs}
+        if len(pids) < self.quorum:
+            return
+        if not all(self.registry.verify(pid, ("sum", origin, k, digest), sig)
+                   for pid, sig in sigs):
+            return
+        st = self.state[origin]
+        if st.fifo_next > k:
+            return  # no gap — nothing to heal
+        # Heal the gap: apply missed messages in order WITHOUT the Byzantine
+        # checks (Alg. 4 line 14 — the f+1 certificate vouches for them).
+        start = max(st.fifo_next, k - self.cfg.t + 1)
+        for kk, m in history:
+            if start <= kk <= k and kk >= st.fifo_next:
+                st.fifo_next = kk + 1
+                st.recent[kk] = m
+                self._process_ctb(origin, kk, m)
+        st.fifo_next = max(st.fifo_next, k + 1)
+        self._fifo_drain(origin)
+
+    # ==================================================================
+    # accounting (Table 2)
+    # ==================================================================
+    def memory_bytes(self) -> dict:
+        tb = self.tb.memory_bytes()
+        ctb = sum(c.memory_bytes() for c in self.ctb.values())
+        window_bufs = (len(self.decided) + len(self.results) +
+                       len(self.my_prepared)) * (self.cfg.max_request_bytes + 64)
+        return {"tbcast_buffers": tb, "ctbcast_arrays": ctb,
+                "window_state": window_bufs,
+                "total": tb + ctb + window_bufs}

@@ -1,0 +1,185 @@
+"""Simulation-faithful cryptography (DESIGN.md §3).
+
+The paper uses Ed25519 (dalek), BLAKE3 HMACs and xxHash checksums.  Inside the
+simulation we need the *semantics* — unforgeability, transferable
+authentication, collision-resistant fingerprints — with a calibrated cost
+model (the costs live in ``repro.sim.net.NetParams``; timing is applied by the
+protocol layer, these functions are pure).
+
+Unforgeability discipline: secrets live privately inside :class:`Signer`
+objects; a process (including Byzantine test adversaries) is only ever handed
+its *own* Signer.  ``KeyRegistry.verify`` recomputes the MAC from its private
+secret table — it plays the role of "the math", not of a trusted process.
+Adversary code in tests never touches the registry internals, so signatures
+are unforgeable by construction.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import hmac
+import struct
+import zlib
+from dataclasses import dataclass, is_dataclass, fields
+from typing import Any, Dict, Optional, Tuple
+
+SIG_SIZE = 64        # wire size of an Ed25519 signature
+FINGERPRINT_SIZE = 32  # BLAKE3-style 256-bit digest
+CHECKSUM_SIZE = 8    # xxHash64
+
+
+def fingerprint(data: bytes) -> bytes:
+    """Collision-resistant 32 B digest (stands in for BLAKE3)."""
+    return hashlib.sha256(data).digest()
+
+
+def checksum(data: bytes) -> int:
+    """Fast 8-byte checksum (stands in for xxHash64)."""
+    return (zlib.crc32(data) << 32) | (zlib.crc32(data[::-1]) & 0xFFFFFFFF)
+
+
+def checksum_bytes(data: bytes) -> bytes:
+    return struct.pack("<Q", checksum(data) & 0xFFFFFFFFFFFFFFFF)
+
+
+def encode(obj: Any) -> bytes:
+    """Canonical deterministic encoding of protocol payloads."""
+    return _enc(obj)
+
+
+def _enc(obj: Any) -> bytes:
+    if obj is None:
+        return b"N"
+    if isinstance(obj, bool):
+        return b"B" + (b"1" if obj else b"0")
+    if isinstance(obj, int):
+        return b"I" + struct.pack("<q", obj)
+    if isinstance(obj, float):
+        return b"F" + struct.pack("<d", obj)
+    if isinstance(obj, bytes):
+        return b"Y" + struct.pack("<I", len(obj)) + obj
+    if isinstance(obj, str):
+        b = obj.encode()
+        return b"S" + struct.pack("<I", len(b)) + b
+    if isinstance(obj, (tuple, list)):
+        inner = b"".join(_enc(x) for x in obj)
+        return b"T" + struct.pack("<I", len(obj)) + inner
+    if isinstance(obj, dict):
+        items = sorted(obj.items(), key=lambda kv: repr(kv[0]))
+        inner = b"".join(_enc(k) + _enc(v) for k, v in items)
+        return b"D" + struct.pack("<I", len(items)) + inner
+    if is_dataclass(obj):
+        inner = b"".join(_enc(getattr(obj, f.name)) for f in fields(obj))
+        name = type(obj).__name__.encode()
+        return b"C" + struct.pack("<I", len(name)) + name + inner
+    raise TypeError(f"cannot encode {type(obj)!r}")
+
+
+def decode(data: bytes) -> Any:
+    """Inverse of :func:`encode` for the container/scalar subset."""
+    obj, off = _dec(data, 0)
+    if off != len(data):
+        raise ValueError("trailing bytes in encoded payload")
+    return obj
+
+
+def decode_tuple3(data: bytes) -> Tuple[Any, Any, Any]:
+    obj = decode(data)
+    if not (isinstance(obj, tuple) and len(obj) == 3):
+        raise ValueError("bad 3-tuple payload")
+    return obj
+
+
+def _dec(data: bytes, off: int):
+    tag = data[off:off + 1]
+    off += 1
+    if tag == b"N":
+        return None, off
+    if tag == b"B":
+        return data[off:off + 1] == b"1", off + 1
+    if tag == b"I":
+        return struct.unpack_from("<q", data, off)[0], off + 8
+    if tag == b"F":
+        return struct.unpack_from("<d", data, off)[0], off + 8
+    if tag == b"Y":
+        ln = struct.unpack_from("<I", data, off)[0]
+        return data[off + 4:off + 4 + ln], off + 4 + ln
+    if tag == b"S":
+        ln = struct.unpack_from("<I", data, off)[0]
+        return data[off + 4:off + 4 + ln].decode(), off + 4 + ln
+    if tag == b"T":
+        n = struct.unpack_from("<I", data, off)[0]
+        off += 4
+        items = []
+        for _ in range(n):
+            it, off = _dec(data, off)
+            items.append(it)
+        return tuple(items), off
+    raise ValueError(f"bad tag {tag!r}")
+
+
+def wire_size(obj: Any) -> int:
+    """Estimated wire size in bytes of a protocol payload."""
+    if obj is None:
+        return 1
+    if isinstance(obj, bool):
+        return 1
+    if isinstance(obj, (int, float)):
+        return 8
+    if isinstance(obj, bytes):
+        return len(obj)
+    if isinstance(obj, str):
+        return len(obj)
+    if isinstance(obj, (tuple, list)):
+        return 4 + sum(wire_size(x) for x in obj)
+    if isinstance(obj, dict):
+        return 4 + sum(wire_size(k) + wire_size(v) for k, v in obj.items())
+    if is_dataclass(obj):
+        return 8 + sum(wire_size(getattr(obj, f.name)) for f in fields(obj))
+    raise TypeError(f"cannot size {type(obj)!r}")
+
+
+class Signer:
+    """Holds a private key; the only way to produce this pid's signatures."""
+
+    def __init__(self, pid: str, secret: bytes):
+        self.pid = pid
+        self.__secret = secret
+
+    def sign(self, payload: Any) -> bytes:
+        data = encode(payload)
+        mac = hmac.new(self.__secret, data, hashlib.sha256).digest()
+        return mac + mac  # pad to 64 B like Ed25519
+
+
+class KeyRegistry:
+    """Public-key infrastructure stand-in (pre-published public keys)."""
+
+    def __init__(self) -> None:
+        self._secrets: Dict[str, bytes] = {}
+
+    def keygen(self, pid: str) -> Signer:
+        secret = hashlib.sha256(b"key:" + pid.encode()).digest()
+        self._secrets[pid] = secret
+        return Signer(pid, secret)
+
+    def verify(self, pid: str, payload: Any, sig: bytes) -> bool:
+        secret = self._secrets.get(pid)
+        if secret is None or sig is None:
+            return False
+        data = encode(payload)
+        mac = hmac.new(secret, data, hashlib.sha256).digest()
+        return hmac.compare_digest(mac + mac, sig)
+
+
+@dataclass(frozen=True)
+class SignedBundle:
+    """A payload with f+1 signatures from distinct processes (a certificate)."""
+    payload: Any
+    sigs: Tuple[Tuple[str, bytes], ...]  # ((pid, sig), ...)
+
+    def verify(self, registry: KeyRegistry, quorum: int) -> bool:
+        pids = {pid for pid, _ in self.sigs}
+        if len(pids) < quorum:
+            return False
+        return all(registry.verify(pid, self.payload, sig) for pid, sig in self.sigs)

@@ -1,0 +1,235 @@
+"""Reliable SWMR regular registers over disaggregated memory (§6.1).
+
+Faithful to the paper's construction:
+
+* **SWMR** — memory nodes enforce single-writer access control (the RDMA
+  permission tokens of §6.1 become an owner check at the node).
+* **Regular** — RDMA is atomic only at 8-byte granularity, so a READ that
+  overlaps a WRITE may return torn data.  The simulation models torn reads
+  explicitly (8-byte splicing during the write window); the register layer
+  recovers regularity via checksums + double-buffering (two sub-registers,
+  round-robin) + a δ cooldown between WRITEs, exactly as in the paper.
+* **Reliable** — each register is replicated on 2f_m+1 memory nodes; WRITEs
+  and READs complete at a majority (f_m+1); the highest valid timestamp wins.
+* **Byzantine-writer detection** — if both sub-registers have invalid
+  checksums and the READ took < δ, or both carry the same timestamp, the
+  owner is exposed as Byzantine and a default value is returned.
+
+Memory nodes are *trusted to crash only* — they are the paper's TCB.  They
+are application-oblivious: they store opaque blobs under (owner, register)
+keys and can be shared by many replicated applications.
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core import crypto
+from repro.core.node import Node
+from repro.sim.events import Simulator
+from repro.sim.net import NetworkModel
+
+#: sub-register blob layout: ts(8) + checksum(8) + len(4) + value
+BLOB_HEADER = 20
+
+
+def _pack(ts: int, value: bytes) -> bytes:
+    body = struct.pack("<qI", ts, len(value)) + value
+    return crypto.checksum_bytes(body) + body
+
+
+def _unpack(blob: Optional[bytes]) -> Optional[Tuple[int, bytes]]:
+    """Returns (ts, value) if the checksum validates, else None."""
+    if not blob or len(blob) < BLOB_HEADER:
+        return None
+    csum, body = blob[:8], blob[8:]
+    if crypto.checksum_bytes(body) != csum:
+        return None
+    ts, ln = struct.unpack_from("<qI", body, 0)
+    value = body[12:12 + ln]
+    if len(value) != ln:
+        return None
+    return ts, value
+
+
+@dataclass
+class _Cell:
+    """One sub-register replica at one memory node, with write-window
+    modeling for torn reads (8-byte atomicity)."""
+    blob: bytes = b""
+    prev: bytes = b""
+    t_start: float = -1.0
+    t_end: float = -1.0
+
+    def write(self, blob: bytes, now: float, dur: float) -> None:
+        self.prev = self.blob if now >= self.t_end else self.read(now)
+        self.blob = blob
+        self.t_start, self.t_end = now, now + dur
+
+    def read(self, now: float) -> bytes:
+        if now >= self.t_end or self.t_start < 0:
+            return self.blob
+        if now <= self.t_start:
+            return self.prev
+        # torn read: new prefix + old suffix at 8-byte granularity
+        frac = (now - self.t_start) / max(self.t_end - self.t_start, 1e-9)
+        cut = int(frac * max(len(self.blob), len(self.prev)) / 8) * 8
+        new = self.blob[:cut]
+        old = self.prev[cut:] if len(self.prev) > cut else b"\x00" * 8
+        return new + old
+
+
+class MemoryNode(Node):
+    """Disaggregated memory node: READ/WRITE with access control.  Part of
+    the trusted computing base — fails only by crashing."""
+
+    handling_cost = 0.3  # memnode service time (µs)
+
+    def __init__(self, sim: Simulator, net: NetworkModel, registry, pid: str,
+                 write_duration_us: float = 0.4):
+        super().__init__(sim, net, registry, pid)
+        self.cells: Dict[Tuple[str, str, int], _Cell] = {}
+        self.write_duration_us = write_duration_us
+        self.handle("REG_WRITE", self._on_write)
+        self.handle("REG_READ", self._on_read)
+
+    def _on_write(self, src: str, body: Any) -> None:
+        owner, reg, sub, blob, token = body
+        if owner != src:
+            return  # permission violation: only the owner may write (SWMR)
+        cell = self.cells.setdefault((owner, reg, sub), _Cell())
+        cell.write(blob, self.sim.now, self.write_duration_us)
+        self.send(src, "REG_WRITE_ACK", (reg, sub, token))
+
+    def _on_read(self, src: str, body: Any) -> None:
+        owner, reg, token = body
+        blobs = tuple(
+            self.cells.setdefault((owner, reg, sub), _Cell()).read(self.sim.now)
+            for sub in (0, 1)
+        )
+        self.send(src, "REG_READ_ACK", (owner, reg, token, blobs))
+
+    def memory_bytes(self) -> int:
+        return sum(len(c.blob) + len(c.prev) for c in self.cells.values())
+
+
+class RegisterClient:
+    """Reliable SWMR regular register operations for one node (§6.1)."""
+
+    def __init__(self, node: Node, mem_nodes: List[str], f_m: int,
+                 slot_bytes: int = 128):
+        assert len(mem_nodes) >= 2 * f_m + 1
+        self.node = node
+        self.mem_nodes = mem_nodes
+        self.quorum = f_m + 1
+        self.slot_bytes = slot_bytes
+        self._wts: Dict[str, int] = {}
+        self._last_write: Dict[str, float] = {}
+        self._pending: Dict[int, dict] = {}
+        self._token = 0
+        node.handle("REG_WRITE_ACK", self._on_write_ack)
+        node.handle("REG_READ_ACK", self._on_read_ack)
+
+    # ------------------------------------------------------------- WRITE
+    def write(self, reg: str, value: bytes, cb: Callable[[], None]) -> None:
+        """WRITE my register ``reg`` (owner = this node).  Completes at a
+        majority of memory nodes.  Enforces the δ cooldown between WRITEs to
+        the same register (§6.1) so readers can always find a complete
+        sub-register."""
+        now = self.node.sim.now
+        delta = self.node.netp.delta_us
+        earliest = self._last_write.get(reg, -delta) + delta
+        if now < earliest:
+            self.node.timer(earliest - now, lambda: self.write(reg, value, cb))
+            return
+        self._last_write[reg] = now
+        if self.node.sim.tracing:
+            t0 = now
+            inner_cb = cb
+            def cb():
+                self.node.sim.trace.append(("smwr", t0, self.node.sim.now))
+                inner_cb()
+        ts = self._wts.get(reg, 0) + 1
+        self._wts[reg] = ts
+        blob = _pack(ts, value)
+        sub = ts % 2  # round-robin double buffering
+        self._token += 1
+        tok = self._token
+        self._pending[tok] = {"kind": "w", "acks": 0, "cb": cb, "done": False}
+        for m in self.mem_nodes:
+            self.node.send(m, "REG_WRITE", (self.node.pid, reg, sub, blob, tok))
+
+    def _on_write_ack(self, src: str, body: Any) -> None:
+        _reg, _sub, tok = body
+        st = self._pending.get(tok)
+        if st is None or st["kind"] != "w" or st["done"]:
+            return
+        st["acks"] += 1
+        if st["acks"] >= self.quorum:
+            st["done"] = True
+            del self._pending[tok]
+            st["cb"]()
+
+    # -------------------------------------------------------------- READ
+    def read(self, owner: str, reg: str,
+             cb: Callable[[Optional[Tuple[int, bytes]], bool], None]) -> None:
+        """READ ``owner``'s register.  cb(value, owner_is_byzantine) where
+        value is (ts, bytes) or None (default value ⊥)."""
+        if self.node.sim.tracing:
+            t0 = self.node.sim.now
+            inner_cb = cb
+            def cb(val, byz):
+                self.node.sim.trace.append(("smwr", t0, self.node.sim.now))
+                inner_cb(val, byz)
+        self._token += 1
+        tok = self._token
+        self._pending[tok] = {
+            "kind": "r", "resps": [], "cb": cb, "done": False,
+            "start": self.node.sim.now, "owner": owner, "reg": reg,
+            "attempt": 1,
+        }
+        for m in self.mem_nodes:
+            self.node.send(m, "REG_READ", (owner, reg, tok))
+
+    def _on_read_ack(self, src: str, body: Any) -> None:
+        owner, reg, tok, blobs = body
+        st = self._pending.get(tok)
+        if st is None or st["kind"] != "r" or st["done"]:
+            return
+        st["resps"].append(blobs)
+        if len(st["resps"]) < self.quorum:
+            return
+        st["done"] = True
+        del self._pending[tok]
+        self._conclude_read(st)
+
+    def _conclude_read(self, st: dict) -> None:
+        took = self.node.sim.now - st["start"]
+        delta = self.node.netp.delta_us
+        best: Optional[Tuple[int, bytes]] = None
+        byz = False
+        for blobs in st["resps"]:
+            vals = [_unpack(b) for b in blobs]
+            ok = [v for v in vals if v is not None]
+            if len(ok) == 2 and ok[0][0] == ok[1][0]:
+                byz = True  # both sub-registers with the same timestamp
+            if not ok and took < delta and any(len(b) >= BLOB_HEADER for b in blobs):
+                byz = True  # torn/bogus on both subs within δ → Byzantine
+            for v in ok:
+                if best is None or v[0] > best[0]:
+                    best = v
+        if best is None and not byz:
+            blank = all(not b for blobs in st["resps"] for b in blobs)
+            if took >= delta and not blank:
+                # inconclusive slow read — retry (§6.1)
+                self.read(st["owner"], st["reg"],
+                          st["cb"]) if st["attempt"] < 8 else st["cb"](None, False)
+                return
+        st["cb"](best, byz)
+
+    # --------------------------------------------------------- accounting
+    def disaggregated_bytes_per_register(self) -> int:
+        """Table 2 model: 2 sub-registers × (checksum 8 + header 12 + value)."""
+        return 2 * (8 + 12 + self.slot_bytes)

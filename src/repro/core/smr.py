@@ -1,0 +1,123 @@
+"""SMR cluster wiring: replicas + memory nodes + clients (Figure 1).
+
+A :class:`Cluster` assembles 2f+1 :class:`UbftReplica`s, 2f_m+1
+:class:`MemoryNode`s and any number of :class:`Client`s on one simulator.
+Clients send unsigned requests to *all* replicas (§5.4) and complete when
+f+1 matching responses arrive.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core import crypto
+from repro.core.consensus import App, ConsensusConfig, UbftReplica
+from repro.core.node import Node
+from repro.core.registers import MemoryNode
+from repro.sim.events import Simulator
+from repro.sim.net import NetParams, NetworkModel
+
+
+class Client(Node):
+    """Closed-loop uBFT client."""
+
+    def __init__(self, sim: Simulator, net: NetworkModel, registry, pid: str,
+                 replicas: List[str], f: int):
+        super().__init__(sim, net, registry, pid)
+        self.replicas = replicas
+        self.f = f
+        self._next_rid = 0
+        self._outstanding: Dict[tuple, dict] = {}
+        self.latencies: List[float] = []
+        self.handle("REP", self._on_reply)
+
+    def request(self, payload: bytes,
+                cb: Optional[Callable[[bytes, float], None]] = None) -> tuple:
+        rid = (self.pid, self._next_rid)
+        self._next_rid += 1
+        self._outstanding[rid] = {
+            "t0": self.sim.now, "replies": {}, "cb": cb, "done": False,
+        }
+        for r in self.replicas:
+            self.send(r, "REQ", (rid, payload))
+        return rid
+
+    def _on_reply(self, src: str, body: Any) -> None:
+        rid, result = body
+        st = self._outstanding.get(rid)
+        if st is None or st["done"]:
+            return
+        st["replies"].setdefault(crypto.encode(result), set()).add(src)
+        for enc, who in st["replies"].items():
+            if len(who) >= self.f + 1:  # f+1 matching responses
+                st["done"] = True
+                lat = self.sim.now - st["t0"]
+                self.latencies.append(lat)
+                if st["cb"] is not None:
+                    st["cb"](result, lat)
+                del self._outstanding[rid]
+                return
+
+
+@dataclass
+class Cluster:
+    sim: Simulator
+    net: NetworkModel
+    registry: crypto.KeyRegistry
+    replicas: List[UbftReplica]
+    mem_nodes: List[MemoryNode]
+    clients: List[Client] = field(default_factory=list)
+
+    @property
+    def replica_pids(self) -> List[str]:
+        return [r.pid for r in self.replicas]
+
+    def new_client(self, pid: Optional[str] = None) -> Client:
+        pid = pid or f"c{len(self.clients)}"
+        c = Client(self.sim, self.net, self.registry, pid,
+                   self.replica_pids, self.replicas[0].f)
+        self.clients.append(c)
+        return c
+
+    def run_request(self, client: Client, payload: bytes,
+                    timeout: float = 1_000_000.0) -> Tuple[bytes, float]:
+        """Issue one request and run the simulation until it completes."""
+        box: dict = {}
+
+        def done(result: bytes, lat: float) -> None:
+            box["result"] = result
+            box["lat"] = lat
+
+        client.request(payload, done)
+        ok = self.sim.run_until(lambda: "result" in box, timeout=timeout)
+        if not ok:
+            raise TimeoutError(
+                f"request did not complete within {timeout} µs "
+                f"(t={self.sim.now})")
+        return box["result"], box["lat"]
+
+
+def build_cluster(app_factory: Callable[[], App], f: int = 1, f_m: int = 1,
+                  cfg: Optional[ConsensusConfig] = None,
+                  params: Optional[NetParams] = None,
+                  seed: int = 0,
+                  replica_cls=UbftReplica) -> Cluster:
+    """Assemble a 2f+1-replica, 2f_m+1-memory-node uBFT deployment."""
+    sim = Simulator(seed=seed)
+    net = NetworkModel(sim, params)
+    registry = crypto.KeyRegistry()
+    cfg = cfg or ConsensusConfig(f=f, f_m=f_m)
+    cfg.f, cfg.f_m = f, f_m
+
+    replica_pids = [f"r{i}" for i in range(2 * f + 1)]
+    mem_pids = [f"m{i}" for i in range(2 * f_m + 1)]
+
+    mem_nodes = [MemoryNode(sim, net, registry, m) for m in mem_pids]
+    replicas = [
+        replica_cls(sim, net, registry, pid, replica_pids, mem_pids,
+                    app_factory(), cfg)
+        for pid in replica_pids
+    ]
+    return Cluster(sim=sim, net=net, registry=registry,
+                   replicas=replicas, mem_nodes=mem_nodes)

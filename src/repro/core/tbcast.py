@@ -1,0 +1,187 @@
+"""Tail Broadcast (TBcast) — §4.1/§6.2 of the paper.
+
+Best-effort broadcast with *tail* semantics and finite memory:
+
+* the broadcaster buffers only its last ``2t`` messages per stream and
+  retransmits them until acknowledged — older messages are evicted
+  ("overwritten", §6.2) and may never be delivered;
+* correct receivers deliver FIFO per stream and are guaranteed the last
+  ``2t`` messages of a correct broadcaster (eventually, post-GST);
+* TBcast provides all CTBcast properties except agreement (a Byzantine
+  broadcaster can equivocate here — CTBcast fixes that on top).
+
+The wire substrate is the paper's circular-buffer primitive (§6.2): no
+per-message acknowledgements on the critical path (acks ride a coarse timer,
+mirroring the paper's piggybacking), sender-side eviction under backlog, and
+FIFO skip-ahead at the receiver when the sender's window has moved on (the
+``min_k`` field plays the role of the incarnation-number scan).
+
+Memory accounting (Table 2): each stream×peer connection owns ``t`` wire
+slots plus a ``t``-deep staging buffer, each slot sized for the largest
+message — exposed through :meth:`TBcastService.memory_bytes`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core import crypto
+from repro.core.node import Node
+
+#: per-slot header: checksum(8) + incarnation(8) + size(8)  (§6.2)
+SLOT_HEADER = 24
+
+
+@dataclass
+class _SendState:
+    """Sender-side per (stream, dst) window."""
+    window: Dict[int, Any] = field(default_factory=dict)  # k -> payload
+    min_k: int = 0          # lowest k still buffered
+    next_k: int = 0
+    acked: int = -1         # highest contiguously acked k
+    rto_pending: bool = False
+
+
+@dataclass
+class _RecvState:
+    """Receiver-side per (origin, stream) reorder buffer."""
+    pending: Dict[int, Any] = field(default_factory=dict)
+    next_k: int = 0         # next k to deliver FIFO
+    max_seen: int = -1
+    ack_pending: bool = False
+    last_acked: int = -1
+
+
+class TBcastService:
+    """Multiplexes tail-broadcast streams for one node."""
+
+    def __init__(self, node: Node, t: int, rto_us: float = 60.0,
+                 ack_interval_us: float = 40.0, max_msg_bytes: int = 4096):
+        self.node = node
+        self.t = t
+        self.rto_us = rto_us
+        self.ack_interval_us = ack_interval_us
+        self.max_msg_bytes = max_msg_bytes
+        self._send: Dict[Tuple[str, str], _SendState] = {}   # (stream, dst)
+        self._recv: Dict[Tuple[str, str], _RecvState] = {}   # (origin, stream)
+        self._handlers: List[Tuple[str, Callable[[str, str, int, Any], None]]] = []
+        self._conns: set = set()
+        node.handle("TB", self._on_tb)
+        node.handle("TB_ACK", self._on_ack)
+
+    # ------------------------------------------------------------------ API
+    def register(self, prefix: str,
+                 handler: Callable[[str, str, int, Any], None]) -> None:
+        """handler(origin_pid, stream, k, payload); matched by stream prefix."""
+        self._handlers.append((prefix, handler))
+
+    def broadcast(self, stream: str, k: int, payload: Any,
+                  group: List[str]) -> None:
+        """Broadcast (k, payload) on ``stream`` to ``group`` (may include self)."""
+        for dst in group:
+            if dst == self.node.pid:
+                # Local self-delivery (no wire) — still costs a dispatch.
+                self.node.execute(lambda kk=k, pl=payload:
+                                  self._deliver(self.node.pid, stream, kk, pl))
+                continue
+            st = self._send.setdefault((stream, dst), _SendState())
+            self._conns.add((stream, dst))
+            st.window[k] = payload
+            st.next_k = max(st.next_k, k + 1)
+            # Evict beyond 2t (tail semantics: old messages are overwritten).
+            while len(st.window) > 2 * self.t:
+                oldest = min(st.window)
+                del st.window[oldest]
+            st.min_k = min(st.window) if st.window else k + 1
+            self._ship(stream, dst, st, k, payload)
+            self._arm_rto(stream, dst)
+
+    # ----------------------------------------------------------------- wire
+    def _ship(self, stream: str, dst: str, st: _SendState, k: int,
+              payload: Any) -> None:
+        body = (stream, k, st.min_k, payload)
+        self.node.send(dst, "TB", body)
+
+    def _arm_rto(self, stream: str, dst: str) -> None:
+        st = self._send[(stream, dst)]
+        if st.rto_pending:
+            return
+        st.rto_pending = True
+
+        def _fire() -> None:
+            st.rto_pending = False
+            live = {k: v for k, v in st.window.items() if k > st.acked}
+            if not live:
+                return
+            st.min_k = min(st.window) if st.window else st.next_k
+            for k in sorted(live):
+                self._ship(stream, dst, st, k, live[k])
+            self._arm_rto(stream, dst)
+
+        self.node.timer(self.rto_us, _fire, note=f"tb.rto {stream}->{dst}")
+
+    # ------------------------------------------------------------- receive
+    def _on_tb(self, src: str, body: Any) -> None:
+        stream, k, min_k, payload = body
+        rs = self._recv.setdefault((src, stream), _RecvState())
+        if k < rs.next_k:
+            self._maybe_ack(src, stream, rs)
+            return  # duplicate / already delivered
+        rs.max_seen = max(rs.max_seen, k)
+        rs.pending[k] = payload
+        # Skip-ahead: anything below the sender's window floor is lost
+        # (overwritten at the sender) — FIFO pointer jumps forward (§6.2).
+        if min_k > rs.next_k:
+            for kk in [x for x in rs.pending if x < min_k]:
+                del rs.pending[kk]
+            rs.next_k = min_k
+        self._drain(src, stream, rs)
+        self._maybe_ack(src, stream, rs)
+
+    def _drain(self, origin: str, stream: str, rs: _RecvState) -> None:
+        while rs.next_k in rs.pending:
+            payload = rs.pending.pop(rs.next_k)
+            k = rs.next_k
+            rs.next_k += 1
+            self._deliver(origin, stream, k, payload)
+        # Bound the reorder buffer (Byzantine sender flooding far-future ks).
+        if len(rs.pending) > 2 * self.t:
+            for kk in sorted(rs.pending)[: len(rs.pending) - 2 * self.t]:
+                del rs.pending[kk]
+
+    def _deliver(self, origin: str, stream: str, k: int, payload: Any) -> None:
+        for prefix, handler in self._handlers:
+            if stream.startswith(prefix):
+                handler(origin, stream, k, payload)
+                return
+
+    def _maybe_ack(self, origin: str, stream: str, rs: _RecvState) -> None:
+        if rs.ack_pending or rs.next_k - 1 <= rs.last_acked:
+            return
+        rs.ack_pending = True
+
+        def _fire() -> None:
+            rs.ack_pending = False
+            rs.last_acked = rs.next_k - 1
+            self.node.send(origin, "TB_ACK", (stream, rs.last_acked))
+
+        self.node.timer(self.ack_interval_us, _fire, note="tb.ack")
+
+    def _on_ack(self, src: str, body: Any) -> None:
+        stream, upto = body
+        st = self._send.get((stream, src))
+        if st is None:
+            return
+        st.acked = max(st.acked, upto)
+        for k in [k for k in st.window if k <= st.acked]:
+            del st.window[k]
+        if st.window:
+            st.min_k = min(st.window)
+
+    # ---------------------------------------------------------- accounting
+    def memory_bytes(self) -> int:
+        """Preallocated wire memory (§6.2): per connection, t slots + t-deep
+        staging area, each slot sized for the largest message + header."""
+        slot = self.max_msg_bytes + SLOT_HEADER
+        return len(self._conns) * 2 * self.t * slot

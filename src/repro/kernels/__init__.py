@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+  swa          — sliding-window flash attention (gemma3/recurrentgemma local
+                 layers; the long-context path of the assignment)
+  mlstm        — chunkwise mLSTM with carried matrix memory (xLSTM)
+  rglru        — blocked gated linear recurrence (RecurrentGemma)
+  fingerprint  — hash-reduce state attestation (the paper's §6.1 checksum
+                 mechanism adapted to the TPU data plane, DESIGN.md §3)
+
+Each kernel ships ``<name>.py`` (pl.pallas_call + explicit BlockSpec VMEM
+tiling), a jitted wrapper in ``ops.py``, and a pure-jnp oracle in ``ref.py``.
+This container is CPU-only: kernels are validated with ``interpret=True``
+(the kernel body executes on CPU); TPU is the lowering target.
+"""

@@ -1,0 +1,59 @@
+"""State-attestation fingerprint Pallas kernel.
+
+The paper's disaggregated-memory checksums (§6.1), adapted to the TPU data
+plane (DESIGN.md §3): an order-independent hash-reduce over a parameter/
+gradient shard, computed on-device each training step and attested through
+uBFT's CTBcast by the replicated training coordinator.  Memory-bound by
+design — it reads every word exactly once.
+
+Grid: 1-D over blocks; a (1,1) SMEM accumulator carries the running digest;
+the final block writes the result.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MIX = 0x9E3779B9  # golden-ratio Weyl constant (matches runtime.attest)
+
+
+def _fp_kernel(x_ref, o_ref, acc_ref, *, nblocks: int):
+    bi = pl.program_id(0)
+
+    @pl.when(bi == 0)
+    def _reset():
+        acc_ref[0, 0] = jnp.uint32(0)
+
+    w = x_ref[...].astype(jnp.uint32)
+    w = w * jnp.uint32(MIX) ^ (w >> 16)
+    acc_ref[0, 0] = acc_ref[0, 0] + jnp.sum(w, dtype=jnp.uint32)
+
+    @pl.when(bi == nblocks - 1)
+    def _emit():
+        o_ref[0] = acc_ref[0, 0]
+
+
+def fingerprint_pallas(words: jax.Array, *, block: int = 4096,
+                       interpret: bool = True) -> jax.Array:
+    """words: (N,) uint32 (bitcast upstream); returns (1,) uint32 digest."""
+    n = words.shape[0]
+    blk = min(block, n)
+    pad = (-n) % blk
+    if pad:
+        words = jnp.pad(words, (0, pad))
+    nblocks = words.shape[0] // blk
+    kernel = functools.partial(_fp_kernel, nblocks=nblocks)
+    return pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.uint32),
+        scratch_shapes=[pltpu.SMEM((1, 1), jnp.uint32)],
+        interpret=interpret,
+    )(words)

@@ -1,0 +1,110 @@
+"""Chunkwise mLSTM Pallas kernel (xLSTM's matrix-LSTM training form).
+
+One plane = one (batch, head).  Grid: (P planes, nc chunks); the chunk axis
+is innermost and carries the inter-chunk state — matrix memory C (dh×dh),
+normalizer n (dh) and stabilizer m (scalar) — in VMEM scratch across grid
+steps (state resets when the chunk index wraps to 0).
+
+Per-step VMEM: q/k/v chunks (3·c·dh) + C (dh²·f32) + intra D matrix
+(c²·f32).  With c = 256, dh = 512: 3·256·512·2 + 512²·4 + 256²·4 ≈ 2.1 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, h_ref,
+                  C_ref, n_ref, m_ref, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _reset():
+        C_ref[...] = jnp.zeros_like(C_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+
+    q = q_ref[0].astype(jnp.float32)     # (c, dh)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    it = i_ref[0].astype(jnp.float32)    # (c, 1) input gate preact
+    ft = f_ref[0].astype(jnp.float32)    # (c, 1) forget gate preact
+
+    lf = jax.nn.log_sigmoid(ft)
+    csum = jnp.cumsum(lf, axis=0)        # (c, 1)
+    total = csum[-1]                     # (1,)
+
+    m_prev = m_ref[0, 0]
+    # intra-chunk log weights a[t,s] = csum_t − csum_s + i_s  (s ≤ t)
+    a = csum - csum.T + it.T             # (c, c)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    a = jnp.where(tri, a, NEG_INF)
+    b = csum + m_prev                    # (c, 1) inter-chunk decay
+    m_new = jnp.maximum(jnp.max(a, axis=1, keepdims=True), b)
+    D = jnp.exp(a - m_new)
+    scale_q = jnp.exp(b - m_new)         # (c, 1)
+
+    s_qk = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    w = s_qk * D                         # (c, c)
+    intra = jax.lax.dot(w, v, preferred_element_type=jnp.float32)
+    inter = jax.lax.dot(q, C_ref[...],
+                        preferred_element_type=jnp.float32) * scale_q
+    num = intra + inter
+    n_intra = jnp.sum(w, axis=1, keepdims=True)
+    n_inter = (q @ n_ref[...].T) * scale_q            # (c, 1)
+    denom = jnp.maximum(jnp.abs(n_intra + n_inter), 1.0)
+    h_ref[0] = (num / denom).astype(h_ref.dtype)
+
+    # inter-chunk state update
+    m_next = jnp.maximum(total[0] + m_prev, jnp.max(total - csum + it))
+    dec = jnp.exp(total[0] + m_prev - m_next)
+    w_s = jnp.exp(total - csum + it - m_next)         # (c, 1)
+    C_ref[...] = C_ref[...] * dec + jax.lax.dot_general(
+        k * w_s, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_ref[...] = n_ref[...] * dec + jnp.sum(k * w_s, axis=0, keepdims=True)
+    m_ref[0, 0] = m_next
+
+
+def mlstm_pallas(q: jax.Array, k: jax.Array, v: jax.Array, it: jax.Array,
+                 ft: jax.Array, *, chunk: int = 256,
+                 interpret: bool = True) -> jax.Array:
+    """q/k/v: (P, S, dh) planes; it/ft: (P, S, 1) gate pre-activations.
+    S must be a multiple of ``chunk``."""
+    P, S, dh = q.shape
+    c = min(chunk, S)
+    assert S % c == 0
+    nc = S // c
+    kernel = functools.partial(_mlstm_kernel, chunk=c)
+
+    def x_map(p, i):
+        return (p, i, 0)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(P, nc),
+        in_specs=[
+            pl.BlockSpec((1, c, dh), x_map),
+            pl.BlockSpec((1, c, dh), x_map),
+            pl.BlockSpec((1, c, dh), x_map),
+            pl.BlockSpec((1, c, 1), x_map),
+            pl.BlockSpec((1, c, 1), x_map),
+        ],
+        out_specs=pl.BlockSpec((1, c, dh), x_map),
+        out_shape=jax.ShapeDtypeStruct((P, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dh, dh), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, it, ft)

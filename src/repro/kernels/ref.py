@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every kernel (same signatures as the kernels)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def swa_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int
+            ) -> jax.Array:
+    """Sliding-window causal attention. q/k/v: (P, S, dh)."""
+    P, S, dh = q.shape
+    s = jnp.einsum("pqd,pkd->pqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (dh ** -0.5)
+    pos = jnp.arange(S)
+    delta = pos[:, None] - pos[None, :]
+    valid = (delta >= 0) & (delta < window)
+    s = jnp.where(valid[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("pqk,pkd->pqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def mlstm_ref(q, k, v, it, ft) -> jax.Array:
+    """Sequential (step-by-step) mLSTM — the ground truth the chunkwise
+    kernel must match. q/k/v: (P, S, dh); it/ft: (P, S, 1)."""
+    P, S, dh = q.shape
+    q32, k32, v32 = (x.astype(jnp.float32) for x in (q, k, v))
+    it32 = it[..., 0].astype(jnp.float32)
+    ft32 = ft[..., 0].astype(jnp.float32)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, i_t, f_t = xs
+        lf = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(lf + m, i_t)
+        fd = jnp.exp(lf + m - m_new)[:, None]
+        iw = jnp.exp(i_t - m_new)[:, None]
+        C = C * fd[..., None] + iw[..., None] * kt[..., :, None] * vt[..., None, :]
+        n = n * fd + iw * kt
+        num = jnp.einsum("pd,pde->pe", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("pd,pd->p", qt, n)), 1.0)
+        return (C, n, m_new), num / den[:, None]
+
+    C0 = jnp.zeros((P, dh, dh), jnp.float32)
+    n0 = jnp.zeros((P, dh), jnp.float32)
+    m0 = jnp.full((P,), NEG_INF, jnp.float32)
+    xs = (jnp.moveaxis(q32, 1, 0), jnp.moveaxis(k32, 1, 0),
+          jnp.moveaxis(v32, 1, 0), jnp.moveaxis(it32, 1, 0),
+          jnp.moveaxis(ft32, 1, 0))
+    _, hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return jnp.moveaxis(hs, 0, 1).astype(q.dtype)
+
+
+def rglru_ref(a: jax.Array, x: jax.Array) -> jax.Array:
+    """y_t = a_t · y_{t-1} + x_t via associative scan. a/x: (B, S, W)."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, y = jax.lax.associative_scan(
+        combine, (a.astype(jnp.float32), x.astype(jnp.float32)), axis=1)
+    return y
+
+
+def fingerprint_ref(words: jax.Array) -> jax.Array:
+    """Order-independent digest (matches repro.runtime.attest)."""
+    w = words.astype(jnp.uint32)
+    w = w * jnp.uint32(0x9E3779B9) ^ (w >> 16)
+    return jnp.sum(w, dtype=jnp.uint32)[None]

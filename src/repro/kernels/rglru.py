@@ -1,0 +1,64 @@
+"""RG-LRU gated linear recurrence Pallas kernel (RecurrentGemma).
+
+y_t = a_t · y_{t-1} + x_t, elementwise over the feature lanes.  Grid:
+(B planes, nT time blocks), time innermost; the carry y (1×W, f32) lives in
+VMEM scratch.  Within a block the recurrence runs as a W-lane-vectorized
+``fori_loop`` over the block's T_BLK steps (the feature dimension maps to
+TPU lanes; the sequential loop is over sublanes — the natural layout for a
+diagonal recurrence on the VPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, x_ref, y_ref, carry_ref, *, t_blk: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _reset():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    a = a_ref[0].astype(jnp.float32)     # (t_blk, W)
+    x = x_ref[0].astype(jnp.float32)
+
+    def step(t, y):
+        y = a[t] * y + x[t]
+        y_ref[0, t, :] = y.astype(y_ref.dtype)
+        return y
+
+    y0 = carry_ref[0]
+    y_final = jax.lax.fori_loop(0, t_blk, step, y0)
+    carry_ref[0, :] = y_final
+
+
+def rglru_pallas(a: jax.Array, x: jax.Array, *, t_blk: int = 128,
+                 interpret: bool = True) -> jax.Array:
+    """a, x: (B, S, W) — decay and gated input; returns y: (B, S, W) f32."""
+    B, S, W = a.shape
+    tb = min(t_blk, S)
+    assert S % tb == 0
+    nt = S // tb
+    kernel = functools.partial(_rglru_kernel, t_blk=tb)
+
+    def x_map(b, i):
+        return (b, i, 0)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nt),
+        in_specs=[
+            pl.BlockSpec((1, tb, W), x_map),
+            pl.BlockSpec((1, tb, W), x_map),
+        ],
+        out_specs=pl.BlockSpec((1, tb, W), x_map),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, W), jnp.float32)],
+        interpret=interpret,
+    )(a, x)

@@ -1,0 +1,105 @@
+"""Sliding-window flash attention Pallas kernel.
+
+Banded causal attention with window w: query chunk i attends to key chunks
+{i-1, i} (chunk size = w).  Grid: (B·KV·G planes, nq query chunks, 2 band
+positions); the band axis is innermost so the online-softmax running state
+(m, l, acc) carries across the two visits to the same output block in VMEM
+scratch.
+
+VMEM working set per step: q block (c×dh) + k/v blocks (c×dh) + acc (c×dh,
+f32) + scores (c×c, f32).  With c = w = 1024, dh = 256:
+3·(1024·256·2B) + 1024·256·4B + 1024·1024·4B ≈ 6.8 MiB — fits v5e's 16 MiB
+VMEM with MXU-aligned (multiple-of-128) tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                window: int, chunk: int, seq: int):
+    qi = pl.program_id(1)      # query chunk index
+    j = pl.program_id(2)       # band position: 0 = previous chunk, 1 = own
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # (c, dh)
+    k = k_ref[0].astype(jnp.float32)            # (c, dh)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (q.shape[-1] ** -0.5)               # (c, c)
+
+    qpos = qi * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    kchunk = qi - 1 + j
+    kpos = kchunk * chunk + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (chunk, chunk), 1)
+    delta = qpos - kpos
+    valid = (delta >= 0) & (delta < window) & (kpos >= 0) & (kpos < seq)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                          # (c, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def swa_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int,
+               interpret: bool = True) -> jax.Array:
+    """q: (P, S, dh) query planes; k/v: (P, S, dh) (GQA planes pre-expanded).
+
+    S must be a multiple of ``window`` (callers pad).  chunk = window.
+    """
+    P, S, dh = q.shape
+    c = window
+    assert S % c == 0, "pad sequence to a multiple of the window"
+    nq = S // c
+
+    kernel = functools.partial(_swa_kernel, window=window, chunk=c, seq=S)
+    grid = (P, nq, 2)
+
+    def q_map(p, i, j):
+        return (p, i, 0)
+
+    def kv_map(p, i, j):
+        return (p, jnp.maximum(i - 1 + j, 0), 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, dh), q_map),
+            pl.BlockSpec((1, c, dh), kv_map),
+            pl.BlockSpec((1, c, dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, c, dh), q_map),
+        out_shape=jax.ShapeDtypeStruct((P, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((c, 1), jnp.float32),
+            pltpu.VMEM((c, 1), jnp.float32),
+            pltpu.VMEM((c, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

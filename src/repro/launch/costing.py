@@ -1,0 +1,151 @@
+"""Cost extraction from compiled artifacts, with while-trip-count correction.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE (verified
+empirically).  The step programs contain two nesting levels of statically
+known trip counts: layer-group scans (reps) and inner chunk/time scans
+(attention q-chunks, mLSTM chunks, sLSTM time steps).  Correction:
+
+    total = main − Σ_g body_scan_g + Σ_g reps_g · body_exact_g
+
+where ``body_scan_g`` is the group body compiled standalone in run mode
+(what main counted once) and ``body_exact_g`` is the body compiled in cost
+mode (inner loops unrolled → exact).  Groups whose cost is linear in S but
+whose unroll would be enormous (sLSTM: S time steps) are compiled at two
+reduced sequence lengths and extrapolated linearly (exact for linear costs).
+
+Collective bytes are parsed from the optimized (post-SPMD) HLO text: the
+summed operand bytes of all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute instructions, with the same correction.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches e.g. f32[8,128,4096]{2,1,0} or bf16[] — dtype + dims
+_SHAPE_RE = re.compile(r"\b(pred|[sub]\d+|bf16|f16|f32|f64)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Collective traffic from post-SPMD HLO (per device).
+
+    For each instruction, the *result* shape is parsed (operands are not
+    type-annotated in optimized HLO text) and converted to (a) operand bytes
+    per the assignment's definition and (b) ring-model link bytes:
+        all-reduce       op=R         link=2·R·(G-1)/G
+        all-gather       op=R/G       link=R·(G-1)/G
+        reduce-scatter   op=R·G       link=R·(G-1)
+        all-to-all       op=R         link=R·(G-1)/G
+        collective-permute op=R       link=R
+    """
+    out: Dict[str, float] = {}
+    for k in _COLLECTIVES:
+        out[k] = 0.0
+        out[k + "_link"] = 0.0
+        out[k + "_count"] = 0.0
+    op_re = re.compile(r"=\s*(.*?)\s*(all-reduce|all-gather|reduce-scatter|"
+                       r"all-to-all|collective-permute)(-start)?\(")
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = op_re.search(stripped)
+        if m is None or "-done(" in stripped:
+            continue
+        kind = m.group(2)
+        shapes = _SHAPE_RE.findall(m.group(1))   # result type(s), left of op
+        R = float(sum(_shape_bytes(d, s) for d, s in shapes))
+        G = _group_size(stripped)
+        if kind == "all-reduce":
+            op, link = R, 2.0 * R * (G - 1) / max(G, 1)
+        elif kind == "all-gather":
+            op, link = R / G, R * (G - 1) / max(G, 1)
+        elif kind == "reduce-scatter":
+            op, link = R * G, R * (G - 1)
+        elif kind == "all-to-all":
+            op, link = R, R * (G - 1) / max(G, 1)
+        else:  # collective-permute
+            op, link = R, R
+        out[kind] += op
+        out[kind + "_link"] += link
+        out[kind + "_count"] += 1
+    out["total"] = float(sum(out[k] for k in _COLLECTIVES))
+    out["total_link"] = float(sum(out[k + "_link"] for k in _COLLECTIVES))
+    return out
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+
+    def __add__(self, o: "Cost") -> "Cost":
+        keys = set(self.coll) | set(o.coll)
+        return Cost(self.flops + o.flops,
+                    self.bytes_accessed + o.bytes_accessed,
+                    {k: self.coll.get(k, 0.0) + o.coll.get(k, 0.0)
+                     for k in keys})
+
+    def scale(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes_accessed * f,
+                    {k: v * f for k, v in self.coll.items()})
+
+
+def cost_of_compiled(compiled) -> Cost:
+    ca = compiled.cost_analysis() or {}
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    return Cost(float(ca.get("flops", 0.0)),
+                float(ca.get("bytes accessed", 0.0)),
+                collective_bytes(text))
+
+
+def memory_of_compiled(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        out[k] = float(getattr(ma, k, 0.0))
+    out["total_hbm_bytes"] = (out["argument_size_in_bytes"] +
+                              out["output_size_in_bytes"] +
+                              out["temp_size_in_bytes"] -
+                              out.get("alias_size_in_bytes", 0.0))
+    return out

@@ -1,0 +1,23 @@
+"""Production mesh definition.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16×16 = 256 chips (data × model).
+Multi-pod: 2×16×16 = 512 chips with a leading "pod" axis — the pod axis is
+pure data parallelism whose gradient all-reduce crosses the (slow) inter-pod
+links; the dry-run proves it shards.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for CPU smoke tests."""
+    return jax.make_mesh((1, 1), ("data", "model"))

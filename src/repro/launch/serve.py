@@ -1,0 +1,84 @@
+"""Serving launcher: a uBFT-replicated token server (deliverable b's
+end-to-end driver — the paper's kind is SMR/serving).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \\
+      --requests 20 --batch 4
+
+Three replicas hold the same model; client requests are ordered through
+uBFT consensus; the client accepts f+1 matching token streams, so a
+Byzantine replica cannot forge a generation.  Prints per-request latency:
+replication overhead is microseconds on top of model time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.models.common import init_params
+from repro.models.transformer import decode_step, prefill
+from repro.runtime.server import ReplicatedServer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=4, help="client sessions")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    max_seq = args.prompt_len + args.gen * args.requests + 8
+
+    pf = jax.jit(lambda p, i: prefill(cfg, p, i, max_seq=max_seq))
+    ds = jax.jit(lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+
+    def decode_fn(session: str, hist, n: int):
+        """Deterministic greedy decode of n tokens after `hist`."""
+        toks = jnp.asarray([hist], jnp.int32)
+        logits, caches = pf(params, toks)
+        out = []
+        pos = len(hist)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for i in range(n):
+            out.append(int(tok[0]))
+            logits, caches = ds(params, caches, tok, jnp.int32(pos + i))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return out
+
+    server = ReplicatedServer.build(decode_fn)
+    clients = [server.cluster.new_client() for _ in range(args.batch)]
+    rng = np.random.default_rng(0)
+    lats = []
+    t0 = time.time()
+    for r in range(args.requests):
+        cl = clients[r % len(clients)]
+        prompt = rng.integers(0, cfg.vocab, size=args.prompt_len).tolist() \
+            if r % len(clients) == r // len(clients) == 0 or True else []
+        toks, lat = server.generate(cl, f"s{r % len(clients)}",
+                                    prompt if r < len(clients) else [],
+                                    args.gen)
+        lats.append(lat)
+        print(f"[req {r}] session=s{r % len(clients)} tokens={toks} "
+              f"smr_latency={lat:.1f}us")
+    lats = sorted(lats)
+    print(f"\n{args.requests} requests, {args.batch} sessions | "
+          f"SMR-ordering latency p50={lats[len(lats)//2]:.1f}us "
+          f"p90={lats[int(len(lats)*0.9)]:.1f}us | wall={time.time()-t0:.1f}s")
+    # all replicas hold identical session state (BFT guarantee)
+    snaps = [r.app.snapshot() for r in server.cluster.replicas]
+    assert snaps[0] == snaps[1] == snaps[2]
+    print("replica state identical across 2f+1 replicas: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Assigned input shapes and ShapeDtypeStruct factories (no allocation).
+
+Four shapes per LM architecture (40 cells total):
+    train_4k     seq 4096,   global batch 256   → train_step
+    prefill_32k  seq 32768,  global batch 32    → prefill
+    decode_32k   KV 32768,   global batch 128   → serve_step
+    long_500k    KV 524288,  global batch 1     → serve_step (sub-quadratic
+                 archs only; pure full-attention archs are skipped per the
+                 assignment — see DESIGN.md §6)
+
+``input_specs`` returns weak-type-correct, shardable ShapeDtypeStructs for
+every model input; modality frontends ([audio]/[vlm]) get precomputed
+frame/patch embeddings instead of token ids.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import LONG_CONTEXT_OK
+from repro.models.common import ModelConfig
+from repro.models.transformer import init_caches
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_runnable(arch: str, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return False, "pure full-attention arch: long_500k skipped (DESIGN §6)"
+    return True, ""
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the step function's *data* arguments."""
+    B, S = shape.batch, shape.seq
+    if shape.kind == "train":
+        if cfg.frontend:
+            inputs = sds((B, S, cfg.d_model), cfg.dtype)
+        else:
+            inputs = sds((B, S), jnp.int32)
+        return {"inputs": inputs, "targets": sds((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.frontend:
+            return {"inputs": sds((B, S, cfg.d_model), cfg.dtype)}
+        return {"inputs": sds((B, S), jnp.int32)}
+    if shape.kind == "decode":
+        caches = jax.eval_shape(lambda: init_caches(cfg, B, S))
+        return {
+            "caches": caches,
+            "tokens": sds((B,), jnp.int32),
+            "position": sds((), jnp.int32),
+        }
+    raise ValueError(shape.kind)
+
+
+def params_spec(cfg: ModelConfig) -> Any:
+    """ShapeDtypeStructs for the parameter tree (no allocation)."""
+    from repro.models.common import init_params
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def opt_spec(cfg: ModelConfig, params_shapes: Any) -> Any:
+    from repro.optim.adamw import AdamWConfig, adamw_init
+    return jax.eval_shape(lambda p: adamw_init(p, AdamWConfig()), params_shapes)

@@ -1,0 +1,55 @@
+"""Scan utilities + cost-mode switch.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, regardless of
+trip count (verified empirically — see EXPERIMENTS.md §Dry-run methodology).
+The dry-run therefore compiles every cell twice:
+
+* **run mode** (default): inner loops are ``lax.scan`` — small HLO, fast
+  512-device compiles, faithful ``memory_analysis()``;
+* **cost mode** (``cost_mode()`` context): inner loops unroll via Python so
+  a *standalone one-layer body* compile yields exact per-layer FLOPs/bytes/
+  collective counts, which the costing driver multiplies by the statically
+  known trip counts (layer-group repeats, chunk counts, time steps).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_COST_MODE = contextvars.ContextVar("repro_cost_mode", default=False)
+
+
+@contextlib.contextmanager
+def cost_mode():
+    tok = _COST_MODE.set(True)
+    try:
+        yield
+    finally:
+        _COST_MODE.reset(tok)
+
+
+def in_cost_mode() -> bool:
+    return _COST_MODE.get()
+
+
+def maybe_scan(body: Callable, init: Any, xs: Any, length: Optional[int] = None):
+    """lax.scan in run mode; exact Python unroll in cost mode."""
+    if not in_cost_mode():
+        return jax.lax.scan(body, init, xs, length=length)
+    n = length if length is not None else jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs) if xs is not None else None
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys

@@ -1,0 +1,44 @@
+"""State attestation: device-side fingerprints of parameter/gradient trees.
+
+This is the TPU adaptation of the paper's checksum machinery (§6.1): instead
+of RDMA-register checksums, each training replica computes a cheap
+order-independent hash of its gradients/parameters *on device* every step;
+the uBFT control plane (repro.core) orders and compares these fingerprints
+through CTBcast, detecting silent data corruption or a Byzantine/diverged
+replica (the paper's §1 failure taxonomy) before a checkpoint embeds the
+damage.
+
+A Pallas kernel (repro.kernels.fingerprint) implements the same reduction
+as the TPU-target hot path; this module is the jnp reference used in the
+compiled step.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+_MIX = jnp.uint32(0x9E3779B9)   # golden-ratio Weyl constant
+
+
+def fingerprint_array(x: jax.Array) -> jax.Array:
+    """Order-independent uint32 digest of one array (sum-mix over words)."""
+    if x.dtype == jnp.bfloat16 or x.dtype == jnp.float16:
+        w = jax.lax.bitcast_convert_type(x, jnp.uint16).astype(jnp.uint32)
+    elif x.dtype in (jnp.float32, jnp.int32, jnp.uint32):
+        w = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    else:
+        w = x.astype(jnp.uint32)
+    w = w * _MIX ^ (w >> 16)
+    return jnp.sum(w, dtype=jnp.uint32)
+
+
+def fingerprint_tree(tree: Any) -> jax.Array:
+    """uint32 digest of a pytree (leaf digests mixed positionally)."""
+    acc = jnp.uint32(0)
+    for i, leaf in enumerate(jax.tree.leaves(tree)):
+        h = fingerprint_array(leaf)
+        acc = acc * jnp.uint32(31) + h + jnp.uint32(i)
+    return acc

@@ -1,0 +1,68 @@
+"""uBFT-replicated inference serving (the Memcached/Redis analog: a token
+server whose request order is agreed through consensus).
+
+Every replica holds the same model + decoding state; client generation
+requests are totally ordered by uBFT, so all replicas produce identical
+tokens and the client accepts f+1 matching responses — a Byzantine replica
+cannot forge a generation.  This is exactly the paper's SMR deployment with
+the application = an autoregressive decoder.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.consensus import App, ConsensusConfig
+from repro.core.smr import Cluster, build_cluster
+
+
+class TokenServerApp(App):
+    """Replicated state machine wrapping a deterministic decode function.
+
+    ``decode_fn(session, prompt_tokens, n_tokens) -> tokens`` must be
+    deterministic (greedy argmax) so replicas stay identical.
+    """
+
+    def __init__(self, decode_fn: Callable[[str, List[int], int], List[int]]):
+        self.decode_fn = decode_fn
+        self.sessions: Dict[str, List[int]] = {}
+
+    def apply(self, req: bytes) -> bytes:
+        msg = json.loads(req.decode())
+        sid = msg["session"]
+        hist = self.sessions.setdefault(sid, [])
+        prompt = msg.get("prompt", [])
+        hist.extend(int(t) for t in prompt)
+        toks = self.decode_fn(sid, list(hist), int(msg.get("n", 1)))
+        hist.extend(int(t) for t in toks)
+        return json.dumps({"tokens": [int(t) for t in toks]}).encode()
+
+    def snapshot(self):
+        return tuple(sorted((k, tuple(v)) for k, v in self.sessions.items()))
+
+    def adopt(self, snap) -> None:
+        self.sessions = {k: list(v) for k, v in snap}
+
+
+@dataclass
+class ReplicatedServer:
+    cluster: Cluster
+
+    @classmethod
+    def build(cls, decode_fn, f: int = 1,
+              cfg: Optional[ConsensusConfig] = None) -> "ReplicatedServer":
+        cfg = cfg or ConsensusConfig(max_request_bytes=4096)
+        cluster = build_cluster(lambda: TokenServerApp(decode_fn), f=f,
+                                cfg=cfg)
+        return cls(cluster=cluster)
+
+    def generate(self, client, session: str, prompt: List[int], n: int,
+                 timeout: float = 60_000_000.0) -> Tuple[List[int], float]:
+        payload = json.dumps({"session": session, "prompt": prompt,
+                              "n": n}).encode()
+        raw, lat = self.cluster.run_request(client, payload, timeout=timeout)
+        return json.loads(raw.decode())["tokens"], lat

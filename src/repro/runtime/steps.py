@@ -1,0 +1,54 @@
+"""Step builders: the functions the launcher jits/lowers.
+
+  make_train_step(cfg, ctx)  — fwd + bwd + AdamW + attestation fingerprints
+  make_prefill(cfg, ctx)     — prompt ingestion, returns last logits + caches
+  make_serve_step(cfg, ctx)  — one decode token against caches/state
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.transformer import (ShardCtx, decode_step, lm_loss,
+                                      prefill)
+from repro.optim.adamw import AdamWConfig, adamw_update
+from repro.runtime.attest import fingerprint_tree
+
+
+def make_train_step(cfg: ModelConfig, ctx: Optional[ShardCtx] = None,
+                    opt_cfg: Optional[AdamWConfig] = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, batch["inputs"], batch["targets"], ctx)
+        )(params)
+        new_params, new_opt = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss}
+        if cfg.attest:
+            # uBFT attestation: replicas CTBcast these (see repro.runtime.trainer)
+            metrics["grad_fp"] = fingerprint_tree(grads)
+            metrics["param_fp"] = fingerprint_tree(new_params)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill(cfg: ModelConfig, ctx: Optional[ShardCtx] = None,
+                 max_seq: Optional[int] = None):
+    def prefill_step(params, inputs):
+        return prefill(cfg, params, inputs, ctx, max_seq=max_seq)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, ctx: Optional[ShardCtx] = None):
+    def serve_step(params, caches, tokens, position):
+        return decode_step(cfg, params, caches, tokens, position, ctx)
+
+    return serve_step

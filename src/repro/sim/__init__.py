@@ -1,0 +1,14 @@
+"""Discrete-event runtime for the uBFT protocol layer.
+
+The protocol code in ``repro.core`` is written against the abstract
+``Process`` / ``Network`` interfaces defined here.  The simulator provides a
+microsecond-resolution virtual clock, busy-server process semantics (a process
+handles one event at a time; handler cost delays subsequent events), a
+calibrated network-latency model, and hooks for failure injection and
+Byzantine adversaries.
+"""
+
+from repro.sim.events import Event, Process, Simulator
+from repro.sim.net import NetworkModel, NetParams
+
+__all__ = ["Event", "Process", "Simulator", "NetworkModel", "NetParams"]

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests and benches see ONE device; only the dry-run forces 512 (and sets its
+# own XLA_FLAGS before any jax import — see repro/launch/dryrun.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,136 @@
+"""uBFT consensus (Algorithms 2-5): fast/slow decisions, checkpoints,
+view changes, Byzantine leader containment."""
+
+import pytest
+
+from repro.apps.flip import FlipApp
+from repro.apps.kvstore import KVStoreApp, get_req, set_req
+from repro.core import crypto
+from repro.core.consensus import ConsensusConfig
+from repro.core.smr import build_cluster
+
+
+def test_fast_path_microsecond_latency():
+    c = build_cluster(FlipApp)
+    cl = c.new_client()
+    r, lat = c.run_request(cl, b"abcdef")
+    assert r == b"fedcba"
+    assert lat < 15.0, f"fast path should be ~10 µs, got {lat}"
+
+
+def test_slow_path_decides_without_fast_path():
+    cfg = ConsensusConfig(slow_mode="always", fast_enabled=False,
+                          ctb_fast_enabled=False)
+    c = build_cluster(KVStoreApp, cfg=cfg)
+    cl = c.new_client()
+    r, lat = c.run_request(cl, set_req(b"k", b"v"))
+    assert r == b"OK"
+    assert 50.0 < lat < 2000.0
+    r, _ = c.run_request(cl, get_req(b"k"))
+    assert r == b"v"
+
+
+def test_replicas_converge_and_apply_same_order():
+    c = build_cluster(KVStoreApp)
+    cl = c.new_client()
+    for i in range(30):
+        c.run_request(cl, set_req(b"k%d" % (i % 3), b"v%d" % i))
+    c.sim.run(until=c.sim.now + 5000)
+    stores = [r.app.store for r in c.replicas]
+    assert stores[0] == stores[1] == stores[2]
+    assert len({r.exec_upto for r in c.replicas}) == 1
+
+
+def test_checkpoint_advances_and_bounds_memory():
+    cfg = ConsensusConfig(window=16, t=8)
+    c = build_cluster(KVStoreApp, cfg=cfg)
+    cl = c.new_client()
+    for i in range(40):
+        c.run_request(cl, set_req(b"k", b"v%d" % i))
+    c.sim.run(until=c.sim.now + 50000)
+    for r in c.replicas:
+        assert r.checkpoint.start >= 32
+        # bounded state: everything below the window is forgotten
+        assert all(s >= r.checkpoint.start for s in r.my_prepared)
+        assert all(s >= r.checkpoint.start for s in r.decided)
+        assert len(r.state["r0"].prepares) <= cfg.window
+
+
+def test_follower_crash_fast_path_falls_back_to_slow():
+    c = build_cluster(KVStoreApp)
+    cl = c.new_client()
+    c.run_request(cl, set_req(b"a", b"1"))
+    c.replicas[2].crash()   # follower crash: fast path loses unanimity
+    r, lat = c.run_request(cl, set_req(b"b", b"2"), timeout=5_000_000)
+    assert r == b"OK"
+    assert lat > 100.0      # decided via the slow path
+
+
+def test_leader_crash_view_change_preserves_state():
+    cfg = ConsensusConfig(view_timeout_us=2000.0)
+    c = build_cluster(KVStoreApp, cfg=cfg)
+    cl = c.new_client()
+    r, _ = c.run_request(cl, set_req(b"a", b"1"))
+    assert r == b"OK"
+    c.replicas[0].crash()
+    r, _ = c.run_request(cl, set_req(b"b", b"2"), timeout=60_000_000)
+    assert r == b"OK"
+    assert max(x.view for x in c.replicas[1:]) >= 1
+    # previously applied request survives the view change (Lemma B.5)
+    r, _ = c.run_request(cl, get_req(b"a"), timeout=60_000_000)
+    assert r == b"1"
+    r, _ = c.run_request(cl, get_req(b"b"), timeout=60_000_000)
+    assert r == b"2"
+
+
+def test_equivocating_leader_cannot_diverge_replicas():
+    """A Byzantine leader PREPAREs different requests to different followers
+    for the same slot by equivocating at the TBcast layer underneath its
+    CTBcast; followers must not decide differently."""
+    c = build_cluster(KVStoreApp,
+                      cfg=ConsensusConfig(view_timeout_us=3000.0))
+    leader = c.replicas[0]
+    r1, r2 = c.replicas[1], c.replicas[2]
+    cl = c.new_client()
+
+    reqA = (("evil", 0), cl.pid, set_req(b"k", b"A"))
+    reqB = (("evil", 0), cl.pid, set_req(b"k", b"B"))
+    # byzantine equivocation below CTBcast: different LOCKs per receiver
+    stream = leader.my_ctb._s_lock
+    leader.tb.broadcast(stream, 0, ("PREPARE", 0, 0, reqA), ["r1"])
+    leader.tb.broadcast(stream, 0, ("PREPARE", 0, 0, reqB), ["r2"])
+    leader.tb.broadcast(stream, 0, ("PREPARE", 0, 0, reqA), ["r0"])
+    c.sim.run(until=c.sim.now + 100000)
+    vals = set()
+    for rep in (r1, r2):
+        if 0 in rep.decided:
+            vals.add(crypto.encode(rep.decided[0]))
+    assert len(vals) <= 1, "replicas decided different values for slot 0"
+
+
+def test_byzantine_peer_blocked_on_invalid_message():
+    c = build_cluster(KVStoreApp)
+    byz = c.replicas[2]
+    # broadcast a PREPARE though not the leader — Alg. 5 check must block it
+    byz._ctb_broadcast(("PREPARE", 0, 0, (("x", 0), "c0", b"G")))
+    c.sim.run(until=c.sim.now + 50000)
+    assert c.replicas[0].state["r2"].blocked
+    assert c.replicas[1].state["r2"].blocked
+    # and the cluster still works (2f+1 with f=1 Byzantine)
+    cl = c.new_client()
+    r, _ = c.run_request(cl, set_req(b"a", b"1"), timeout=60_000_000)
+    assert r == b"OK"
+
+
+def test_memory_accounting_reports_bounded_buffers():
+    cfg = ConsensusConfig(window=16, t=8, max_request_bytes=64)
+    c = build_cluster(KVStoreApp, cfg=cfg)
+    cl = c.new_client()
+    for i in range(50):
+        c.run_request(cl, set_req(b"k", b"v%d" % i))
+    m1 = c.replicas[0].memory_bytes()
+    for i in range(50):
+        c.run_request(cl, set_req(b"k", b"w%d" % i))
+    m2 = c.replicas[0].memory_bytes()
+    # steady state: memory does not grow with request count
+    assert m2["total"] <= m1["total"] * 1.5

@@ -1,0 +1,133 @@
+"""Consistent Tail Broadcast (Algorithm 1): the four properties, fast and
+slow paths, and equivocation attacks by a Byzantine broadcaster."""
+
+import pytest
+
+from repro.baselines.sgx_counter import build_ctbcast
+from repro.core import crypto
+
+
+def run_broadcasts(sim, nodes, deliveries, ks, payload=b"m", timeout=1e6):
+    bc = nodes[0]
+    for k in ks:
+        bc.ctb.broadcast(k, payload + str(k).encode())
+    sim.run(until=sim.now + timeout)
+    return deliveries
+
+
+def test_fast_path_delivers_to_all():
+    sim, nodes, deliv = build_ctbcast(fast=True)
+    nodes[0].ctb.broadcast(0, b"hello")
+    assert sim.run_until(lambda: len(deliv.get(0, {})) == 3, timeout=100000)
+
+
+def test_slow_path_delivers_to_all():
+    sim, nodes, deliv = build_ctbcast(fast=False)
+    nodes[0].ctb.broadcast(0, b"hello")
+    assert sim.run_until(lambda: len(deliv.get(0, {})) == 3, timeout=1000000)
+
+
+def test_no_duplication():
+    sim, nodes, deliv = build_ctbcast(fast=True)
+    counts = {}
+    orig_cb = nodes[1].ctb.deliver_cb
+
+    def counting(k, m):
+        counts[k] = counts.get(k, 0) + 1
+        orig_cb(k, m)
+
+    nodes[1].ctb.deliver_cb = counting
+    for k in range(10):
+        nodes[0].ctb.broadcast(k, f"m{k}".encode())
+    sim.run(until=sim.now + 200000)
+    assert all(v == 1 for v in counts.values())
+
+
+def test_tail_validity_recent_messages_delivered():
+    """All of the last t messages of a correct broadcaster are delivered."""
+    t = 16
+    sim, nodes, deliv = build_ctbcast(t=t, fast=True)
+    for k in range(40):
+        nodes[0].ctb.broadcast(k, f"m{k}".encode())
+    sim.run(until=sim.now + 500000)
+    for k in range(40 - t, 40):
+        assert len(deliv.get(k, {})) == 3, f"tail message {k} not delivered"
+
+
+def test_agreement_under_equivocation_fast():
+    """Byzantine broadcaster LOCKs different messages to different receivers:
+    no two correct receivers may deliver different messages for the same k."""
+    sim, nodes, deliv = build_ctbcast(fast=True)
+    byz = nodes[0]
+    delivered_values = {}
+    for q in nodes:
+        orig = q.ctb.deliver_cb
+
+        def rec(k, m, pid=q.pid, orig=orig):
+            delivered_values.setdefault(k, {})[pid] = m
+            orig(k, m)
+
+        q.ctb.deliver_cb = rec
+    # equivocate at the TBcast level: send different LOCK payloads per peer
+    stream = byz.ctb._s_lock
+    byz.tb.broadcast(stream, 0, b"to-q1", ["p1"])
+    byz.tb.broadcast(stream, 0, b"to-q2", ["p2"])
+    byz.tb.broadcast(stream, 0, b"to-self", ["p0"])
+    sim.run(until=sim.now + 300000)
+    vals = {crypto.encode(m) for pid_m in delivered_values.values()
+            for m in pid_m.values()}
+    # agreement: at most one distinct value delivered for k=0
+    assert len(vals) <= 1
+
+
+def test_agreement_under_equivocation_slow():
+    """Byzantine broadcaster sends different SIGNED messages to different
+    receivers: registers force agreement (or abort)."""
+    sim, nodes, deliv = build_ctbcast(fast=False)
+    byz = nodes[0]
+    fp1 = crypto.fingerprint(crypto.encode(b"vA"))
+    fp2 = crypto.fingerprint(crypto.encode(b"vB"))
+    sig1 = byz.signer.sign(("ctb", "p0", 0, fp1))
+    sig2 = byz.signer.sign(("ctb", "p0", 0, fp2))
+    byz.tb.broadcast(byz.ctb._s_signed, 0, (b"vA", sig1), ["p1"])
+    byz.tb.broadcast(byz.ctb._s_signed, 0, (b"vB", sig2), ["p2"])
+    values = {}
+    for q in nodes[1:]:
+        orig = q.ctb.deliver_cb
+
+        def rec(k, m, pid=q.pid, orig=orig):
+            values.setdefault(k, {})[pid] = m
+
+        q.ctb.deliver_cb = rec
+    sim.run(until=sim.now + 500000)
+    got = values.get(0, {})
+    assert len({crypto.encode(m) for m in got.values()}) <= 1
+
+
+def test_integrity_unsigned_injection_rejected():
+    """A forged SIGNED message (bad signature) is never delivered."""
+    sim, nodes, deliv = build_ctbcast(fast=False)
+    attacker = nodes[1]   # p1 pretends to relay p0's broadcast
+    fake_sig = attacker.signer.sign(("ctb", "p0", 0,
+                                     crypto.fingerprint(crypto.encode(b"x"))))
+    attacker.tb.broadcast(nodes[0].ctb._s_signed, 0, (b"x", fake_sig),
+                          ["p1", "p2"])
+    sim.run(until=sim.now + 200000)
+    assert len(deliv.get(0, {})) == 0
+
+
+def test_summary_blocking_bounds_outstanding():
+    """The broadcaster stalls rather than outrun its summaries (double
+    buffering, footnote 3)."""
+    t = 8
+    sim, nodes, deliv = build_ctbcast(t=t, fast=True)
+    bc = nodes[0]
+    # suppress summary certification to force a stall
+    bc.ctb.on_summary_needed = lambda seg: None
+    for k in range(t * 3):
+        bc.ctb.broadcast(k, b"x")
+    sim.run(until=sim.now + 100000)
+    assert bc.ctb.stall_count >= 1
+    assert bc.ctb.blocked_queue   # still blocked — never outran summaries
+    max_bcast = max(bc.ctb.buf)
+    assert max_bcast < 2 * t      # at most two segments in flight

@@ -1,0 +1,114 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the ref.py oracles
+(interpret mode — the kernel bodies execute on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,KV,dh,w", [
+    (1, 32, 2, 2, 8, 8),
+    (2, 64, 4, 2, 16, 16),
+    (1, 96, 4, 1, 32, 32),    # S not a multiple of 2w — exercises padding
+    (2, 128, 8, 4, 16, 32),
+])
+def test_swa_vs_oracle(B, S, H, KV, dh, w, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, dh), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, dh), jnp.float32).astype(dtype)
+    out = ops.sliding_window_attention(q, k, v, window=w)
+    G = H // KV
+    qp = q.reshape(B, S, KV, G, dh).transpose(0, 2, 3, 1, 4).reshape(
+        B * KV * G, S, dh)
+    kp = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * KV * G, S, dh)
+    vp = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * KV * G, S, dh)
+    want = ref.swa_ref(qp.astype(jnp.float32), kp.astype(jnp.float32),
+                       vp.astype(jnp.float32), window=w)
+    want = want.reshape(B, KV, G, S, dh).transpose(0, 3, 1, 2, 4).reshape(
+        B, S, H, dh)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,dh,chunk", [
+    (1, 32, 2, 8, 8),
+    (2, 64, 2, 16, 16),
+    (1, 64, 4, 32, 32),
+    (1, 48, 2, 16, 16),       # padded tail chunk
+])
+def test_mlstm_vs_sequential_oracle(B, S, H, dh, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    q = (jax.random.normal(ks[0], (B, S, H, dh)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, S, H, dh)) * 0.5).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, H, dh)).astype(dtype)
+    it = jax.random.normal(ks[3], (B, S, H))
+    ft = jax.random.normal(ks[4], (B, S, H)) + 2.0
+    out = ops.mlstm_chunkwise(q, k, v, it, ft, chunk=chunk)
+
+    def plane(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, -1)
+
+    want = ref.mlstm_ref(plane(q.astype(jnp.float32)),
+                         plane(k.astype(jnp.float32)),
+                         plane(v.astype(jnp.float32)),
+                         plane(it[..., None]), plane(ft[..., None]))
+    want = want.reshape(B, H, S, dh).transpose(0, 2, 1, 3)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+@pytest.mark.parametrize("B,S,W,tb", [
+    (1, 32, 16, 8),
+    (2, 128, 64, 32),
+    (1, 100, 32, 25),
+    (3, 64, 8, 64),
+])
+def test_rglru_vs_associative_scan(B, S, W, tb):
+    ks = jax.random.split(KEY, 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, W)))
+    x = jax.random.normal(ks[1], (B, S, W))
+    out = ops.rglru_scan(a, x, t_blk=tb)
+    want = ref.rglru_ref(a, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,dtype", [
+    (100, jnp.float32), (4096, jnp.float32), (5000, jnp.bfloat16),
+    (12345, jnp.int32),
+])
+def test_fingerprint_matches_ref_and_attest(n, dtype):
+    x = (jax.random.normal(KEY, (n,)) * 100).astype(dtype)
+    got = ops.fingerprint(x)
+    if dtype == jnp.bfloat16:
+        w = jax.lax.bitcast_convert_type(x, jnp.uint16).astype(jnp.uint32)
+    elif dtype == jnp.int32:
+        w = x.astype(jnp.uint32)
+    else:
+        w = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    want = ref.fingerprint_ref(w)
+    assert int(got[0]) == int(want[0])
+    # sensitivity: flipping one element changes the digest
+    x2 = x.at[n // 2].set(x[n // 2] + 1)
+    assert int(ops.fingerprint(x2)[0]) != int(got[0])
+
+
+def test_fingerprint_consistent_with_runtime_attest():
+    from repro.runtime.attest import fingerprint_array
+    x = jax.random.normal(KEY, (777,), jnp.float32)
+    assert int(ops.fingerprint(x)[0]) == int(fingerprint_array(x))

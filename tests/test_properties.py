@@ -1,0 +1,129 @@
+"""Hypothesis property tests over the system's invariants.
+
+Strategy space: random request workloads, network jitter seeds, crash/
+partition schedules, CTBcast tails — asserting the protocol's safety
+invariants (agreement, integrity, bounded memory) always hold.
+"""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import HealthCheck, given, settings
+
+from repro.apps.kvstore import KVStoreApp, set_req
+from repro.core import crypto
+from repro.core.consensus import ConsensusConfig
+from repro.core.smr import build_cluster
+from repro.sim.net import NetParams
+
+COMMON = dict(deadline=None, max_examples=12,
+              suppress_health_check=[HealthCheck.too_slow])
+
+
+@settings(**COMMON)
+@given(seed=st.integers(0, 10_000), n_reqs=st.integers(1, 12),
+       t=st.sampled_from([8, 16, 64]))
+def test_agreement_and_order_random_workloads(seed, n_reqs, t):
+    cfg = ConsensusConfig(t=t, window=max(16, t))
+    c = build_cluster(KVStoreApp, cfg=cfg, seed=seed)
+    cl = c.new_client()
+    for i in range(n_reqs):
+        r, _ = c.run_request(cl, set_req(b"k%d" % (i % 4), b"v%d" % i))
+        assert r == b"OK"
+    c.sim.run(until=c.sim.now + 20000)
+    # all replicas executed the same prefix with identical state
+    stores = [rep.app.store for rep in c.replicas]
+    assert stores[0] == stores[1] == stores[2]
+    decided = [dict(rep.decided) for rep in c.replicas]
+    for s in set(decided[0]) & set(decided[1]):
+        assert crypto.encode(decided[0][s]) == crypto.encode(decided[1][s])
+
+
+@settings(**COMMON)
+@given(seed=st.integers(0, 10_000),
+       crash_idx=st.sampled_from([1, 2]),
+       n_reqs=st.integers(2, 8))
+def test_safety_under_follower_crash(seed, crash_idx, n_reqs):
+    c = build_cluster(KVStoreApp, seed=seed)
+    cl = c.new_client()
+    for i in range(n_reqs):
+        if i == n_reqs // 2:
+            c.replicas[crash_idx].crash()
+        r, _ = c.run_request(cl, set_req(b"k", b"v%d" % i),
+                             timeout=30_000_000)
+        assert r == b"OK"
+    alive = [rep for rep in c.replicas if not rep.crashed]
+    c.sim.run(until=c.sim.now + 50000)
+    assert alive[0].app.store == alive[1].app.store
+
+
+@settings(**COMMON)
+@given(seed=st.integers(0, 10_000), jitter=st.floats(0.0, 0.5))
+def test_fast_path_latency_distribution_bounded(seed, jitter):
+    params = NetParams(jitter_sigma=jitter)
+    c = build_cluster(KVStoreApp, params=params, seed=seed)
+    cl = c.new_client()
+    for i in range(5):
+        r, lat = c.run_request(cl, set_req(b"a", b"b"), timeout=10_000_000)
+        assert r == b"OK"
+        assert lat < 5000.0   # escalation bound: never unbounded
+
+
+@settings(**COMMON)
+@given(data=st.binary(min_size=0, max_size=512))
+def test_crypto_roundtrip_and_unforgeability(data):
+    reg = crypto.KeyRegistry()
+    s_alice = reg.keygen("alice")
+    s_bob = reg.keygen("bob")
+    sig = s_alice.sign(data)
+    assert reg.verify("alice", data, sig)
+    assert not reg.verify("bob", data, sig)
+    assert not reg.verify("alice", data + b"x", sig)
+    assert not reg.verify("alice", data, s_bob.sign(data))
+
+
+@settings(**COMMON)
+@given(obj=st.recursive(
+    st.one_of(st.none(), st.booleans(), st.integers(-2**40, 2**40),
+              st.binary(max_size=32), st.text(max_size=16)),
+    lambda children: st.tuples(children, children), max_leaves=8))
+def test_encode_decode_roundtrip(obj):
+    assert crypto.decode(crypto.encode(obj)) == obj
+
+
+@settings(**COMMON)
+@given(seed=st.integers(0, 1000), t=st.sampled_from([4, 8, 16]))
+def test_ctbcast_memory_bounded_regardless_of_load(seed, t):
+    from repro.baselines.sgx_counter import build_ctbcast
+    sim, nodes, deliv = build_ctbcast(t=t, fast=True, seed=seed)
+    for k in range(6 * t):
+        nodes[0].ctb.broadcast(k, b"x" * 32)
+        sim.run(until=sim.now + 30)
+    sim.run(until=sim.now + 50000)
+    for n in nodes:
+        assert len(n.ctb.buf) <= 2 * t
+        assert len(n.ctb.locks) == t
+        for q in n.ctb.locked.values():
+            assert len(q) == t
+
+
+@settings(deadline=None, max_examples=6,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(0, 10_000), crash_at=st.integers(1, 6))
+def test_leader_crash_at_random_point_is_safe(seed, crash_at):
+    """Crash the leader after a random number of requests; whatever was
+    applied before the crash must survive the view change (Lemma B.5)."""
+    cfg = ConsensusConfig(view_timeout_us=2000.0)
+    c = build_cluster(KVStoreApp, cfg=cfg, seed=seed)
+    cl = c.new_client()
+    applied = {}
+    for i in range(crash_at):
+        r, _ = c.run_request(cl, set_req(b"k%d" % i, b"v%d" % i),
+                             timeout=60_000_000)
+        assert r == b"OK"
+        applied[b"k%d" % i] = b"v%d" % i
+    c.replicas[0].crash()
+    r, _ = c.run_request(cl, set_req(b"post", b"crash"), timeout=120_000_000)
+    assert r == b"OK"
+    for rep in c.replicas[1:]:
+        for k, v in applied.items():
+            assert rep.app.store.get(k) == v, (seed, crash_at, k)

@@ -1,0 +1,58 @@
+"""Straggler mitigation: the protocol's own fast→slow fallback.
+
+A fail-slow replica (the paper's §1 taxonomy) breaks fast-path unanimity;
+uBFT must keep deciding through the slow path without a view change, and
+recover fast-path latency when the straggler heals.
+"""
+
+from repro.apps.kvstore import KVStoreApp, set_req
+from repro.core.consensus import ConsensusConfig
+from repro.core.smr import build_cluster
+
+
+def test_slow_follower_degrades_gracefully():
+    cfg = ConsensusConfig(view_timeout_us=50_000.0, slow_after_us=300.0)
+    c = build_cluster(KVStoreApp, cfg=cfg)
+    cl = c.new_client()
+    r, fast_lat = c.run_request(cl, set_req(b"a", b"0"))
+    assert fast_lat < 15
+
+    # make r2 fail-slow: +5 ms on every link to/from it (asynchrony window)
+    c.sim.gst = c.sim.now + 100_000.0
+    for other in ("r0", "r1", "c0"):
+        c.net.delay_link("r2", other, 5000.0)
+        c.net.delay_link(other, "r2", 5000.0)
+
+    lats = []
+    for i in range(5):
+        r, lat = c.run_request(cl, set_req(b"k%d" % i, b"v"),
+                               timeout=60_000_000)
+        assert r == b"OK"
+        lats.append(lat)
+    # decided via the slow path (no unanimity), far below the view timeout
+    assert all(200.0 < l < 50_000.0 for l in lats), lats
+    assert c.replicas[0].view == 0, "no view change needed for a straggler"
+
+    # straggler heals at GST → fast path resumes
+    c.sim.run(until=c.sim.gst + 1000.0)
+    c.net.heal()
+    lats2 = [c.run_request(cl, set_req(b"h%d" % i, b"v"),
+                           timeout=60_000_000)[1] for i in range(10)]
+    assert min(lats2) < 15.0, lats2
+
+
+def test_all_correct_after_straggler_epoch():
+    cfg = ConsensusConfig(view_timeout_us=50_000.0, slow_after_us=300.0)
+    c = build_cluster(KVStoreApp, cfg=cfg)
+    cl = c.new_client()
+    c.sim.gst = 20_000.0
+    c.net.delay_link("r1", "r0", 2000.0)
+    c.net.delay_link("r0", "r1", 2000.0)
+    for i in range(8):
+        r, _ = c.run_request(cl, set_req(b"x%d" % i, b"%d" % i),
+                             timeout=60_000_000)
+        assert r == b"OK"
+    c.net.heal()
+    c.sim.run(until=c.sim.now + 200_000)
+    stores = [rep.app.store for rep in c.replicas]
+    assert stores[0] == stores[1] == stores[2]

@@ -1,0 +1,166 @@
+"""End-to-end system behaviour: replicated training with attestation,
+Byzantine-replica detection, checkpoint/restart, replicated serving."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data import DataConfig, TokenPipeline
+from repro.models.common import init_params
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.runtime.steps import make_train_step
+from repro.runtime.trainer import CoordinatorApp, ReplicatedTrainer
+
+
+def _make_training_rig(arch="qwen3-8b", n=3, lr=1e-3):
+    cfg = get_smoke_config(arch)
+    pipe = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=24,
+                                    global_batch=4, seed=1))
+    opt_cfg = AdamWConfig(lr=lr)
+    params0 = init_params(cfg, jax.random.PRNGKey(0))
+    opt0 = adamw_init(params0, opt_cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg=opt_cfg))
+    replicas = [{"params": params0, "opt": opt0} for _ in range(n)]
+
+    def train_one(idx, step, data_epoch):
+        b = pipe.global_batch(step)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        r = replicas[idx]
+        r["params"], r["opt"], m = step_fn(r["params"], r["opt"], batch)
+        return int(m["grad_fp"]), int(m["param_fp"]), {"loss": float(m["loss"])}
+
+    return replicas, train_one
+
+
+def test_replicated_training_steps_agree():
+    replicas, train_one = _make_training_rig()
+    rt = ReplicatedTrainer.build(train_one)
+    recs = rt.run_steps(4)
+    assert [r["step"] for r in recs] == [0, 1, 2, 3]
+    for rec in recs:
+        fps = set(rec["fps"].values())
+        assert len(fps) == 1, "honest replicas must produce identical state"
+        assert rec["flagged"] == []
+
+
+def test_byzantine_training_replica_flagged():
+    replicas, train_one = _make_training_rig()
+    rt = ReplicatedTrainer.build(train_one)
+    recs = rt.run_steps(3, byzantine_replica=1)
+    assert "t1" in recs[-1]["flagged"]
+    assert "t0" not in recs[-1]["flagged"]
+
+
+def test_coordinator_survives_leader_crash():
+    from repro.core.consensus import ConsensusConfig
+    replicas, train_one = _make_training_rig()
+    rt = ReplicatedTrainer.build(
+        train_one, cfg=ConsensusConfig(view_timeout_us=2000.0))
+    rt.run_steps(2)
+    rt.cluster.replicas[0].crash()
+    recs = rt.run_steps(2)
+    assert [r["step"] for r in recs] == [2, 3]
+
+
+def test_checkpoint_roundtrip_and_corruption_detection(tmp_path):
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    cfg = get_smoke_config("gemma3-1b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params, AdamWConfig())
+    fp = save_checkpoint(str(tmp_path), 7, params, opt)
+    step, p2, o2 = load_checkpoint(str(tmp_path), expect_fp=fp)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # corrupt the file on disk — the fingerprint must catch it
+    import pickle
+    blob_path = tmp_path / "ckpt_7.pkl"
+    state = pickle.loads(blob_path.read_bytes())
+    leaves, treedef = jax.tree.flatten(state["params"])
+    arr = np.array(leaves[0], copy=True)
+    arr.flat[0] = arr.flat[0] + 1.0
+    leaves[0] = arr
+    state["params"] = jax.tree.unflatten(treedef, leaves)
+    blob_path.write_bytes(pickle.dumps(state))
+    with pytest.raises(ValueError, match="fingerprint"):
+        load_checkpoint(str(tmp_path))
+
+
+def test_data_pipeline_deterministic_and_shardable():
+    g = TokenPipeline(DataConfig(vocab=1000, seq_len=16, global_batch=8,
+                                 seed=42, n_shards=1))
+    s = TokenPipeline(DataConfig(vocab=1000, seq_len=16, global_batch=8,
+                                 seed=42, n_shards=4))
+    for step in (0, 5, 99):
+        gb = g.batch(step, 0)
+        sb = s.global_batch(step)
+        assert gb["inputs"].shape == sb["inputs"].shape
+        # replay determinism
+        again = s.global_batch(step)
+        np.testing.assert_array_equal(sb["inputs"], again["inputs"])
+
+
+def test_gradient_compression_preserves_training():
+    cfg = get_smoke_config("qwen3-8b")
+    pipe = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=24,
+                                    global_batch=4, seed=2))
+    losses = {}
+    for compress in (None, "int8"):
+        oc = AdamWConfig(lr=3e-3, compress=compress)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opt = adamw_init(params, oc)
+        step = jax.jit(make_train_step(cfg, opt_cfg=oc))
+        for i in range(10):
+            b = pipe.global_batch(i)
+            params, opt, m = step(params, opt,
+                                  {k: jnp.asarray(v) for k, v in b.items()})
+        losses[compress] = float(m["loss"])
+    # int8 all-reduce compression costs < 5% loss difference here
+    assert abs(losses["int8"] - losses[None]) < 0.05 * abs(losses[None])
+
+
+def test_replicated_server_identical_generations():
+    from repro.runtime.server import ReplicatedServer
+    cfg = get_smoke_config("gemma3-1b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    from repro.models.transformer import decode_step, prefill
+    pf = jax.jit(lambda p, i: prefill(cfg, p, i, max_seq=64))
+    ds = jax.jit(lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+
+    def decode_fn(session, hist, n):
+        toks = jnp.asarray([hist], jnp.int32)
+        logits, caches = pf(params, toks)
+        out = []
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for i in range(n):
+            out.append(int(tok[0]))
+            logits, caches = ds(params, caches, tok, jnp.int32(len(hist) + i))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return out
+
+    server = ReplicatedServer.build(decode_fn)
+    client = server.cluster.new_client()
+    toks, lat = server.generate(client, "s0", [1, 2, 3, 4], 4)
+    assert len(toks) == 4
+    snaps = [r.app.snapshot() for r in server.cluster.replicas]
+    assert snaps[0] == snaps[1] == snaps[2]
+    toks2, _ = server.generate(client, "s0", [], 2)
+    assert len(toks2) == 2
+
+
+def test_coordinator_app_is_deterministic_state_machine():
+    import json
+    a, b = CoordinatorApp(), CoordinatorApp()
+    reqs = [json.dumps({"op": "step"}).encode(),
+            json.dumps({"op": "attest", "step": 0, "who": "t0",
+                        "grad_fp": 1, "param_fp": 2}).encode(),
+            json.dumps({"op": "attest", "step": 0, "who": "t1",
+                        "grad_fp": 1, "param_fp": 2}).encode(),
+            json.dumps({"op": "checkpoint", "step": 0,
+                        "param_fp": 2}).encode()]
+    for r in reqs:
+        assert a.apply(r) == b.apply(r)
+    assert a.snapshot() == b.snapshot()
