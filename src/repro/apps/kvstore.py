@@ -3,12 +3,13 @@
 Request wire format (binary, matching the paper's 16 B keys / 32 B values):
     b"G" + key            -> GET
     b"S" + klen(1) + key + value -> SET
+    b"M" + n(1) + n × (klen(1) + key + vlen(1) + value) -> MSET (multi-put)
 Responses: value bytes (b"" on miss) or b"OK".
 """
 
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, List, Tuple
 
 from repro.core.consensus import App
 
@@ -19,6 +20,15 @@ def get_req(key: bytes) -> bytes:
 
 def set_req(key: bytes, value: bytes) -> bytes:
     return b"S" + bytes([len(key)]) + key + value
+
+
+def mset_req(pairs: List[Tuple[bytes, bytes]]) -> bytes:
+    """One request carrying several puts — application-level batching that
+    composes with the consensus layer's slot batching."""
+    out = b"M" + bytes([len(pairs)])
+    for k, v in pairs:
+        out += bytes([len(k)]) + k + bytes([len(v)]) + v
+    return out
 
 
 class KVStoreApp(App):
@@ -34,6 +44,33 @@ class KVStoreApp(App):
             key = req[2:2 + klen]
             value = req[2 + klen:]
             self.store[key] = value
+            return b"OK"
+        if op == b"M":
+            # parse the whole payload before touching the store: a
+            # malformed/truncated request is rejected atomically
+            if len(req) < 2:
+                return b"ERR"
+            n = req[1]
+            off = 2
+            pairs = []
+            for _ in range(n):
+                if off >= len(req):
+                    return b"ERR"
+                klen = req[off]
+                key = req[off + 1:off + 1 + klen]
+                off += 1 + klen
+                if len(key) != klen or off >= len(req):
+                    return b"ERR"
+                vlen = req[off]
+                value = req[off + 1:off + 1 + vlen]
+                off += 1 + vlen
+                if len(value) != vlen:
+                    return b"ERR"
+                pairs.append((key, value))
+            if off != len(req):
+                return b"ERR"
+            for key, value in pairs:
+                self.store[key] = value
             return b"OK"
         return b"ERR"
 

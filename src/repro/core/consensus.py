@@ -17,12 +17,21 @@ footnote 3), and the resulting SUMMARY lets laggards jump their FIFO pointer.
 
 Memory is practically bounded: prepares/commits/promises are dropped when the
 application checkpoint (f+1 signed) slides the consensus window forward.
+
+Hot path extensions beyond the paper's evaluation (§9 discusses throughput):
+the unit of agreement is a *batch* of client requests (``as_batch``) — the
+leader coalesces up to ``max_batch`` pending requests per CTBcast slot and
+up to ``pipeline_depth`` slots are in flight concurrently, so throughput is
+no longer bound to one request per protocol round.  Replicas execute batches
+atomically and reply per-request; all safety invariants (agreement,
+integrity, bounded memory) hold over batches.
 """
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Set, Tuple
 
 from repro.core import crypto
 from repro.core.crypto import SignedBundle
@@ -50,6 +59,21 @@ class ConsensusConfig:
     slow_mode: str = "timeout"     # "timeout" | "always" (bench the slow path)
     echo_timeout_us: float = 100.0
     max_request_bytes: int = 8192
+    # --- batching + pipelining (the consensus hot path) ---------------
+    # The unit of agreement is a *batch*: the leader coalesces up to
+    # ``max_batch`` pending requests (bounded by ``max_batch_bytes`` of
+    # payload) into one CTBcast slot; replicas execute batches atomically
+    # and reply per-request.  ``max_batch=1`` is the paper's
+    # one-request-per-slot configuration.
+    max_batch: int = 1
+    max_batch_bytes: int = 16384
+    # With queued requests and a non-full batch, wait up to this long for
+    # more to coalesce (0 = propose immediately; batches still form under
+    # backpressure from the pipeline cap).
+    batch_timeout_us: float = 0.0
+    # Max consensus slots in flight (proposed but not yet executed) —
+    # slots no longer lock-step one decided round at a time.
+    pipeline_depth: int = 64
 
 
 # --------------------------------------------------------------------------
@@ -99,6 +123,20 @@ def _noop_request(v: int, s: int) -> tuple:
     return (("noop", v, s), "", b"")
 
 
+def as_batch(reqs: Any) -> tuple:
+    """Normalize a PREPARE payload to a batch: a tuple of request triples.
+
+    The legacy wire format carried a single ``(rid, client, payload)``
+    triple per slot; batched PREPAREs carry a tuple of such triples.  The
+    unit of agreement (what gets fingerprinted, certified and decided) is
+    always the normalized batch, so both formats agree on encoding.
+    """
+    if (isinstance(reqs, tuple) and len(reqs) == 3 and
+            isinstance(reqs[1], str) and isinstance(reqs[2], bytes)):
+        return (reqs,)
+    return tuple(reqs)
+
+
 class Checkpoint:
     """An f+1-signed application checkpoint (genesis has no sigs)."""
 
@@ -142,6 +180,10 @@ class Checkpoint:
 class UbftReplica(Node):
     """A uBFT replica: consensus engine + execution + RPC endpoint."""
 
+    #: per-request framing inside a batched slot (rid + client id wire
+    #: bytes on top of crypto.REQUEST_WIRE_OVERHEAD's length header)
+    _REQ_FRAMING = crypto.REQUEST_WIRE_OVERHEAD + 64
+
     def __init__(self, sim: Simulator, net: NetworkModel,
                  registry: crypto.KeyRegistry, pid: str,
                  replicas: List[str], mem_nodes: List[str],
@@ -152,11 +194,21 @@ class UbftReplica(Node):
         self.n = len(replicas)
         self.f = self.cfg.f
         assert self.n == 2 * self.f + 1, "uBFT runs with 2f+1 replicas"
+        assert self.cfg.max_batch >= 1 and self.cfg.pipeline_depth >= 1, \
+            "max_batch and pipeline_depth must be >= 1"
         self.quorum = self.f + 1
         self.app = app
 
+        # A TBcast slot must hold the largest message: with batching that is
+        # a PREPARE carrying up to max_batch_bytes of coalesced payload plus
+        # per-request framing that scales with max_batch (Table 2 accounting
+        # prices the batched slots honestly).
+        slot_payload = max(self.cfg.max_request_bytes,
+                           self.cfg.max_batch_bytes +
+                           self.cfg.max_batch * self._REQ_FRAMING
+                           if self.cfg.max_batch > 1 else 0)
         self.tb = TBcastService(self, t=self.cfg.t,
-                                max_msg_bytes=self.cfg.max_request_bytes + 512)
+                                max_msg_bytes=slot_payload + 512)
         self.regs = RegisterClient(self, mem_nodes, self.cfg.f_m)
 
         # --- consensus state (Alg. 2 lines 1-12) ---
@@ -186,10 +238,15 @@ class UbftReplica(Node):
         # RPC / client handling
         self.pending_req: Dict[tuple, tuple] = {}   # rid -> request tuple
         self.echoes: Dict[tuple, Set[str]] = {}
-        self.propose_queue: List[tuple] = []
+        self.propose_queue: Deque[tuple] = deque()
         self.proposed_rids: Set[tuple] = set()
         self.decided_rids: Set[tuple] = set()
         self.waiting_prepare: Dict[tuple, List[Tuple[int, int]]] = {}
+        # (v, s) -> rids of the batch still awaiting the clients' direct
+        # copies; the slot is endorsed once the set drains (§5.4, batched)
+        self.prepare_missing: Dict[Tuple[int, int], Set[tuple]] = {}
+        self._batch_timer_armed = False
+        self._batch_flush_due = False
 
         # view change
         self.vc_shares: Dict[Tuple[int, str], Dict[str, Tuple[bytes, bytes]]] = {}
@@ -261,19 +318,39 @@ class UbftReplica(Node):
     # ==================================================================
     def _on_client_request(self, src: str, body: Any) -> None:
         rid, payload = body
+        if len(payload) > self.cfg.max_request_bytes:
+            # Oversized requests never enter the proposal path: an honest
+            # leader proposing one would fail Algorithm 5's size check at
+            # every follower and be blocked as Byzantine.  Reply with a
+            # deterministic error so the client completes instead of
+            # timing out (every replica sends the same reply).
+            self.send(src, "REP", (rid, b"ERR_REQUEST_TOO_LARGE"))
+            return
         req = (rid, src, payload)
         if rid in self.decided_rids:
             # retransmitted request — resend cached reply if executed
-            for s, r in self.decided.items():
-                if r[0] == rid and s <= self.exec_upto:
-                    self.send(src, "REP", (rid, self.results[s]))
+            for s, batch in self.decided.items():
+                if s > self.exec_upto:
+                    continue
+                for i, r in enumerate(batch):
+                    if r[0] == rid:
+                        self.send(src, "REP", (rid, self.results[s][i]))
+                        return
             return
         self.pending_req[rid] = req
         if len(self.pending_req) > 4 * self.cfg.window:  # Byzantine clients
             self.pending_req.pop(next(iter(self.pending_req)))
-        # release any PREPARE that waited for the direct client copy
+        # release any PREPARE that waited for the direct client copy; a
+        # batched slot is endorsed once ALL its missing rids have arrived
         for (v, s) in self.waiting_prepare.pop(rid, []):
-            self._endorse(v, s)
+            miss = self.prepare_missing.get((v, s))
+            if miss is None:
+                self._endorse(v, s)
+                continue
+            miss.discard(rid)
+            if not miss:
+                del self.prepare_missing[(v, s)]
+                self._endorse(v, s)
         if self.is_leader():
             self._note_echo(rid, self.pid)
         else:
@@ -313,21 +390,82 @@ class UbftReplica(Node):
         self._drain_proposals()
 
     # ==================================================================
-    # Propose (Alg. 2 lines 14-16)
+    # Propose (Alg. 2 lines 14-16) — batched + pipelined
     # ==================================================================
+    def _slots_in_flight(self) -> int:
+        """Slots proposed but not yet executed (the pipeline window)."""
+        return max(0, self.next_slot - self.exec_upto - 1)
+
+    def _assemble_batch(self) -> Optional[tuple]:
+        """Coalesce pending requests into one batch, bounded by
+        ``max_batch`` requests / ``max_batch_bytes`` of payload.  A single
+        request may exceed the byte bound (up to max_request_bytes)."""
+        batch: List[tuple] = []
+        rids: Set[tuple] = set()
+        size = 0
+        while self.propose_queue and len(batch) < self.cfg.max_batch:
+            req = self.propose_queue[0]
+            if req[0] in self.decided_rids or req[0] in rids:
+                # stale or duplicate enqueue (possible across view changes)
+                self.propose_queue.popleft()
+                continue
+            if batch and size + len(req[2]) > self.cfg.max_batch_bytes:
+                break
+            self.propose_queue.popleft()
+            batch.append(req)
+            rids.add(req[0])
+            size += len(req[2])
+        return tuple(batch) if batch else None
+
+    def _full_batch_queued(self) -> bool:
+        """O(max_batch) check: is a full batch's worth of requests queued?
+        Queue length may overcount by stale (already decided) rids —
+        harmless: we propose a slightly smaller batch instead of waiting."""
+        if len(self.propose_queue) >= self.cfg.max_batch:
+            return True
+        size = 0
+        for r in self.propose_queue:
+            size += len(r[2])
+            if size >= self.cfg.max_batch_bytes:
+                return True
+        return False
+
     def _drain_proposals(self) -> None:
         if not self.is_leader():
             return
         if self.view > 0 and self.view not in self.new_view_sent:
             return  # NEW_VIEW must precede proposals in this view
         while (self.propose_queue and
-               self.next_slot in self.checkpoint.open_slots):
-            req = self.propose_queue.pop(0)
-            if req[0] in self.decided_rids:
-                continue
+               self.next_slot in self.checkpoint.open_slots and
+               self._slots_in_flight() < self.cfg.pipeline_depth):
+            # drop already-decided heads (stale after view changes)
+            while (self.propose_queue and
+                   self.propose_queue[0][0] in self.decided_rids):
+                self.propose_queue.popleft()
+            if not self.propose_queue:
+                return
+            if (self.cfg.batch_timeout_us > 0 and
+                    not self._batch_flush_due and
+                    not self._full_batch_queued()):
+                # wait (bounded) for more requests to coalesce
+                if not self._batch_timer_armed:
+                    self._batch_timer_armed = True
+                    self.timer(self.cfg.batch_timeout_us, self._batch_flush)
+                return
+            batch = self._assemble_batch()
+            if batch is None:
+                return
             s = self.next_slot
             self.next_slot += 1
-            self._ctb_broadcast(("PREPARE", self.view, s, req))
+            self._ctb_broadcast(("PREPARE", self.view, s, batch))
+
+    def _batch_flush(self) -> None:
+        self._batch_timer_armed = False
+        self._batch_flush_due = True
+        try:
+            self._drain_proposals()
+        finally:
+            self._batch_flush_due = False
 
     # ==================================================================
     # CTBcast delivery → FIFO interpretation (Alg. 2 line 1)
@@ -365,6 +503,8 @@ class UbftReplica(Node):
         kind = m[0]
         if kind == "PREPARE":
             _, v, s, req = m
+            if self._valid_batch(req) is None:  # malformed / oversized batch
+                return False
             cp = st.checkpoint or self.checkpoint
             prepared_in_v = s in st.prepares and st.prepares[s][0] == v
             return (st.view == v and self.leader(v) == p and
@@ -406,11 +546,40 @@ class UbftReplica(Node):
             return len(seen) >= self.quorum
         return True
 
+    def _valid_batch(self, raw: Any) -> Optional[tuple]:
+        """Structural check on a PREPARE payload: a well-formed batch of
+        1..max_batch request triples within the byte bounds (a Byzantine
+        leader may not smuggle oversized batches past the cost model)."""
+        try:
+            batch = as_batch(raw)
+        except TypeError:
+            return None
+        if not 1 <= len(batch) <= self.cfg.max_batch:
+            return None
+        total = 0
+        rids = set()
+        for r in batch:
+            if not (isinstance(r, tuple) and len(r) == 3 and
+                    isinstance(r[1], str) and isinstance(r[2], bytes)):
+                return None
+            try:
+                rids.add(r[0])  # rids key sets/dicts everywhere downstream
+            except TypeError:
+                return None
+            if len(r[2]) > self.cfg.max_request_bytes:
+                return None
+            total += len(r[2])
+        if len(rids) != len(batch):   # duplicate rids: one reply per rid
+            return None
+        if len(batch) > 1 and total > self.cfg.max_batch_bytes:
+            return None
+        return batch
+
     def _must_propose_ok(self, slot: int, req: Any, new_view: Any) -> bool:
         must = self._must_propose(slot, new_view)
         if must is None:        # any request may be proposed
             return True
-        return crypto.encode(req) == crypto.encode(must)
+        return crypto.encode(as_batch(req)) == crypto.encode(as_batch(must))
 
     # ------------------------------------------------------------------
     # FIFO message processing (Alg. 2 / Alg. 3 receive sides)
@@ -434,17 +603,23 @@ class UbftReplica(Node):
 
     # --- PREPARE (lines 18-22) ---
     def _on_prepare(self, p: str, m: tuple) -> None:
-        _, v, s, req = m
-        self.state[p].prepares[s] = (v, req)
+        _, v, s, raw = m
+        batch = as_batch(raw)
+        self.state[p].prepares[s] = (v, batch)
         if v != self.view or s not in self.checkpoint.open_slots:
             return
-        self.my_prepared[s] = (v, req)
-        rid = req[0]
-        if rid in self.pending_req or p == self.pid:
+        self.my_prepared[s] = (v, batch)
+        missing = {r[0] for r in batch
+                   if r[1] != "" and r[0] not in self.pending_req and
+                   r[0] not in self.decided_rids}
+        if p == self.pid or not missing:
             self._endorse(v, s)
         else:
-            # wait for the client's direct copy before endorsing (§5.4)
-            self.waiting_prepare.setdefault(rid, []).append((v, s))
+            # wait for the clients' direct copies before endorsing (§5.4);
+            # a batched slot endorses once every missing rid has arrived
+            self.prepare_missing[(v, s)] = missing
+            for rid in missing:
+                self.waiting_prepare.setdefault(rid, []).append((v, s))
             self._arm_progress_timer()
         if self.cfg.slow_mode == "always":
             self._do_certify(v, s)
@@ -567,32 +742,52 @@ class UbftReplica(Node):
     # ==================================================================
     # Decide → execute → reply
     # ==================================================================
-    def _decide(self, s: int, req: tuple) -> None:
+    def _decide(self, s: int, reqs: tuple) -> None:
         if s in self.decided:
             return
-        self.decided[s] = req
-        self.decided_rids.add(req[0])
+        batch = as_batch(reqs)
+        self.decided[s] = batch
+        for r in batch:
+            self.decided_rids.add(r[0])
+            # a decided rid no longer gates any endorsement: clear its
+            # waits so _has_pending() cannot trigger spurious view changes
+            # while the client's direct copy is still in flight
+            for key in self.waiting_prepare.pop(r[0], []):
+                miss = self.prepare_missing.get(key)
+                if miss is not None:
+                    miss.discard(r[0])
+                    if not miss:
+                        del self.prepare_missing[key]
         self.progress_deadline = None
         self.view_patience = self.cfg.view_timeout_us  # progress resets patience
         for hook in self.on_decide_hooks:
-            hook(s, req)
+            hook(s, batch)
         self._execute_ready()
 
     def _execute_ready(self) -> None:
         while self.exec_upto + 1 in self.decided:
             s = self.exec_upto + 1
-            rid, client, payload = self.decided[s]
-            if client == "" or rid in self.executed_rids:
-                result = b""      # no-op / duplicate: does not touch the app
-            else:
+            results = []
+            # the batch executes atomically (one slot), replies per-request
+            for rid, client, payload in self.decided[s]:
+                if client == "" or rid in self.executed_rids:
+                    # no-op / duplicate: does not touch the app and sends
+                    # no reply (a duplicate's real reply came from the slot
+                    # that executed it; a second b"" REP could otherwise
+                    # outvote it at the client)
+                    results.append(b"")
+                    self.pending_req.pop(rid, None)
+                    self.echoes.pop(rid, None)
+                    continue
                 result = self.app.apply(payload)
                 self.executed_rids.add(rid)
-            self.results[s] = result
+                results.append(result)
+                self.pending_req.pop(rid, None)
+                self.echoes.pop(rid, None)
+                if client in self.sim.processes:
+                    self.send(client, "REP", (rid, result))
+            self.results[s] = tuple(results)
             self.exec_upto = s
-            self.pending_req.pop(rid, None)
-            self.echoes.pop(rid, None)
-            if client and client in self.sim.processes:
-                self.send(client, "REP", (rid, result))
         self._maybe_checkpoint_round()
         self._drain_proposals()
 
@@ -665,6 +860,15 @@ class UbftReplica(Node):
             del self.certify_sigs[key]
         for key in [k for k in self.cp_sigs if k[1] < cp.start]:
             del self.cp_sigs[key]
+        for key in [k for k in self.prepare_missing if k[1] < cp.start]:
+            del self.prepare_missing[key]
+        for rid in list(self.waiting_prepare):
+            live = [(v, s) for (v, s) in self.waiting_prepare[rid]
+                    if s >= cp.start]
+            if live:
+                self.waiting_prepare[rid] = live
+            else:
+                del self.waiting_prepare[rid]
         if self.exec_upto < cp.start - 1:
             # we are behind: adopt via state transfer (fp-verified)
             self._request_state(cp)
@@ -766,8 +970,8 @@ class UbftReplica(Node):
                               if rid in self.decided_rids}
         # rids with a live PREPARE in an open slot will be re-proposed by
         # _repropose — don't also queue them (double assignment)
-        prepared_rids = {req[0] for s, (_v, req) in self.my_prepared.items()
-                         if s > self.exec_upto}
+        prepared_rids = {r[0] for s, (_v, batch) in self.my_prepared.items()
+                         if s > self.exec_upto for r in batch}
         for rid, req in list(self.pending_req.items()):
             if rid in self.decided_rids or rid in prepared_rids:
                 continue
@@ -882,12 +1086,15 @@ class UbftReplica(Node):
             if must is not None:
                 req = must
             elif (prior is not None and s > self.exec_upto and
-                  prior[1][0] not in self.executed_rids):
-                req = prior[1]              # re-propose the in-flight request
+                  any(r[1] != "" and r[0] not in self.executed_rids
+                      for r in prior[1])):
+                req = prior[1]              # re-propose the in-flight batch
             elif s <= max_committed or s <= self.exec_upto:
                 req = _noop_request(v, s)   # ⊥ slot below a committed one
             elif self.propose_queue:
-                req = self.propose_queue.pop(0)
+                req = self._assemble_batch()
+                if req is None:
+                    break
             else:
                 break
             proposed_upto = s
@@ -999,8 +1206,24 @@ class UbftReplica(Node):
     def memory_bytes(self) -> dict:
         tb = self.tb.memory_bytes()
         ctb = sum(c.memory_bytes() for c in self.ctb.values())
-        window_bufs = (len(self.decided) + len(self.results) +
-                       len(self.my_prepared)) * (self.cfg.max_request_bytes + 64)
+        # Per-slot buffers are sized for what a slot can hold: one request
+        # in the paper's configuration, up to max_batch requests (bounded
+        # by max_batch_bytes) with batching — still O(window), per Table 2.
+        slot_cap = 64 + (max(self.cfg.max_batch_bytes +
+                             self.cfg.max_batch * self._REQ_FRAMING,
+                             self.cfg.max_request_bytes)
+                         if self.cfg.max_batch > 1
+                         else self.cfg.max_request_bytes)
+        window_slots = (len(self.decided) + len(self.my_prepared))
+        window_bufs = window_slots * slot_cap
+        # executed results are retained at their actual (batched) size
+        result_bufs = sum(64 + sum(len(r) for r in res)
+                          for res in self.results.values())
+        # actual occupancy of the retained batches (≤ the preallocated cap)
+        window_actual = (
+            sum(crypto.batch_wire_size(b) for b in self.decided.values()) +
+            sum(crypto.batch_wire_size(b) for _v, b in self.my_prepared.values()))
         return {"tbcast_buffers": tb, "ctbcast_arrays": ctb,
-                "window_state": window_bufs,
-                "total": tb + ctb + window_bufs}
+                "window_state": window_bufs + result_bufs,
+                "window_actual": window_actual + result_bufs,
+                "total": tb + ctb + window_bufs + result_bufs}

@@ -139,6 +139,18 @@ def wire_size(obj: Any) -> int:
     raise TypeError(f"cannot size {type(obj)!r}")
 
 
+#: per-request framing inside a batched slot: rid + client id + length header
+REQUEST_WIRE_OVERHEAD = 16
+
+
+def batch_wire_size(batch: Any) -> int:
+    """Wire size of a batched consensus payload (a tuple of request
+    triples): every coalesced request pays its own framing overhead on top
+    of its recursive payload size, so the cost model prices batches
+    honestly rather than treating a batch as one flat blob."""
+    return 4 + sum(wire_size(r) + REQUEST_WIRE_OVERHEAD for r in batch)
+
+
 class Signer:
     """Holds a private key; the only way to produce this pid's signatures."""
 

@@ -158,8 +158,6 @@ class CTBcast:
     def summary_certified(self, seg: int) -> None:
         """Upper layer certified summary segment ``seg`` — unblock."""
         self.summaries_ok = max(self.summaries_ok, seg)
-        if self.stalled_since is not None and self.blocked_queue:
-            pass
         q, self.blocked_queue = self.blocked_queue, []
         if self.stalled_since is not None:
             self.total_stall_us += self.node.sim.now - self.stalled_since

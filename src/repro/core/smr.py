@@ -97,6 +97,29 @@ class Cluster:
                 f"(t={self.sim.now})")
         return box["result"], box["lat"]
 
+    def run_requests(self, client: Client, payloads: List[bytes],
+                     timeout: float = 10_000_000.0) -> List[Tuple[bytes, float]]:
+        """Issue many requests concurrently (they ride the leader's batched
+        slots) and run until every one completes.  Returns (result, latency)
+        per payload, in submission order."""
+        out: List[Optional[Tuple[bytes, float]]] = [None] * len(payloads)
+        left = {"n": len(payloads)}
+
+        def mk(i: int):
+            def done(result: bytes, lat: float) -> None:
+                out[i] = (result, lat)
+                left["n"] -= 1
+            return done
+
+        for i, p in enumerate(payloads):
+            client.request(p, mk(i))
+        ok = self.sim.run_until(lambda: left["n"] == 0, timeout=timeout)
+        if not ok:
+            raise TimeoutError(
+                f"{left['n']}/{len(payloads)} requests incomplete after "
+                f"{timeout} µs (t={self.sim.now})")
+        return out  # type: ignore[return-value]
+
 
 def build_cluster(app_factory: Callable[[], App], f: int = 1, f_m: int = 1,
                   cfg: Optional[ConsensusConfig] = None,

@@ -66,3 +66,15 @@ class ReplicatedServer:
                               "n": n}).encode()
         raw, lat = self.cluster.run_request(client, payload, timeout=timeout)
         return json.loads(raw.decode())["tokens"], lat
+
+    def generate_many(self, client, requests: List[Tuple[str, List[int], int]],
+                      timeout: float = 60_000_000.0
+                      ) -> List[Tuple[List[int], float]]:
+        """Submit many generation requests concurrently; consensus orders
+        them (coalesced into batched slots when the leader is configured
+        with max_batch > 1) and every replica decodes the same sequence."""
+        payloads = [json.dumps({"session": s, "prompt": p, "n": n}).encode()
+                    for s, p, n in requests]
+        outs = self.cluster.run_requests(client, payloads, timeout=timeout)
+        return [(json.loads(raw.decode())["tokens"], lat)
+                for raw, lat in outs]

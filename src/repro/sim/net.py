@@ -6,7 +6,9 @@ on the paper's measurements (Fig 8); uBFT / MinBFT / SGX numbers are then
 *predicted* by protocol structure, which is the reproduction claim.
 
 Message size accounting: every protocol message computes its wire size from
-its payload (see ``repro.core.messages.wire_size``); latency =
+its payload (see ``repro.core.crypto.wire_size``); batched payloads (tuples
+of request tuples) are priced recursively, so a PREPARE carrying a batch
+pays for every request it coalesces; latency =
 ``base + size * per_byte`` plus a small lognormal jitter, plus unbounded extra
 delay before GST if asynchrony injection is enabled.
 """

@@ -13,6 +13,8 @@ from repro.models.transformer import decode_step, lm_loss, prefill
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.runtime.steps import make_train_step
 
+pytestmark = pytest.mark.slow
+
 ARCHS = list_archs()
 B, S = 2, 24
 

@@ -4,7 +4,7 @@ view changes, Byzantine leader containment."""
 import pytest
 
 from repro.apps.flip import FlipApp
-from repro.apps.kvstore import KVStoreApp, get_req, set_req
+from repro.apps.kvstore import KVStoreApp, get_req, mset_req, set_req
 from repro.core import crypto
 from repro.core.consensus import ConsensusConfig
 from repro.core.smr import build_cluster
@@ -120,6 +120,227 @@ def test_byzantine_peer_blocked_on_invalid_message():
     cl = c.new_client()
     r, _ = c.run_request(cl, set_req(b"a", b"1"), timeout=60_000_000)
     assert r == b"OK"
+
+
+# --------------------------------------------------------------------------
+# Batching + pipelining invariants (the batched consensus hot path)
+# --------------------------------------------------------------------------
+def _submit_concurrent(c, payload_fn, n):
+    """n single-shot clients firing concurrently; returns {i: (result, lat)}."""
+    clients = [c.new_client() for _ in range(n)]
+    done = {}
+    for i, cl in enumerate(clients):
+        cl.request(payload_fn(i),
+                   (lambda i: lambda res, lat: done.__setitem__(i, (res, lat)))(i))
+    assert c.sim.run_until(lambda: len(done) == n, timeout=60_000_000)
+    return done
+
+
+def test_batched_slots_coalesce_and_reply_per_request():
+    cfg = ConsensusConfig(max_batch=8, pipeline_depth=4, batch_timeout_us=20.0)
+    c = build_cluster(KVStoreApp, cfg=cfg)
+    done = _submit_concurrent(c, lambda i: set_req(b"k%d" % i, b"v%d" % i), 12)
+    # every client got its own reply
+    assert all(res == b"OK" for res, _ in done.values())
+    c.sim.run(until=c.sim.now + 20000)
+    # requests were coalesced: fewer slots than requests, some batch > 1
+    batches = [b for _s, b in sorted(c.replicas[0].decided.items())]
+    assert sum(len(b) for b in batches) == 12
+    assert len(batches) < 12
+    assert max(len(b) for b in batches) > 1
+    # agreement on batch order: identical decided batches on every replica
+    for s, b in c.replicas[0].decided.items():
+        for rep in c.replicas[1:]:
+            assert crypto.encode(rep.decided[s]) == crypto.encode(b)
+    stores = [r.app.store for r in c.replicas]
+    assert stores[0] == stores[1] == stores[2]
+    assert len(stores[0]) == 12
+    # reads see every batched write
+    cl = c.new_client()
+    for i in range(12):
+        r, _ = c.run_request(cl, get_req(b"k%d" % i))
+        assert r == b"v%d" % i
+
+
+def test_batched_workload_survives_follower_crash():
+    cfg = ConsensusConfig(max_batch=8, pipeline_depth=4)
+    c = build_cluster(KVStoreApp, cfg=cfg)
+    done = _submit_concurrent(c, lambda i: set_req(b"a%d" % i, b"1"), 8)
+    assert all(res == b"OK" for res, _ in done.values())
+    c.replicas[2].crash()   # fast path loses unanimity → slow path
+    done = _submit_concurrent(c, lambda i: set_req(b"b%d" % i, b"2"), 8)
+    assert all(res == b"OK" for res, _ in done.values())
+    stores = [r.app.store for r in c.replicas[:2]]
+    assert stores[0] == stores[1]
+    assert len(stores[0]) == 16
+
+
+def test_batched_workload_survives_leader_crash():
+    cfg = ConsensusConfig(max_batch=8, pipeline_depth=4,
+                          view_timeout_us=2000.0)
+    c = build_cluster(KVStoreApp, cfg=cfg)
+    done = _submit_concurrent(c, lambda i: set_req(b"a%d" % i, b"1"), 8)
+    assert all(res == b"OK" for res, _ in done.values())
+    c.replicas[0].crash()
+    # in-flight batched requests must survive the view change
+    done = _submit_concurrent(c, lambda i: set_req(b"b%d" % i, b"2"), 8)
+    assert all(res == b"OK" for res, _ in done.values())
+    assert max(x.view for x in c.replicas[1:]) >= 1
+    cl = c.new_client()
+    for i in range(8):
+        r, _ = c.run_request(cl, get_req(b"a%d" % i), timeout=60_000_000)
+        assert r == b"1"
+        r, _ = c.run_request(cl, get_req(b"b%d" % i), timeout=60_000_000)
+        assert r == b"2"
+
+
+def test_batched_workload_survives_partition():
+    cfg = ConsensusConfig(max_batch=8, pipeline_depth=4)
+    c = build_cluster(KVStoreApp, cfg=cfg)
+    c.sim.gst = 50_000.0
+    for other in ("r0", "r1"):
+        c.net.partition("r2", other)
+        c.net.partition(other, "r2")
+    done = _submit_concurrent(c, lambda i: set_req(b"p%d" % i, b"1"), 8)
+    assert all(res == b"OK" for res, _ in done.values())
+    stores = [r.app.store for r in c.replicas[:2]]
+    assert stores[0] == stores[1] and len(stores[0]) == 8
+    # after GST the partition heals and the laggard converges
+    c.sim.run(until=c.sim.gst + 1000.0)
+    c.net.heal()
+    c.sim.run(until=c.sim.now + 300_000)
+    assert c.replicas[2].app.store == stores[0]
+
+
+def test_byzantine_leader_equivocating_batches_cannot_diverge():
+    """A Byzantine leader PREPAREs different *batches* to different
+    followers for the same slot; agreement must hold over batches."""
+    cfg = ConsensusConfig(max_batch=8, view_timeout_us=3000.0)
+    c = build_cluster(KVStoreApp, cfg=cfg)
+    leader = c.replicas[0]
+    cl = c.new_client()
+    batchA = ((("e", 0), cl.pid, set_req(b"k", b"A")),
+              (("e", 1), cl.pid, set_req(b"k2", b"A")))
+    batchB = ((("e", 0), cl.pid, set_req(b"k", b"B")),
+              (("e", 1), cl.pid, set_req(b"k2", b"B")))
+    stream = leader.my_ctb._s_lock
+    leader.tb.broadcast(stream, 0, ("PREPARE", 0, 0, batchA), ["r1"])
+    leader.tb.broadcast(stream, 0, ("PREPARE", 0, 0, batchB), ["r2"])
+    leader.tb.broadcast(stream, 0, ("PREPARE", 0, 0, batchA), ["r0"])
+    c.sim.run(until=c.sim.now + 100000)
+    vals = set()
+    for rep in (c.replicas[1], c.replicas[2]):
+        if 0 in rep.decided:
+            vals.add(crypto.encode(rep.decided[0]))
+    assert len(vals) <= 1, "replicas decided different batches for slot 0"
+
+
+def test_oversized_batch_blocks_byzantine_leader():
+    """A batch exceeding max_batch fails Algorithm 5's structural check and
+    permanently blocks the sender."""
+    cfg = ConsensusConfig(max_batch=4)
+    c = build_cluster(KVStoreApp, cfg=cfg)
+    leader = c.replicas[0]
+    too_big = tuple((("x", i), "c0", b"G") for i in range(5))
+    leader._ctb_broadcast(("PREPARE", 0, 0, too_big))
+    c.sim.run(until=c.sim.now + 50000)
+    assert c.replicas[1].state["r0"].blocked
+    assert c.replicas[2].state["r0"].blocked
+
+
+def test_batched_memory_stays_bounded():
+    cfg = ConsensusConfig(window=16, t=8, max_request_bytes=64,
+                          max_batch=8, max_batch_bytes=512, pipeline_depth=4)
+    c = build_cluster(KVStoreApp, cfg=cfg)
+    cl = c.new_client()
+    for wave in range(8):
+        c.run_requests(cl, [set_req(b"k%d" % i, b"v%d" % wave)
+                            for i in range(8)])
+    m1 = c.replicas[0].memory_bytes()
+    for wave in range(8):
+        c.run_requests(cl, [set_req(b"k%d" % i, b"w%d" % wave)
+                            for i in range(8)])
+    m2 = c.replicas[0].memory_bytes()
+    # steady state: memory does not grow with request count (Table 2)
+    assert m2["total"] <= m1["total"] * 1.5
+    assert m2["window_actual"] <= m2["window_state"]
+
+
+def test_unhashable_rid_in_batch_blocks_sender_without_crashing():
+    """A Byzantine leader's PREPARE with an unhashable rid must fail the
+    structural check and block the sender — not crash honest followers."""
+    cfg = ConsensusConfig(max_batch=4)
+    c = build_cluster(KVStoreApp, cfg=cfg)
+    leader = c.replicas[0]
+    evil = (((["un", "hashable"], 0), "c0", b"G"),)
+    leader._ctb_broadcast(("PREPARE", 0, 0, evil))
+    c.sim.run(until=c.sim.now + 50000)
+    assert c.replicas[1].state["r0"].blocked
+    assert c.replicas[2].state["r0"].blocked
+
+
+def test_duplicate_rids_in_batch_block_byzantine_leader():
+    """One reply per rid: a batch carrying the same rid twice fails the
+    structural check (a duplicate's empty reply could otherwise outvote
+    the real one at the client)."""
+    cfg = ConsensusConfig(max_batch=4)
+    c = build_cluster(KVStoreApp, cfg=cfg)
+    leader = c.replicas[0]
+    dup = ((("d", 0), "c0", set_req(b"k", b"1")),
+           (("d", 0), "c0", set_req(b"k", b"1")))
+    leader._ctb_broadcast(("PREPARE", 0, 0, dup))
+    c.sim.run(until=c.sim.now + 50000)
+    assert c.replicas[1].state["r0"].blocked
+    assert c.replicas[2].state["r0"].blocked
+
+
+def test_oversized_request_gets_error_reply_not_wedge():
+    """Payloads over max_request_bytes are answered with a deterministic
+    error; the leader is never blocked and the cluster keeps serving."""
+    cfg = ConsensusConfig(max_request_bytes=128, max_batch=4)
+    c = build_cluster(KVStoreApp, cfg=cfg)
+    cl = c.new_client()
+    r, _ = c.run_request(cl, set_req(b"big", b"x" * 500))
+    assert r == b"ERR_REQUEST_TOO_LARGE"
+    assert not any(c.replicas[i].state["r0"].blocked for i in (1, 2))
+    r, _ = c.run_request(cl, set_req(b"k", b"v"))
+    assert r == b"OK"
+
+
+def test_late_client_copy_after_decide_causes_no_view_change():
+    """A follower whose direct client copy is delayed past the decision
+    must clear its endorse-wait at decide time — no spurious view change."""
+    cfg = ConsensusConfig(view_timeout_us=2000.0, slow_after_us=200.0)
+    c = build_cluster(KVStoreApp, cfg=cfg)
+    c.sim.gst = 30_000.0
+    c.net.delay_link("c0", "r1", 20_000.0)   # REQ to r1 arrives very late
+    cl = c.new_client()
+    r, _ = c.run_request(cl, set_req(b"a", b"1"), timeout=60_000_000)
+    assert r == b"OK"
+    c.sim.run(until=c.sim.gst + 30_000.0)    # late copy lands, timers fire
+    assert not c.replicas[1].waiting_prepare
+    assert not c.replicas[1].prepare_missing
+    assert all(rep.view == 0 for rep in c.replicas), \
+        "decided slot must not leave pending waits that force a view change"
+
+
+def test_malformed_mset_rejected_atomically():
+    app = KVStoreApp()
+    truncated = b"M\x02" + bytes([1]) + b"k" + bytes([1]) + b"v"  # claims 2
+    assert app.apply(truncated) == b"ERR"
+    assert app.store == {}
+    assert app.apply(mset_req([(b"a", b"1")])) == b"OK"
+    assert app.store == {b"a": b"1"}
+
+
+def test_app_level_multi_put_composes_with_slot_batching():
+    cfg = ConsensusConfig(max_batch=4, pipeline_depth=2)
+    c = build_cluster(KVStoreApp, cfg=cfg)
+    cl = c.new_client()
+    r, _ = c.run_request(cl, mset_req([(b"a", b"1"), (b"b", b"22")]))
+    assert r == b"OK"
+    assert c.run_request(cl, get_req(b"a"))[0] == b"1"
+    assert c.run_request(cl, get_req(b"b"))[0] == b"22"
 
 
 def test_memory_accounting_reports_bounded_buffers():

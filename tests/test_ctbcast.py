@@ -116,6 +116,29 @@ def test_integrity_unsigned_injection_rejected():
     assert len(deliv.get(0, {})) == 0
 
 
+def test_stall_accounted_exactly_once_per_episode():
+    """total_stall_us accumulates exactly once per stall episode — a second
+    summary certification with no intervening stall must not re-account."""
+    t = 8
+    sim, nodes, deliv = build_ctbcast(t=t, fast=True)
+    bc = nodes[0]
+    bc.ctb.on_summary_needed = lambda seg: None   # suppress certification
+    for k in range(2 * t):
+        bc.ctb.broadcast(k, b"x")
+    sim.run(until=sim.now + 1000.0)
+    assert bc.ctb.stall_count == 1
+    assert bc.ctb.stalled_since is not None
+    t0 = bc.ctb.stalled_since
+    sim.run(until=sim.now + 500.0)
+    bc.ctb.summary_certified(5)   # unblocks the whole queue
+    expected = sim.now - t0
+    assert bc.ctb.total_stall_us == pytest.approx(expected)
+    assert bc.ctb.stalled_since is None
+    bc.ctb.summary_certified(6)   # no new stall → no new accounting
+    assert bc.ctb.total_stall_us == pytest.approx(expected)
+    assert not bc.ctb.blocked_queue
+
+
 def test_summary_blocking_bounds_outstanding():
     """The broadcaster stalls rather than outrun its summaries (double
     buffering, footnote 3)."""

@@ -44,6 +44,7 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_checkpoint_reshards_onto_new_mesh(tmp_path):
     src = os.path.join(os.path.dirname(__file__), "..", "src")
     script = tmp_path / "elastic_check.py"

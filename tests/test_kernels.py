@@ -8,6 +8,8 @@ import pytest
 
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(7)
 
 

@@ -35,6 +35,7 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_pipeline_matches_sequential(tmp_path):
     src = os.path.join(os.path.dirname(__file__), "..", "src")
     script = tmp_path / "pipe_check.py"

@@ -5,8 +5,11 @@ partition schedules, CTBcast tails — asserting the protocol's safety
 invariants (agreement, integrity, bounded memory) always hold.
 """
 
-import hypothesis.strategies as st
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
 from hypothesis import HealthCheck, given, settings
 
 from repro.apps.kvstore import KVStoreApp, set_req

@@ -151,6 +151,34 @@ def test_replicated_server_identical_generations():
     assert len(toks2) == 2
 
 
+def test_replicated_server_batched_multi_request_submission():
+    """generate_many submits concurrent generation requests; the batched
+    consensus hot path coalesces them into slots, every replica decodes the
+    same totally-ordered sequence, and each request gets its own reply."""
+    from repro.core.consensus import ConsensusConfig
+    from repro.runtime.server import ReplicatedServer
+
+    def decode_fn(session, hist, n):
+        # deterministic toy decoder: next token = len(hist) + i
+        return [len(hist) + i for i in range(n)]
+
+    cfg = ConsensusConfig(max_request_bytes=4096, max_batch=8,
+                          pipeline_depth=4, batch_timeout_us=20.0)
+    server = ReplicatedServer.build(decode_fn, cfg=cfg)
+    client = server.cluster.new_client()
+    reqs = [(f"s{i % 4}", [i], 2) for i in range(12)]
+    outs = server.generate_many(client, reqs)
+    assert len(outs) == 12
+    assert all(len(toks) == 2 for toks, _lat in outs)
+    # all replicas hold identical session state (agreement over batches)
+    snaps = [r.app.snapshot() for r in server.cluster.replicas]
+    assert snaps[0] == snaps[1] == snaps[2]
+    # the load actually exercised batching: fewer slots than requests
+    decided = server.cluster.replicas[0].decided
+    assert sum(len(b) for b in decided.values()) == 12
+    assert len(decided) < 12
+
+
 def test_coordinator_app_is_deterministic_state_machine():
     import json
     a, b = CoordinatorApp(), CoordinatorApp()
