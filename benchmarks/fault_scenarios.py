@@ -1,0 +1,120 @@
+"""Seeded fault-schedule scenario sweep over the TCB (memory pools).
+
+Drives a kvstore uBFT cluster (2 sharded memory pools) through the
+deterministic fault schedules of ``repro.sim.faults`` — memory-node
+crashes, lease-based pool reconfiguration, replica+memory double faults,
+and partition+heal episodes — and reports per-scenario client latency,
+fault logs, and per-pool disaggregated-memory occupancy (must stay under
+the 1 MiB Table 2 budget).  Every run also re-checks the safety
+invariants: all acknowledged writes present on every live replica, no
+divergence between replica stores.
+
+Usage:  PYTHONPATH=src:. python benchmarks/fault_scenarios.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from benchmarks.common import closed_loop_cluster, emit, percentiles
+from repro.apps.kvstore import KVStoreApp, set_req
+from repro.core.consensus import ConsensusConfig
+from repro.core.registers import POOL_MEMORY_BUDGET as POOL_BUDGET
+from repro.core.smr import build_cluster
+from repro.sim.faults import FaultInjector, FaultSchedule
+
+#: scenario name -> schedule builder(seed, cluster) — all registers-heavy
+#: (slow_mode="always" keeps the disaggregated-memory path hot).
+SCENARIOS = {}
+
+
+def scenario(name):
+    def deco(fn):
+        SCENARIOS[name] = fn
+        return fn
+    return deco
+
+
+@scenario("mem_crash")
+def _mem_crash(seed, cluster):
+    """Crash f_m memory nodes (one per pool), later recover them."""
+    return FaultSchedule.seeded(
+        seed, horizon_us=4000.0, memory=["m0", "p1m1"],
+        pools=cluster.pools, n_memory_crashes=2, recover=True)
+
+
+@scenario("reconfig")
+def _reconfig(seed, cluster):
+    """Crash one memory node mid-broadcast and reconfigure its pool."""
+    return FaultSchedule.seeded(
+        seed, horizon_us=4000.0, memory=["m0"], pools=cluster.pools,
+        n_memory_crashes=1, reconfigure=True)
+
+
+@scenario("replica_plus_mem")
+def _replica_plus_mem(seed, cluster):
+    """A follower replica crash on top of a memory-node crash."""
+    return FaultSchedule.seeded(
+        seed, horizon_us=4000.0, memory=["m1"], pools=cluster.pools,
+        replicas=["r2"], n_memory_crashes=1, n_replica_crashes=1,
+        reconfigure=True)
+
+
+@scenario("partition_heal")
+def _partition_heal(seed, cluster):
+    """Partition a replica pair, heal before the view times out."""
+    return FaultSchedule.seeded(
+        seed, horizon_us=3000.0, partitions=[("r1", "r2")], n_partitions=1)
+
+
+def _check_safety(cluster, acked):
+    alive = [r for r in cluster.replicas if not r.crashed]
+    cluster.sim.run(until=cluster.sim.now + 100_000)
+    for rep in alive:
+        for k, v in acked.items():
+            assert rep.app.store.get(k) == v, (rep.pid, k)
+    for a, b in zip(alive, alive[1:]):
+        assert a.app.store == b.app.store
+    for p in cluster.pools:
+        assert p.memory_bytes() < POOL_BUDGET, p.name
+
+
+def run(seeds=(0, 1, 2), n_reqs=40) -> dict:
+    out = {}
+    for name, make in SCENARIOS.items():
+        for seed in seeds:
+            cfg = ConsensusConfig(t=16, window=16, slow_mode="always",
+                                  ctb_fast_enabled=False,
+                                  view_timeout_us=20_000.0)
+            cluster = build_cluster(KVStoreApp, cfg=cfg, seed=seed,
+                                    n_pools=2)
+            inj = FaultInjector.for_cluster(cluster, make(seed, cluster))
+            client = cluster.new_client()
+            acked = {}
+
+            def payload(i):
+                k, v = b"k%d" % (i % 8), b"v%d" % i
+                acked[k] = v
+                return set_req(k, v)
+
+            lats = closed_loop_cluster(cluster, client, payload, n_reqs,
+                                       timeout=600_000_000)
+            _check_safety(cluster, acked)
+            pool = max(p.memory_bytes() for p in cluster.pools)
+            reconf = sum(len(p.reconfigurations) for p in cluster.pools)
+            pcts = percentiles(lats)
+            out[(name, seed)] = {"p50": pcts["p50"], "p99": pcts["p99"],
+                                 "faults": len(inj.log), "reconf": reconf,
+                                 "pool_bytes": pool}
+            emit(f"faults.{name}.s{seed}.p50", pcts["p50"],
+                 f"p99={pcts['p99']:.1f} faults={len(inj.log)} "
+                 f"reconf={reconf} pool={pool / 1024:.1f}KiB")
+    return out
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    run(seeds=(0,) if smoke else (0, 1, 2), n_reqs=20 if smoke else 40)
+    print("fault_scenarios: all safety checks passed")

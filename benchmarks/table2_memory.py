@@ -6,6 +6,12 @@ staging per connection, slot = max message size) plus consensus-window and
 CTBcast bookkeeping.  Disaggregated memory stores only (id, signature,
 32 B fingerprint) per register × 2 sub-registers × checksums — independent
 of request size (paper: 20 KiB at t=16 → 162 KiB at t=128 per memory node).
+
+Pool accounting: the TCB is organised into pools of 2f_m+1 memory nodes
+(``repro.core.registers.MemoryPool``); every pool must stay under 1 MiB of
+occupied disaggregated memory (the Table 2 budget that lets many replicated
+applications share one pool).  The sharding sweep shows per-pool occupancy
+dropping as register keys spread over more pools.
 """
 
 from __future__ import annotations
@@ -13,9 +19,15 @@ from __future__ import annotations
 from benchmarks.common import closed_loop_cluster, emit
 from repro.apps.flip import FlipApp
 from repro.core.consensus import ConsensusConfig
+from repro.core.registers import POOL_MEMORY_BUDGET as POOL_BUDGET
 from repro.core.smr import build_cluster
 
 TAILS = (16, 32, 64, 128)
+
+
+def _pool_bytes(cluster) -> int:
+    """Worst-case occupied disaggregated memory over the cluster's pools."""
+    return max(p.memory_bytes() for p in cluster.pools)
 
 
 def run() -> dict:
@@ -29,18 +41,40 @@ def run() -> dict:
             closed_loop_cluster(cluster, client, lambda i: b"x" * size,
                                 3 * t, timeout=600_000_000)
             local = cluster.replicas[0].memory_bytes()
-            # measured occupancy at one memory node + full-occupancy model
+            # measured occupancy at one memory node / one pool + model
             meas = max(m.memory_bytes() for m in cluster.mem_nodes)
+            pool = _pool_bytes(cluster)
+            assert pool < POOL_BUDGET, (
+                f"Table 2 bound violated: {pool} B occupied in one pool")
             regs = cluster.replicas[0].regs
             slot = regs.disaggregated_bytes_per_register()
             n = len(cluster.replicas)
             analytic = n * n * t * slot  # n instances × n owners × t regs
             out[(size, t)] = {"local": local["total"], "disagg_meas": meas,
-                              "disagg_full": analytic}
+                              "disagg_pool": pool, "disagg_full": analytic}
             emit(f"table2.{size}B.t{t}.local_MiB", local["total"] / 2**20,
                  f"tb={local['tbcast_buffers'] / 2**20:.1f}MiB")
             emit(f"table2.{size}B.t{t}.disagg_KiB", analytic / 1024,
                  f"measured={meas / 1024:.1f}KiB")
+            emit(f"table2.{size}B.t{t}.disagg_pool_KiB", pool / 1024,
+                 f"budget={POOL_BUDGET / 1024:.0f}KiB")
+
+    # sharding sweep: per-pool occupancy under the largest tail as register
+    # keys spread over more pools (paper: memory "shared by many replicated
+    # applications" — a pool must never become the bottleneck)
+    t = TAILS[-1]
+    for n_pools in (1, 2, 4):
+        cfg = ConsensusConfig(t=t, window=256, max_request_bytes=64,
+                              slow_mode="always", ctb_fast_enabled=False)
+        cluster = build_cluster(FlipApp, cfg=cfg, n_pools=n_pools)
+        client = cluster.new_client()
+        closed_loop_cluster(cluster, client, lambda i: b"x" * 64,
+                            3 * t, timeout=600_000_000)
+        pool = _pool_bytes(cluster)
+        assert pool < POOL_BUDGET
+        out[("shard", n_pools)] = {"disagg_pool": pool}
+        emit(f"table2.shard.p{n_pools}.disagg_pool_KiB", pool / 1024,
+             f"pools={n_pools}")
     return out
 
 

@@ -186,8 +186,13 @@ class UbftReplica(Node):
 
     def __init__(self, sim: Simulator, net: NetworkModel,
                  registry: crypto.KeyRegistry, pid: str,
-                 replicas: List[str], mem_nodes: List[str],
+                 replicas: List[str], mem_nodes,
                  app: App, cfg: Optional[ConsensusConfig] = None):
+        # ``mem_nodes``: a bare pid list (legacy static TCB), one
+        # ``MemoryPool`` or a list of pools (sharded disaggregated memory) —
+        # handed to RegisterClient, which shards register keys across pools
+        # and tracks pool membership across reconfigurations; every CTBcast
+        # instance below rides the same pool-aware client.
         super().__init__(sim, net, registry, pid)
         self.cfg = cfg or ConsensusConfig()
         self.replicas = list(replicas)

@@ -11,18 +11,51 @@ Faithful to the paper's construction:
   round-robin) + a δ cooldown between WRITEs, exactly as in the paper.
 * **Reliable** — each register is replicated on 2f_m+1 memory nodes; WRITEs
   and READs complete at a majority (f_m+1); the highest valid timestamp wins.
-* **Byzantine-writer detection** — if both sub-registers have invalid
-  checksums and the READ took < δ, or both carry the same timestamp, the
-  owner is exposed as Byzantine and a default value is returned.
+* **Byzantine-writer detection** — if both sub-registers carry *data-sized*
+  blobs with invalid checksums and the READ took < δ, or both carry the same
+  timestamp, the owner is exposed as Byzantine and a default value is
+  returned.  (An empty sub-register next to a torn one is *not* Byzantine —
+  it is simply a READ overlapping the very first WRITE, which regularity
+  allows to return ⊥.)
+* **Inconclusive slow reads** retry, but at most :data:`MAX_READ_ATTEMPTS`
+  times end-to-end; a permanently torn register yields ⊥ rather than an
+  unbounded retry loop.
 
 Memory nodes are *trusted to crash only* — they are the paper's TCB.  They
 are application-oblivious: they store opaque blobs under (owner, register)
 keys and can be shared by many replicated applications.
+
+Memory pools (reconfiguration + sharding)
+-----------------------------------------
+The TCB is organised into :class:`MemoryPool`\\ s.  A pool owns 2f_m+1
+:class:`MemoryNode` processes plus a tiny :class:`_PoolManager` (the paper's
+external membership/lease service, e.g. the provider's control plane):
+
+* **Leases** — each member must answer the manager's periodic ``LEASE_PING``
+  within ``lease_us``; a member whose lease expires is *suspected* and (when
+  ``auto_reconfigure`` is on) replaced.
+* **Reconfiguration** — the manager installs a fresh memory node, pulls the
+  cell state from f_m+1 surviving members (any such quorum intersects every
+  completed WRITE's ack quorum), re-replicates the highest-valid-timestamp
+  blob per (owner, register, sub-register) to the fresh node, and only then
+  swaps it into the membership — a fresh node never serves READs before it
+  has been synced (``serving`` flag), so quorum intersection is preserved
+  across configuration changes.
+* **Sharding** — a :class:`RegisterClient` may be given several pools;
+  register keys are hashed ``crc32(owner:reg) % n_pools`` so many streams /
+  replicated applications share disaggregated memory without one pool
+  becoming the bottleneck ("shared by many replicated applications", §6.1).
+  Each pool independently satisfies the < 1 MiB Table 2 budget.
+
+Clients read the pool's *current* membership at each operation (epoch bumps
+on every reconfiguration); in-flight operations started against the previous
+membership still complete because at most f_m members change at once.
 """
 
 from __future__ import annotations
 
 import struct
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -33,6 +66,14 @@ from repro.sim.net import NetworkModel
 
 #: sub-register blob layout: ts(8) + checksum(8) + len(4) + value
 BLOB_HEADER = 20
+
+#: end-to-end cap on inconclusive-slow-read retries (§6.1): a permanently
+#: torn register yields ⊥ after this many attempts instead of looping.
+MAX_READ_ATTEMPTS = 8
+
+#: Table 2 budget: occupied disaggregated memory per pool must stay under
+#: 1 MiB (enforced by benchmarks/table2_memory.py and the fault tests).
+POOL_MEMORY_BUDGET = 2**20
 
 
 def _pack(ts: int, value: bytes) -> bytes:
@@ -83,17 +124,29 @@ class _Cell:
 
 class MemoryNode(Node):
     """Disaggregated memory node: READ/WRITE with access control.  Part of
-    the trusted computing base — fails only by crashing."""
+    the trusted computing base — fails only by crashing.
+
+    A node installed as a *replacement* starts with ``serving=False`` and
+    drops READs until its pool manager has pushed the re-replicated state
+    (``POOL_PUSH``); WRITEs are always accepted so no new data is lost
+    during the sync window.
+    """
 
     handling_cost = 0.3  # memnode service time (µs)
 
     def __init__(self, sim: Simulator, net: NetworkModel, registry, pid: str,
-                 write_duration_us: float = 0.4):
+                 write_duration_us: float = 0.4,
+                 manager: Optional[str] = None, serving: bool = True):
         super().__init__(sim, net, registry, pid)
         self.cells: Dict[Tuple[str, str, int], _Cell] = {}
         self.write_duration_us = write_duration_us
+        self.manager = manager
+        self.serving = serving
         self.handle("REG_WRITE", self._on_write)
         self.handle("REG_READ", self._on_read)
+        self.handle("LEASE_PING", self._on_lease_ping)
+        self.handle("POOL_PULL", self._on_pool_pull)
+        self.handle("POOL_PUSH", self._on_pool_push)
 
     def _on_write(self, src: str, body: Any) -> None:
         owner, reg, sub, blob, token = body
@@ -104,6 +157,8 @@ class MemoryNode(Node):
         self.send(src, "REG_WRITE_ACK", (reg, sub, token))
 
     def _on_read(self, src: str, body: Any) -> None:
+        if not self.serving:
+            return  # replacement node: no READs before re-replication
         owner, reg, token = body
         blobs = tuple(
             self.cells.setdefault((owner, reg, sub), _Cell()).read(self.sim.now)
@@ -111,33 +166,338 @@ class MemoryNode(Node):
         )
         self.send(src, "REG_READ_ACK", (owner, reg, token, blobs))
 
+    # ---------------------------------------------- pool-management plane
+    def _on_lease_ping(self, src: str, body: Any) -> None:
+        if self.manager is not None and src != self.manager:
+            return
+        self.send(src, "LEASE_ACK", body)
+
+    def _on_pool_pull(self, src: str, body: Any) -> None:
+        """State transfer for reconfiguration: ship the committed blob of
+        every cell to the pool manager (only complete blobs — ``cell.blob``
+        holds the final value; tearing is a read-time artifact)."""
+        if self.manager is not None and src != self.manager:
+            return
+        token = body
+        cells = [((owner, reg, sub), c.blob)
+                 for (owner, reg, sub), c in self.cells.items() if c.blob]
+        self.send(src, "POOL_PULL_ACK", (token, cells))
+
+    def _on_pool_push(self, src: str, body: Any) -> None:
+        """Install re-replicated state (highest valid ts wins) and start
+        serving READs."""
+        if self.manager is not None and src != self.manager:
+            return
+        token, cells = body
+        for key, blob in cells:
+            key = tuple(key)
+            new = _unpack(blob)
+            if new is None:
+                continue
+            cur = _unpack(self.cells.get(key, _Cell()).blob)
+            if cur is None or new[0] > cur[0]:
+                cell = self.cells.setdefault(key, _Cell())
+                cell.write(blob, self.sim.now, 0.0)
+        self.serving = True
+        self.send(src, "POOL_PUSH_ACK", token)
+
     def memory_bytes(self) -> int:
-        return sum(len(c.blob) + len(c.prev) for c in self.cells.values())
+        """Occupied disaggregated memory: one RDMA buffer per sub-register.
+        WRITEs overwrite it in place (which is why READs can tear) —
+        ``_Cell.prev`` is torn-read modeling, not allocated memory."""
+        return sum(len(c.blob) for c in self.cells.values())
+
+
+class _PoolManager(Node):
+    """Lease + reconfiguration orchestrator for one :class:`MemoryPool`.
+
+    Models the paper's assumption that disaggregated memory is provided by
+    the infrastructure: the manager is a crash-free control-plane process
+    (not on any data path) that grants leases and performs state transfer
+    when a member is replaced.
+    """
+
+    handling_cost = 0.3
+
+    def __init__(self, sim: Simulator, net: NetworkModel, registry,
+                 pid: str, pool: "MemoryPool"):
+        super().__init__(sim, net, registry, pid)
+        self.pool = pool
+        self._last_ack: Dict[str, float] = {}
+        self._sync: Dict[int, dict] = {}
+        self._tok = 0
+        self._leasing = False
+        self.suspected: List[Tuple[float, str]] = []
+        self._suspect_live: set = set()
+        self.handle("LEASE_ACK", self._on_lease_ack)
+        self.handle("POOL_PULL_ACK", self._on_pull_ack)
+        self.handle("POOL_PUSH_ACK", self._on_push_ack)
+
+    # ------------------------------------------------------------- leases
+    def start_leases(self) -> None:
+        if self._leasing:
+            return
+        self._leasing = True
+        for m in self.pool.members:
+            self._last_ack[m] = self.sim.now
+        self._tick()
+
+    def stop_leases(self) -> None:
+        self._leasing = False
+
+    def _tick(self) -> None:
+        if self._leasing:
+            now = self.sim.now
+            for m in list(self.pool.members):
+                self.send(m, "LEASE_PING", now)
+                expiry = self._last_ack.setdefault(m, now) + self.pool.lease_us
+                if now > expiry:
+                    self._suspect(m)
+            self.timer(self.pool.lease_us / 2, self._tick,
+                       note=f"{self.pid}.lease")
+
+    def _on_lease_ack(self, src: str, body: Any) -> None:
+        self._last_ack[src] = self.sim.now
+        self._suspect_live.discard(src)
+
+    def _suspect(self, pid: str) -> None:
+        if pid not in self._suspect_live:     # one suspicion per episode
+            self._suspect_live.add(pid)
+            self.suspected.append((self.sim.now, pid))
+        if self.pool.auto_reconfigure:
+            self.pool.reconfigure(pid)
+
+    # ---------------------------------------------------- reconfiguration
+    def begin_sync(self, dead: str, fresh: str, survivors: List[str],
+                   on_done: Callable[[], None],
+                   on_abort: Callable[[], None]) -> None:
+        self._tok += 1
+        tok = self._tok
+        self._sync[tok] = {"resps": [], "fresh": fresh, "dead": dead,
+                           "pushed": False, "cb": on_done,
+                           "need": self.pool.f_m + 1}
+        for s in survivors:
+            self.send(s, "POOL_PULL", tok)
+        # A sync that cannot gather f_m+1 pull acks (fault budget transiently
+        # exceeded) must not wedge the pool: abort and let the caller retry.
+        def expire() -> None:
+            if self._sync.pop(tok, None) is not None:
+                on_abort()
+
+        self.timer(self.pool.sync_timeout_us, expire, note=f"{self.pid}.sync")
+
+    def _on_pull_ack(self, src: str, body: Any) -> None:
+        tok, cells = body
+        st = self._sync.get(tok)
+        if st is None or st["pushed"]:
+            return
+        st["resps"].append(cells)
+        if len(st["resps"]) < st["need"]:
+            return
+        # merge: highest valid timestamp per (owner, reg, sub).  f_m+1
+        # responses intersect every completed WRITE's f_m+1 ack quorum, so
+        # the merge contains every acknowledged value.
+        st["pushed"] = True
+        merged: Dict[tuple, Tuple[int, bytes]] = {}
+        for cells in st["resps"]:
+            for key, blob in cells:
+                key = tuple(key)
+                v = _unpack(blob)
+                if v is None:
+                    continue
+                if key not in merged or v[0] > merged[key][0]:
+                    merged[key] = (v[0], blob)
+        self.send(st["fresh"], "POOL_PUSH",
+                  (tok, [(k, blob) for k, (_ts, blob) in merged.items()]))
+
+    def _on_push_ack(self, src: str, body: Any) -> None:
+        st = self._sync.pop(body, None)
+        if st is not None:
+            st["cb"]()
+
+
+class MemoryPool:
+    """A pool of 2f_m+1 crash-injectable disaggregated-memory nodes with
+    lease-based reconfiguration (see module docstring).
+
+    The pool object doubles as the *directory* clients consult for the
+    current membership (``members`` / ``epoch``) — the sim-level stand-in
+    for the provider's membership service.
+    """
+
+    def __init__(self, sim: Simulator, net: NetworkModel, registry,
+                 f_m: int = 1, name: str = "pool0",
+                 prefix: Optional[str] = None,
+                 write_duration_us: float = 0.4,
+                 lease_us: float = 200.0,
+                 auto_reconfigure: bool = False,
+                 sync_timeout_us: float = 2_000.0):
+        self.sim = sim
+        self.net = net
+        self.registry = registry
+        self.f_m = f_m
+        self.name = name
+        self.prefix = prefix if prefix is not None else f"{name}/m"
+        self.write_duration_us = write_duration_us
+        self.lease_us = lease_us
+        self.auto_reconfigure = auto_reconfigure
+        self.sync_timeout_us = sync_timeout_us
+        self.epoch = 0
+        self.nodes: Dict[str, MemoryNode] = {}
+        self.members: List[str] = []
+        self._next_id = 0
+        self._reconfiguring = False
+        #: (time, dead_pid, fresh_pid) per completed reconfiguration
+        self.reconfigurations: List[Tuple[float, str, str]] = []
+        #: (time, dead_pid, fresh_pid) per timed-out, rolled-back sync
+        self.aborted_syncs: List[Tuple[float, str, str]] = []
+        self.manager = _PoolManager(sim, net, registry, f"{self.prefix}gr",
+                                    self)
+        for _ in range(2 * f_m + 1):
+            self.members.append(self._spawn(serving=True).pid)
+        if auto_reconfigure and lease_us > 0:
+            self.manager.start_leases()
+
+    def _spawn(self, serving: bool) -> MemoryNode:
+        pid = f"{self.prefix}{self._next_id}"
+        self._next_id += 1
+        node = MemoryNode(self.sim, self.net, self.registry, pid,
+                          write_duration_us=self.write_duration_us,
+                          manager=self.manager.pid, serving=serving)
+        self.nodes[pid] = node
+        return node
+
+    # ------------------------------------------------------ fault surface
+    def crash_node(self, pid: str) -> None:
+        self.nodes[pid].crash()
+
+    def recover_node(self, pid: str) -> None:
+        self.nodes[pid].recover()
+
+    def crashed_members(self) -> List[str]:
+        return [m for m in self.members if self.nodes[m].crashed]
+
+    # ---------------------------------------------------- reconfiguration
+    def reconfigure(self, dead: Optional[str] = None,
+                    cb: Optional[Callable[[], None]] = None) -> bool:
+        """Replace ``dead`` (default: first crashed member) with a fresh
+        node: pull state from f_m+1 survivors, push the highest-timestamp
+        merge to the fresh node, then swap it into the membership.  Returns
+        False when there is nothing to do / a swap is already in flight.
+        A sync that cannot complete within ``sync_timeout_us`` (e.g. the
+        crash budget is transiently exceeded and f_m+1 survivors cannot
+        answer) is aborted — the pool stays on the old membership and a
+        later ``reconfigure`` (or the next lease tick) retries."""
+        if self._reconfiguring:
+            return False
+        if dead is None:
+            crashed = self.crashed_members()
+            if not crashed:
+                return False
+            dead = crashed[0]
+        if dead not in self.members:
+            return False
+        self._reconfiguring = True
+        fresh = self._spawn(serving=False)
+        survivors = [m for m in self.members if m != dead]
+
+        def done() -> None:
+            idx = self.members.index(dead)
+            self.members[idx] = fresh.pid
+            self.epoch += 1
+            self._reconfiguring = False
+            self.reconfigurations.append((self.sim.now, dead, fresh.pid))
+            if cb is not None:
+                cb()
+
+        def abort() -> None:
+            # discard the never-served replacement and unwedge the pool
+            self.nodes.pop(fresh.pid, None)
+            self.sim.processes.pop(fresh.pid, None)
+            self._reconfiguring = False
+            self.aborted_syncs.append((self.sim.now, dead, fresh.pid))
+
+        self.manager.begin_sync(dead, fresh.pid, survivors, done, abort)
+        return True
+
+    # --------------------------------------------------------- accounting
+    def member_nodes(self) -> List[MemoryNode]:
+        return [self.nodes[m] for m in self.members]
+
+    def memory_bytes(self) -> int:
+        """Occupancy of the pool's *current* members (Table 2: must stay
+        under 1 MiB per pool)."""
+        return sum(n.memory_bytes() for n in self.member_nodes())
+
+
+@dataclass
+class _StaticPool:
+    """Legacy fixed-membership view: a bare pid list wrapped to look like a
+    pool (no manager, no reconfiguration)."""
+    members: List[str]
+    name: str = "static"
+    epoch: int = 0
 
 
 class RegisterClient:
-    """Reliable SWMR regular register operations for one node (§6.1)."""
+    """Reliable SWMR regular register operations for one node (§6.1).
 
-    def __init__(self, node: Node, mem_nodes: List[str], f_m: int,
-                 slot_bytes: int = 128):
-        assert len(mem_nodes) >= 2 * f_m + 1
+    ``mem`` may be a bare list of memory-node pids (legacy static
+    deployment), one :class:`MemoryPool`, or a list of pools — register
+    keys are then sharded ``crc32(owner:reg) % n_pools``.  Membership is
+    re-read from the pool directory at every operation, so reconfigurations
+    are picked up without any client-side protocol change.
+    """
+
+    def __init__(self, node: Node, mem, f_m: int, slot_bytes: int = 128):
         self.node = node
-        self.mem_nodes = mem_nodes
+        self.pools = self._normalize(mem)
+        for p in self.pools:
+            assert len(p.members) >= 2 * f_m + 1
         self.quorum = f_m + 1
         self.slot_bytes = slot_bytes
         self._wts: Dict[str, int] = {}
         self._last_write: Dict[str, float] = {}
         self._pending: Dict[int, dict] = {}
         self._token = 0
+        self.stats = {"read_attempts": 0, "read_retries": 0,
+                      "reads_exhausted": 0}
         node.handle("REG_WRITE_ACK", self._on_write_ack)
         node.handle("REG_READ_ACK", self._on_read_ack)
+
+    @staticmethod
+    def _normalize(mem) -> List[Any]:
+        if isinstance(mem, MemoryPool):
+            return [mem]
+        mem = list(mem)
+        assert mem, "need at least one memory node / pool"
+        if isinstance(mem[0], str):
+            return [_StaticPool(members=mem)]
+        return mem
+
+    # ------------------------------------------------------------ routing
+    @property
+    def n_shards(self) -> int:
+        return len(self.pools)
+
+    def pool_for(self, owner: str, reg: str):
+        """Stable shard routing of register keys across pools."""
+        if len(self.pools) == 1:
+            return self.pools[0]
+        h = zlib.crc32(f"{owner}:{reg}".encode())
+        return self.pools[h % len(self.pools)]
+
+    @property
+    def mem_nodes(self) -> List[str]:
+        """Legacy single-pool view of the current membership."""
+        return list(self.pools[0].members)
 
     # ------------------------------------------------------------- WRITE
     def write(self, reg: str, value: bytes, cb: Callable[[], None]) -> None:
         """WRITE my register ``reg`` (owner = this node).  Completes at a
-        majority of memory nodes.  Enforces the δ cooldown between WRITEs to
-        the same register (§6.1) so readers can always find a complete
-        sub-register."""
+        majority of the owning pool's memory nodes.  Enforces the δ cooldown
+        between WRITEs to the same register (§6.1) so readers can always
+        find a complete sub-register."""
         now = self.node.sim.now
         delta = self.node.netp.delta_us
         earliest = self._last_write.get(reg, -delta) + delta
@@ -158,7 +518,7 @@ class RegisterClient:
         self._token += 1
         tok = self._token
         self._pending[tok] = {"kind": "w", "acks": 0, "cb": cb, "done": False}
-        for m in self.mem_nodes:
+        for m in self.pool_for(self.node.pid, reg).members:
             self.node.send(m, "REG_WRITE", (self.node.pid, reg, sub, blob, tok))
 
     def _on_write_ack(self, src: str, body: Any) -> None:
@@ -183,14 +543,18 @@ class RegisterClient:
             def cb(val, byz):
                 self.node.sim.trace.append(("smwr", t0, self.node.sim.now))
                 inner_cb(val, byz)
+        self._start_read(owner, reg, cb, attempt=1)
+
+    def _start_read(self, owner: str, reg: str, cb, attempt: int) -> None:
+        self.stats["read_attempts"] += 1
         self._token += 1
         tok = self._token
         self._pending[tok] = {
             "kind": "r", "resps": [], "cb": cb, "done": False,
             "start": self.node.sim.now, "owner": owner, "reg": reg,
-            "attempt": 1,
+            "attempt": attempt,
         }
-        for m in self.mem_nodes:
+        for m in self.pool_for(owner, reg).members:
             self.node.send(m, "REG_READ", (owner, reg, tok))
 
     def _on_read_ack(self, src: str, body: Any) -> None:
@@ -215,17 +579,28 @@ class RegisterClient:
             ok = [v for v in vals if v is not None]
             if len(ok) == 2 and ok[0][0] == ok[1][0]:
                 byz = True  # both sub-registers with the same timestamp
-            if not ok and took < delta and any(len(b) >= BLOB_HEADER for b in blobs):
-                byz = True  # torn/bogus on both subs within δ → Byzantine
+            if (not ok and took < delta
+                    and all(len(b) >= BLOB_HEADER for b in blobs)):
+                # Both sub-registers carry data yet neither validates within
+                # δ — an honest writer can tear at most one sub-register per
+                # δ window, so the owner is Byzantine.  (An *empty* second
+                # sub-register means a READ overlapping the first-ever
+                # WRITE: regularity allows ⊥, no verdict.)
+                byz = True
             for v in ok:
                 if best is None or v[0] > best[0]:
                     best = v
         if best is None and not byz:
             blank = all(not b for blobs in st["resps"] for b in blobs)
             if took >= delta and not blank:
-                # inconclusive slow read — retry (§6.1)
-                self.read(st["owner"], st["reg"],
-                          st["cb"]) if st["attempt"] < 8 else st["cb"](None, False)
+                # inconclusive slow read — retry, capped end-to-end (§6.1)
+                if st["attempt"] < MAX_READ_ATTEMPTS:
+                    self.stats["read_retries"] += 1
+                    self._start_read(st["owner"], st["reg"], st["cb"],
+                                     st["attempt"] + 1)
+                else:
+                    self.stats["reads_exhausted"] += 1
+                    st["cb"](None, False)
                 return
         st["cb"](best, byz)
 

@@ -14,7 +14,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 from repro.core import crypto
 from repro.core.consensus import App, ConsensusConfig, UbftReplica
 from repro.core.node import Node
-from repro.core.registers import MemoryNode
+from repro.core.registers import MemoryNode, MemoryPool
 from repro.sim.events import Simulator
 from repro.sim.net import NetParams, NetworkModel
 
@@ -66,8 +66,13 @@ class Cluster:
     net: NetworkModel
     registry: crypto.KeyRegistry
     replicas: List[UbftReplica]
-    mem_nodes: List[MemoryNode]
+    pools: List[MemoryPool]
     clients: List[Client] = field(default_factory=list)
+
+    @property
+    def mem_nodes(self) -> List[MemoryNode]:
+        """Current TCB membership across all pools (legacy flat view)."""
+        return [n for p in self.pools for n in p.member_nodes()]
 
     @property
     def replica_pids(self) -> List[str]:
@@ -125,8 +130,14 @@ def build_cluster(app_factory: Callable[[], App], f: int = 1, f_m: int = 1,
                   cfg: Optional[ConsensusConfig] = None,
                   params: Optional[NetParams] = None,
                   seed: int = 0,
-                  replica_cls=UbftReplica) -> Cluster:
-    """Assemble a 2f+1-replica, 2f_m+1-memory-node uBFT deployment."""
+                  replica_cls=UbftReplica,
+                  n_pools: int = 1,
+                  auto_reconfigure: bool = False,
+                  lease_us: float = 200.0) -> Cluster:
+    """Assemble a 2f+1-replica uBFT deployment over ``n_pools`` memory
+    pools of 2f_m+1 nodes each (register keys are sharded across pools;
+    ``auto_reconfigure`` turns on lease-based replacement of crashed
+    memory nodes)."""
     sim = Simulator(seed=seed)
     net = NetworkModel(sim, params)
     registry = crypto.KeyRegistry()
@@ -134,13 +145,17 @@ def build_cluster(app_factory: Callable[[], App], f: int = 1, f_m: int = 1,
     cfg.f, cfg.f_m = f, f_m
 
     replica_pids = [f"r{i}" for i in range(2 * f + 1)]
-    mem_pids = [f"m{i}" for i in range(2 * f_m + 1)]
-
-    mem_nodes = [MemoryNode(sim, net, registry, m) for m in mem_pids]
+    # pool 0 keeps the historical m0/m1/... pids; extra shards are p<i>m<j>
+    pools = [
+        MemoryPool(sim, net, registry, f_m=f_m, name=f"pool{i}",
+                   prefix=("m" if i == 0 else f"p{i}m"),
+                   auto_reconfigure=auto_reconfigure, lease_us=lease_us)
+        for i in range(n_pools)
+    ]
     replicas = [
-        replica_cls(sim, net, registry, pid, replica_pids, mem_pids,
+        replica_cls(sim, net, registry, pid, replica_pids, pools,
                     app_factory(), cfg)
         for pid in replica_pids
     ]
     return Cluster(sim=sim, net=net, registry=registry,
-                   replicas=replicas, mem_nodes=mem_nodes)
+                   replicas=replicas, pools=pools)

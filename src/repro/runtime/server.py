@@ -53,11 +53,18 @@ class ReplicatedServer:
     cluster: Cluster
 
     @classmethod
-    def build(cls, decode_fn, f: int = 1,
+    def build(cls, decode_fn, f: int = 1, f_m: int = 1, n_pools: int = 1,
+              auto_reconfigure: bool = False,
               cfg: Optional[ConsensusConfig] = None) -> "ReplicatedServer":
+        """``n_pools`` shards the serving cluster's register keys over that
+        many disaggregated-memory pools (the paper's "shared by many
+        replicated applications" deployment); ``auto_reconfigure`` enables
+        lease-based replacement of crashed memory nodes underneath a
+        running token server."""
         cfg = cfg or ConsensusConfig(max_request_bytes=4096)
         cluster = build_cluster(lambda: TokenServerApp(decode_fn), f=f,
-                                cfg=cfg)
+                                f_m=f_m, n_pools=n_pools,
+                                auto_reconfigure=auto_reconfigure, cfg=cfg)
         return cls(cluster=cluster)
 
     def generate(self, client, session: str, prompt: List[int], n: int,

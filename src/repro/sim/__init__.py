@@ -9,6 +9,8 @@ Byzantine adversaries.
 """
 
 from repro.sim.events import Event, Process, Simulator
+from repro.sim.faults import FaultEvent, FaultInjector, FaultSchedule
 from repro.sim.net import NetworkModel, NetParams
 
-__all__ = ["Event", "Process", "Simulator", "NetworkModel", "NetParams"]
+__all__ = ["Event", "Process", "Simulator", "NetworkModel", "NetParams",
+           "FaultEvent", "FaultInjector", "FaultSchedule"]

@@ -1,0 +1,206 @@
+"""Deterministic fault-schedule driver: seeded (time, action, target) events.
+
+A :class:`FaultSchedule` is a sorted list of :class:`FaultEvent`\\ s; the
+:class:`FaultInjector` installs them on a simulator and applies them at
+virtual time, resolving targets against the live process table, the network
+model, and the memory pools:
+
+==============  =======================================  =====================
+action          target                                   effect
+==============  =======================================  =====================
+``crash``       process pid                              ``Process.crash()``
+``recover``     process pid                              ``Process.recover()``
+``partition``   ``(src, dst)`` pid pair                  drop both directions
+``heal``        ``(src, dst)`` pair or ``None`` (= all)  restore link(s)
+``reconfigure`` pool name / index / ``(pool, dead_pid)``  ``MemoryPool.reconfigure``
+==============  =======================================  =====================
+
+Everything is driven by one seeded RNG, so a schedule is exactly
+reproducible from ``(seed, horizon, targets)`` — the property the
+fault-matrix tests and the ``benchmarks/fault_scenarios.py`` sweep rely on.
+:meth:`FaultSchedule.seeded` generates *sensible* adversaries: it never
+crashes more than the supplied fault budgets, recovers or reconfigures what
+it crashed, and always heals what it partitions.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+ACTIONS = ("crash", "recover", "partition", "heal", "reconfigure")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    time: float
+    action: str
+    target: Any = None
+
+    def __post_init__(self):
+        if self.action not in ACTIONS:
+            raise ValueError(f"unknown fault action {self.action!r}")
+
+
+def _ev_key(ev: FaultEvent) -> Tuple[float, str]:
+    return (ev.time, ev.action)
+
+
+class FaultSchedule:
+    """An ordered, deterministic list of fault events."""
+
+    def __init__(self, events: Iterable[FaultEvent] = (),
+                 seed: Optional[int] = None):
+        self.events: List[FaultEvent] = sorted(events, key=_ev_key)
+        self.seed = seed
+
+    def __iter__(self):
+        return iter(self.events)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def add(self, time: float, action: str, target: Any = None
+            ) -> "FaultSchedule":
+        self.events.append(FaultEvent(time, action, target))
+        self.events.sort(key=_ev_key)
+        return self
+
+    @classmethod
+    def seeded(cls, seed: int, *, horizon_us: float,
+               memory: Sequence[str] = (), pools: Sequence[Any] = (),
+               replicas: Sequence[str] = (),
+               partitions: Sequence[Tuple[str, str]] = (),
+               n_memory_crashes: int = 1, n_replica_crashes: int = 0,
+               n_partitions: int = 0, reconfigure: bool = False,
+               recover: bool = True) -> "FaultSchedule":
+        """Generate a deterministic schedule inside ``(0.1, 0.8)·horizon``.
+
+        ``memory`` lists crash-eligible memory-node pids (pass at most f_m
+        per pool to stay within the fault budget); ``replicas`` likewise
+        (at most f).  ``reconfigure`` replaces each crashed memory node via
+        its pool (resolved by pid prefix) instead of recovering it.
+        ``partitions`` lists candidate pid pairs for ``n_partitions``
+        partition+heal episodes.
+        """
+        rng = np.random.default_rng(seed)
+        ev: List[FaultEvent] = []
+
+        def t(lo: float = 0.1, hi: float = 0.8) -> float:
+            return float(rng.uniform(lo * horizon_us, hi * horizon_us))
+
+        mem = list(memory)
+        for pid in list(rng.permutation(mem))[:n_memory_crashes]:
+            t0 = t()
+            ev.append(FaultEvent(t0, "crash", str(pid)))
+            if reconfigure:
+                pool = _pool_of(str(pid), pools)
+                ev.append(FaultEvent(t0 + t(0.05, 0.15), "reconfigure",
+                                     (pool, str(pid))))
+            elif recover:
+                ev.append(FaultEvent(t0 + t(0.05, 0.15), "recover", str(pid)))
+        for pid in list(rng.permutation(list(replicas)))[:n_replica_crashes]:
+            ev.append(FaultEvent(t(), "crash", str(pid)))
+        pairs = list(partitions)
+        for i in list(rng.permutation(len(pairs)))[:n_partitions]:
+            a, b = pairs[int(i)]
+            t0 = t()
+            ev.append(FaultEvent(t0, "partition", (a, b)))
+            ev.append(FaultEvent(t0 + t(0.05, 0.15), "heal", (a, b)))
+        return cls(ev, seed=seed)
+
+
+def _pool_of(pid: str, pools: Sequence[Any]):
+    """Pool name owning ``pid``, or None — the injector then resolves the
+    pool by the dead pid at apply time (no silent pool-0 fallback)."""
+    for p in pools:
+        if pid in getattr(p, "members", ()) or pid in getattr(p, "nodes", ()):
+            return getattr(p, "name", p)
+    return None
+
+
+class FaultInjector:
+    """Applies a :class:`FaultSchedule` to a simulator.
+
+    ``pools`` enables ``reconfigure`` targets and lets ``crash``/``recover``
+    hit replacement nodes that only exist inside a pool.  Every applied
+    event is recorded in ``log`` as ``(time, action, target)``; events that
+    turn out to be no-ops (e.g. a ``reconfigure`` racing a lease-driven one)
+    land in ``skipped`` instead, so tests asserting on ``log`` never count
+    a fault that did not actually happen.
+    """
+
+    def __init__(self, sim, net, pools: Sequence[Any] = ()):
+        self.sim = sim
+        self.net = net
+        self.pools = list(pools)
+        self.log: List[Tuple[float, str, Any]] = []
+        self.skipped: List[Tuple[float, str, Any]] = []
+
+    @classmethod
+    def for_cluster(cls, cluster, schedule: Optional[FaultSchedule] = None
+                    ) -> "FaultInjector":
+        inj = cls(cluster.sim, cluster.net, getattr(cluster, "pools", ()))
+        if schedule is not None:
+            inj.install(schedule)
+        return inj
+
+    def install(self, schedule: FaultSchedule) -> "FaultInjector":
+        for ev in schedule:
+            self.sim.at(ev.time, lambda ev=ev: self.apply(ev),
+                        note=f"fault.{ev.action}")
+        return self
+
+    # ------------------------------------------------------------ applying
+    def apply(self, ev: FaultEvent) -> None:
+        applied = getattr(self, f"_do_{ev.action}")(ev.target)
+        rec = (self.sim.now, ev.action, ev.target)
+        (self.skipped if applied is False else self.log).append(rec)
+
+    def _process(self, pid: str):
+        proc = self.sim.processes.get(pid)
+        if proc is None:
+            raise KeyError(f"fault target {pid!r} is not a live process")
+        return proc
+
+    def _do_crash(self, pid: str) -> None:
+        self._process(pid).crash()
+
+    def _do_recover(self, pid: str) -> None:
+        self._process(pid).recover()
+
+    def _do_partition(self, target: Tuple[str, str]) -> None:
+        a, b = target
+        self.net.partition(a, b, forced=True)
+        self.net.partition(b, a, forced=True)
+
+    def _do_heal(self, target: Optional[Tuple[str, str]]) -> None:
+        if target is None:
+            self.net.heal()
+            return
+        a, b = target
+        self.net.heal_link(a, b)
+        self.net.heal_link(b, a)
+
+    def _resolve_pool(self, ref: Any, dead: Optional[str]):
+        if isinstance(ref, int):
+            return self.pools[ref]
+        for p in self.pools:
+            if getattr(p, "name", None) == ref or p is ref:
+                return p
+        if ref is None and dead is not None:
+            for p in self.pools:
+                if dead in getattr(p, "members", ()):
+                    return p
+        if ref is None and len(self.pools) == 1:
+            return self.pools[0]
+        raise KeyError(f"cannot resolve pool {ref!r} (dead={dead!r})")
+
+    def _do_reconfigure(self, target: Any) -> bool:
+        dead = None
+        if isinstance(target, tuple):
+            target, dead = target
+        pool = self._resolve_pool(target, dead)
+        return pool.reconfigure(dead)

@@ -58,6 +58,9 @@ class NetworkModel:
         # partition modeling; applied only before sim.gst unless forced).
         self.link_delay: Dict[Tuple[str, str], float] = {}
         self.partitioned: set = set()
+        # Forced partitions drop regardless of GST (fault-schedule driver:
+        # an operator-visible network fault, not pre-GST asynchrony).
+        self.forced: set = set()
         self.bytes_sent: int = 0
         self.msgs_sent: int = 0
 
@@ -77,7 +80,8 @@ class NetworkModel:
         """One-way message.  If ``deliver`` is given it is invoked at arrival
         time instead of the default ``Process.deliver`` (used by the circular
         buffer primitive to model slot overwrites)."""
-        if (src, dst) in self.partitioned and self.sim.now < self.sim.gst:
+        if (src, dst) in self.forced or (
+                (src, dst) in self.partitioned and self.sim.now < self.sim.gst):
             return  # dropped; retransmission layers must cope
         self.bytes_sent += size
         self.msgs_sent += 1
@@ -102,9 +106,17 @@ class NetworkModel:
     def delay_link(self, src: str, dst: str, extra_us: float) -> None:
         self.link_delay[(src, dst)] = extra_us
 
-    def partition(self, src: str, dst: str) -> None:
+    def partition(self, src: str, dst: str, forced: bool = False) -> None:
         self.partitioned.add((src, dst))
+        if forced:
+            self.forced.add((src, dst))
+
+    def heal_link(self, src: str, dst: str) -> None:
+        self.partitioned.discard((src, dst))
+        self.forced.discard((src, dst))
+        self.link_delay.pop((src, dst), None)
 
     def heal(self) -> None:
         self.partitioned.clear()
+        self.forced.clear()
         self.link_delay.clear()

@@ -1,6 +1,33 @@
 import os
 import sys
 
+import pytest
+
 # Tests and benches see ONE device; only the dry-run forces 512 (and sets its
 # own XLA_FLAGS before any jax import — see repro/launch/dryrun.py).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture
+def pooled_cluster():
+    """Factory for a kvstore uBFT cluster over sharded memory pools —
+    the shared rig for the fault-schedule matrix."""
+    from repro.apps.kvstore import KVStoreApp
+    from repro.core.smr import build_cluster
+
+    def make(n_pools=2, f=1, f_m=1, seed=0, cfg=None, **kw):
+        return build_cluster(KVStoreApp, f=f, f_m=f_m, cfg=cfg, seed=seed,
+                             n_pools=n_pools, **kw)
+
+    return make
+
+
+@pytest.fixture
+def fault_injector():
+    """Factory wiring a FaultInjector (with pool resolution) to a cluster."""
+    from repro.sim.faults import FaultInjector
+
+    def make(cluster, schedule=None):
+        return FaultInjector.for_cluster(cluster, schedule)
+
+    return make

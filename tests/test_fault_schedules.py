@@ -1,0 +1,198 @@
+"""End-to-end agreement under combined, seeded fault schedules.
+
+The matrix crosses {f_m memory-node crashes, mid-broadcast pool
+reconfiguration, replica crash + memory crash, partition + heal} with
+deterministic seeds, and asserts after every run that
+
+* kvstore client histories stay consistent: every acknowledged write is
+  present on every live replica with its last-acknowledged value and the
+  live replicas' stores are identical (no lost / reordered acked writes);
+* CTBcast delivery completed (the workload runs with ``slow_mode="always"``
+  and the fast path disabled, so every slot crosses the disaggregated
+  memory that the faults are hitting);
+* ``memory_bytes()`` stays bounded: < 1 MiB per pool (Table 2) and the
+  replica-local total stays finite.
+"""
+
+import pytest
+
+from repro.apps.kvstore import KVStoreApp, set_req
+from repro.core.consensus import ConsensusConfig
+from repro.core.registers import POOL_MEMORY_BUDGET as POOL_BUDGET
+from repro.core.smr import build_cluster
+from repro.sim.faults import FaultEvent, FaultInjector, FaultSchedule
+
+
+def _registers_cfg(**kw):
+    """Every consensus slot crosses disaggregated memory."""
+    base = dict(t=16, window=16, slow_mode="always", ctb_fast_enabled=False,
+                view_timeout_us=20_000.0)
+    base.update(kw)
+    return ConsensusConfig(**base)
+
+
+def _run_workload(cluster, n_reqs=16, timeout=600_000_000):
+    client = cluster.new_client()
+    acked = {}
+    for i in range(n_reqs):
+        k, v = b"k%d" % (i % 5), b"v%d" % i
+        r, _ = cluster.run_request(client, set_req(k, v), timeout=timeout)
+        assert r == b"OK"
+        acked[k] = v
+    return acked
+
+
+def _assert_safe(cluster, acked):
+    cluster.sim.run(until=cluster.sim.now + 100_000)
+    alive = [r for r in cluster.replicas if not r.crashed]
+    assert len(alive) >= 2
+    for rep in alive:
+        for k, v in acked.items():
+            assert rep.app.store.get(k) == v, (rep.pid, k, v)
+    for a, b in zip(alive, alive[1:]):
+        assert a.app.store == b.app.store
+    for p in cluster.pools:
+        assert p.memory_bytes() < POOL_BUDGET, p.name
+    assert alive[0].memory_bytes()["total"] < 64 * 2**20
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+def test_fm_memory_crashes_per_pool(pooled_cluster, fault_injector, seed):
+    """f_m crashes in *each* pool mid-workload: quorums survive, histories
+    stay consistent."""
+    c = pooled_cluster(n_pools=2, seed=seed, cfg=_registers_cfg())
+    sched = FaultSchedule.seeded(
+        seed, horizon_us=3000.0, memory=["m0", "p1m2"], pools=c.pools,
+        n_memory_crashes=2, recover=True)
+    assert sum(e.action == "crash" for e in sched) == 2
+    inj = fault_injector(c, sched)
+    acked = _run_workload(c, n_reqs=16)
+    _assert_safe(c, acked)
+    assert len(inj.log) == len(sched)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_mid_broadcast_pool_reconfiguration(pooled_cluster, fault_injector,
+                                            seed):
+    """Acceptance: up to f_m memory-node crashes plus one mid-broadcast
+    pool reconfiguration — CTBcast delivery (slow path over registers)
+    completes with agreement/validity intact and < 1 MiB per pool."""
+    c = pooled_cluster(n_pools=2, seed=seed, cfg=_registers_cfg())
+    sched = FaultSchedule.seeded(
+        seed, horizon_us=3000.0, memory=["m0"], pools=c.pools,
+        n_memory_crashes=1, reconfigure=True)
+    fault_injector(c, sched)
+    acked = _run_workload(c, n_reqs=16)
+    _assert_safe(c, acked)
+    assert len(c.pools[0].reconfigurations) == 1
+    dead, fresh = c.pools[0].reconfigurations[0][1:]
+    assert dead == "m0" and fresh in c.pools[0].members
+    # every replica delivered every decided slot identically
+    decided = [dict(r.decided) for r in c.replicas if not r.crashed]
+    common = set(decided[0])
+    for d in decided[1:]:
+        common &= set(d)
+    assert common, "no slots decided"
+
+
+def test_replica_crash_plus_memory_crash(pooled_cluster, fault_injector):
+    """Double fault: a follower replica and a memory node at once."""
+    c = pooled_cluster(n_pools=2, seed=11, cfg=_registers_cfg())
+    sched = (FaultSchedule()
+             .add(800.0, "crash", "r2")
+             .add(900.0, "crash", "m1")
+             .add(2500.0, "reconfigure", ("pool0", "m1")))
+    fault_injector(c, sched)
+    acked = _run_workload(c, n_reqs=14, timeout=600_000_000)
+    _assert_safe(c, acked)
+    assert c.pools[0].reconfigurations
+
+
+def test_partition_and_heal(pooled_cluster, fault_injector):
+    """A forced replica-link partition heals; no acked write is lost."""
+    c = pooled_cluster(n_pools=2, seed=5,
+                       cfg=_registers_cfg(view_timeout_us=50_000.0))
+    sched = (FaultSchedule()
+             .add(500.0, "partition", ("r1", "r2"))
+             .add(2500.0, "heal", ("r1", "r2")))
+    fault_injector(c, sched)
+    acked = _run_workload(c, n_reqs=12)
+    _assert_safe(c, acked)
+    assert not c.net.forced   # healed
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [1, 2, 4])
+@pytest.mark.parametrize("scenario", ["combined", "auto_lease"])
+def test_seeded_fault_matrix(pooled_cluster, fault_injector, seed, scenario):
+    """Heavier seeded matrix: combined crash+reconfigure+partition
+    schedules, and lease-driven auto-reconfiguration underneath a live
+    workload."""
+    if scenario == "combined":
+        c = pooled_cluster(n_pools=2, seed=seed, cfg=_registers_cfg())
+        sched = FaultSchedule.seeded(
+            seed, horizon_us=5000.0, memory=["m0", "p1m0"], pools=c.pools,
+            replicas=["r1"], partitions=[("r1", "r2")],
+            n_memory_crashes=2, n_replica_crashes=1, n_partitions=1,
+            reconfigure=True)
+        fault_injector(c, sched)
+    else:
+        c = pooled_cluster(n_pools=2, seed=seed, cfg=_registers_cfg(),
+                           auto_reconfigure=True, lease_us=300.0)
+        sched = FaultSchedule([FaultEvent(1000.0, "crash", "m2")])
+        fault_injector(c, sched)
+    acked = _run_workload(c, n_reqs=20)
+    _assert_safe(c, acked)
+    if scenario == "auto_lease":
+        c.sim.run(until=c.sim.now + 5000)
+        assert c.pools[0].reconfigurations, "lease never fired"
+
+
+def test_schedules_are_deterministic():
+    def make(seed, mem):
+        return FaultSchedule.seeded(seed, horizon_us=1000.0, memory=mem,
+                                    n_memory_crashes=2, n_partitions=1,
+                                    partitions=[("a", "b"), ("c", "d")])
+
+    s1, s2 = make(42, ["m0", "m1"]), make(42, ["m0", "m1"])
+    assert s1.events == s2.events   # FaultEvent equality includes targets
+    assert [e.target for e in s1.events] == [e.target for e in s2.events]
+    assert s1.events != make(43, ["m0", "m1"]).events
+    # same seed, different targets must NOT compare equal
+    assert s1.events != make(42, ["x0", "x1"]).events
+
+
+def test_reconfigure_noop_is_logged_as_skipped(pooled_cluster,
+                                               fault_injector):
+    c = pooled_cluster(n_pools=1, seed=0)
+    inj = fault_injector(c, FaultSchedule([
+        FaultEvent(100.0, "reconfigure", ("pool0", None))]))
+    c.sim.run(until=1000.0)
+    assert inj.log == []            # nothing was crashed: nothing applied
+    assert len(inj.skipped) == 1
+
+
+def test_reconfigure_sync_timeout_unwedges_pool():
+    """A reconfiguration started while the crash budget is transiently
+    exceeded cannot gather f_m+1 pull acks; the sync must abort (not wedge
+    the pool forever) and a retry after recovery must succeed."""
+    from repro.core import crypto
+    from repro.core.registers import MemoryPool
+    from repro.sim.events import Simulator
+    from repro.sim.net import NetworkModel
+
+    sim = Simulator(seed=0)
+    pool = MemoryPool(sim, NetworkModel(sim), crypto.KeyRegistry(),
+                      name="pool0", prefix="m", sync_timeout_us=500.0)
+    pool.crash_node("m0")
+    pool.crash_node("m1")           # over budget: only one survivor
+    assert pool.reconfigure("m0") is True
+    sim.run(until=sim.now + 2000.0)
+    assert pool.epoch == 0 and pool.aborted_syncs   # aborted, not wedged
+    assert pool._reconfiguring is False
+    pool.recover_node("m1")
+    done = {}
+    assert pool.reconfigure("m0", cb=lambda: done.setdefault("rc", 1))
+    sim.run(until=sim.now + 2000.0)
+    assert "rc" in done and pool.epoch == 1
+    assert "m0" not in pool.members

@@ -109,6 +109,72 @@ def test_ctbcast_memory_bounded_regardless_of_load(seed, t):
             assert len(q) == t
 
 
+def _register_rig(seed):
+    from repro.core.node import Node
+    from repro.core.registers import MemoryNode, RegisterClient
+    from repro.sim.events import Simulator
+    from repro.sim.net import NetworkModel
+
+    class Host(Node):
+        pass
+
+    sim = Simulator(seed=seed)
+    net = NetworkModel(sim)
+    reg = crypto.KeyRegistry()
+    mems = [MemoryNode(sim, net, reg, f"m{i}") for i in range(3)]
+    wc = RegisterClient(Host(sim, net, reg, "w0"), [m.pid for m in mems], 1)
+    rc = RegisterClient(Host(sim, net, reg, "q0"), [m.pid for m in mems], 1)
+    return sim, wc, rc
+
+
+@settings(**COMMON)
+@given(seed=st.integers(0, 10_000), n_writes=st.integers(1, 5),
+       gaps=st.lists(st.floats(0.0, 30.0), min_size=1, max_size=5),
+       read_times=st.lists(st.floats(0.0, 250.0), min_size=1, max_size=8))
+def test_register_regularity_under_torn_reads(seed, n_writes, gaps,
+                                              read_times):
+    """SWMR regularity under interleaved WRITE/READ timings (§6.1): a READ
+    never returns a value older than the last WRITE that completed before
+    the READ started, never returns a value that was never written, and
+    never fabricates a Byzantine verdict for an honest writer — even when
+    READs land inside write windows and see torn 8-byte splices."""
+    sim, wc, rc = _register_rig(seed)
+    values = {i + 1: b"w%03d" % i * 3 for i in range(n_writes)}
+    acked = []      # completion times, in ts order (writes are chained)
+
+    def write(i=0):
+        if i > 0:
+            acked.append(sim.now)
+        if i < n_writes:
+            gap = gaps[i % len(gaps)]
+            sim.after(gap, lambda: wc.write("reg", values[i + 1],
+                                            lambda: write(i + 1)))
+
+    write()
+    reads = []
+
+    def issue(rt):
+        start = sim.now
+        rc.read("w0", "reg",
+                lambda val, byz: reads.append((start, val, byz)))
+
+    for rt in read_times:
+        sim.after(rt, lambda rt=rt: issue(rt))
+    assert sim.run_until(
+        lambda: len(reads) == len(read_times) and len(acked) == n_writes,
+        timeout=10_000_000)
+    for start, val, byz in reads:
+        assert byz is False, "honest writer flagged Byzantine"
+        floor = sum(1 for t_ack in acked if t_ack < start)
+        if val is None:
+            # ⊥ is regular only while no WRITE had completed
+            assert floor == 0
+        else:
+            ts, data = val
+            assert data == values[ts], "fabricated value"
+            assert ts >= floor, (ts, floor)
+
+
 @settings(deadline=None, max_examples=6,
           suppress_health_check=[HealthCheck.too_slow])
 @given(seed=st.integers(0, 10_000), crash_at=st.integers(1, 6))

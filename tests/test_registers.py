@@ -1,22 +1,24 @@
 """Reliable SWMR regular registers (§6.1): regularity, torn writes,
-Byzantine-writer detection, crash tolerance of memory nodes."""
+Byzantine-writer detection, crash tolerance of memory nodes, retry caps,
+memory pools (lease-based reconfiguration + sharding)."""
 
 import pytest
 
 from repro.core import crypto
 from repro.core.node import Node
-from repro.core.registers import MemoryNode, RegisterClient, _pack, _unpack
+from repro.core.registers import (MAX_READ_ATTEMPTS, MemoryNode, MemoryPool,
+                                  RegisterClient, _Cell, _pack, _unpack)
 from repro.sim.events import Simulator
-from repro.sim.net import NetworkModel
+from repro.sim.net import NetParams, NetworkModel
 
 
 class Host(Node):
     pass
 
 
-def make_rig(n_mem=3, f_m=1, seed=0):
+def make_rig(n_mem=3, f_m=1, seed=0, params=None):
     sim = Simulator(seed=seed)
-    net = NetworkModel(sim)
+    net = NetworkModel(sim, params)
     reg = crypto.KeyRegistry()
     mems = [MemoryNode(sim, net, reg, f"m{i}") for i in range(n_mem)]
     writer = Host(sim, net, reg, "w0")
@@ -24,6 +26,19 @@ def make_rig(n_mem=3, f_m=1, seed=0):
     wc = RegisterClient(writer, [m.pid for m in mems], f_m)
     rc = RegisterClient(reader, [m.pid for m in mems], f_m)
     return sim, mems, writer, reader, wc, rc
+
+
+def make_pool_rig(n_pools=1, f_m=1, seed=0, **pool_kw):
+    sim = Simulator(seed=seed)
+    net = NetworkModel(sim)
+    reg = crypto.KeyRegistry()
+    pools = [MemoryPool(sim, net, reg, f_m=f_m, name=f"pool{i}",
+                        prefix=f"p{i}m", **pool_kw) for i in range(n_pools)]
+    writer = Host(sim, net, reg, "w0")
+    reader = Host(sim, net, reg, "q0")
+    wc = RegisterClient(writer, pools if n_pools > 1 else pools[0], f_m)
+    rc = RegisterClient(reader, pools if n_pools > 1 else pools[0], f_m)
+    return sim, pools, writer, reader, wc, rc
 
 
 def test_write_then_read():
@@ -117,7 +132,6 @@ def test_byzantine_same_timestamp_both_subregisters():
         m.cells.clear()
     # forge: owner writes same ts to both sub-registers directly
     for m in mems:
-        from repro.core.registers import _Cell
         for sub in (0, 1):
             c = _Cell()
             c.write(blob, now=0.0, dur=0.0)
@@ -126,3 +140,139 @@ def test_byzantine_same_timestamp_both_subregisters():
     rc.read("w0", "reg", lambda v, byz: out.setdefault("r", (v, byz)))
     assert sim.run_until(lambda: "r" in out)
     assert out["r"][1] is True   # Byzantine detected
+
+
+def test_first_write_overlap_is_bottom_not_byzantine():
+    """A READ overlapping the very first WRITE sees one torn sub-register
+    next to an *empty* one — regularity allows returning ⊥, but the honest
+    writer must NOT be flagged Byzantine (regression: the old all-invalid
+    check treated any data-bearing response as a verdict)."""
+    sim, mems, w, r, wc, rc = make_rig()
+    garbage = b"\xff" * 40            # torn first write: fails the checksum
+    for m in mems:
+        c = _Cell()
+        c.write(garbage, now=0.0, dur=0.0)
+        m.cells[("w0", "reg", 1)] = c  # sub 1 = first write (ts 1); sub 0 empty
+    out = {}
+    rc.read("w0", "reg", lambda v, byz: out.setdefault("r", (v, byz)))
+    assert sim.run_until(lambda: "r" in out)
+    val, byz = out["r"]
+    assert val is None and byz is False
+
+
+def test_inconclusive_slow_read_gives_up_after_cap():
+    """Satellite: the inconclusive-slow-read retry must be capped
+    end-to-end.  A permanently-torn register (garbage in both sub-registers
+    on every node, δ smaller than the read round-trip so every attempt is
+    'slow') yields ⊥ after exactly MAX_READ_ATTEMPTS attempts instead of
+    retrying forever."""
+    sim, mems, w, r, wc, rc = make_rig(params=NetParams(delta_us=0.1))
+    garbage = b"\xee" * 40
+    for m in mems:
+        for sub in (0, 1):
+            c = _Cell()
+            c.write(garbage, now=0.0, dur=0.0)
+            m.cells[("w0", "reg", sub)] = c
+    out = {}
+    rc.read("w0", "reg", lambda v, byz: out.setdefault("r", (v, byz)))
+    assert sim.run_until(lambda: "r" in out, timeout=1_000_000)
+    assert out["r"] == (None, False)
+    assert rc.stats["read_attempts"] == MAX_READ_ATTEMPTS
+    assert rc.stats["read_retries"] == MAX_READ_ATTEMPTS - 1
+    assert rc.stats["reads_exhausted"] == 1
+
+
+# ---------------------------------------------------------------- pools
+def test_pool_reconfiguration_rereplicates_state():
+    """Crash a member, reconfigure: the replacement must hold the
+    highest-timestamp data *before* serving — proven by crashing a second
+    (old) member afterwards and still reading the latest value."""
+    sim, pools, w, r, wc, rc = make_pool_rig()
+    pool = pools[0]
+    done = {}
+    wc.write("reg", b"precious", lambda: done.setdefault("w", 1))
+    assert sim.run_until(lambda: "w" in done)
+    old = list(pool.members)
+    pool.crash_node(old[0])
+    assert pool.crashed_members() == [old[0]]
+    assert pool.reconfigure(cb=lambda: done.setdefault("rc", sim.now))
+    assert sim.run_until(lambda: "rc" in done)
+    assert pool.epoch == 1
+    fresh = pool.reconfigurations[0][2]
+    assert fresh in pool.members and old[0] not in pool.members
+    assert pool.nodes[fresh].serving
+    # second crash: quorum now *requires* the replacement's copy
+    pool.crash_node(old[1])
+    rc.read("w0", "reg", lambda v, byz: done.setdefault("r", (v, byz)))
+    assert sim.run_until(lambda: "r" in done)
+    val, byz = done["r"]
+    assert not byz and val is not None and val[1] == b"precious"
+
+
+def test_pool_reconfigure_noop_without_crash():
+    sim, pools, w, r, wc, rc = make_pool_rig()
+    assert pools[0].reconfigure() is False
+    assert pools[0].epoch == 0
+
+
+def test_replacement_node_serves_no_reads_before_sync():
+    sim, pools, w, r, wc, rc = make_pool_rig()
+    pool = pools[0]
+    node = pool._spawn(serving=False)
+    out = {}
+    r.handle("REG_READ_ACK", lambda src, body: out.setdefault("ack", body))
+    r.send(node.pid, "REG_READ", ("w0", "reg", 1))
+    sim.run(until=sim.now + 100)
+    assert "ack" not in out   # dropped until POOL_PUSH flips `serving`
+
+
+def test_lease_expiry_auto_reconfigures():
+    """Lease-based detection: with auto_reconfigure on, a crashed member is
+    suspected after its lease expires and replaced without manual action."""
+    sim, pools, w, r, wc, rc = make_pool_rig(auto_reconfigure=True,
+                                             lease_us=100.0)
+    pool = pools[0]
+    dead = pool.members[1]
+    pool.crash_node(dead)
+    assert sim.run_until(lambda: pool.epoch >= 1, timeout=5_000)
+    assert dead not in pool.members
+    assert any(s[1] == dead for s in pool.manager.suspected)
+    done = {}
+    wc.write("reg", b"after-lease", lambda: done.setdefault("w", 1))
+    assert sim.run_until(lambda: "w" in done)
+    rc.read("w0", "reg", lambda v, byz: done.setdefault("r", (v, byz)))
+    assert sim.run_until(lambda: "r" in done)
+    assert done["r"][0][1] == b"after-lease"
+
+
+def test_sharding_spreads_registers_across_pools():
+    """Keys hash across pools; both pools see traffic and reads route back
+    to the right shard."""
+    sim, pools, w, r, wc, rc = make_pool_rig(n_pools=2)
+    assert rc.n_shards == 2
+    done = {"w": 0}
+    regs = [f"reg{i}" for i in range(8)]
+    for name in regs:
+        wc.write(name, name.encode(),
+                 lambda: done.__setitem__("w", done["w"] + 1))
+    assert sim.run_until(lambda: done["w"] >= len(regs), timeout=1_000_000)
+    assert all(p.memory_bytes() > 0 for p in pools)
+    shards = {wc.pool_for("w0", name).name for name in regs}
+    assert shards == {"pool0", "pool1"}
+    out = {}
+    for name in regs:
+        rc.read("w0", name, lambda v, byz, name=name: out.setdefault(name, v))
+    assert sim.run_until(lambda: len(out) == len(regs), timeout=1_000_000)
+    for name in regs:
+        assert out[name] is not None and out[name][1] == name.encode()
+
+
+def test_pool_memory_accounting_counts_current_members():
+    sim, pools, w, r, wc, rc = make_pool_rig()
+    pool = pools[0]
+    done = {}
+    wc.write("reg", b"x" * 64, lambda: done.setdefault("w", 1))
+    assert sim.run_until(lambda: "w" in done)
+    assert pool.memory_bytes() == sum(n.memory_bytes()
+                                      for n in pool.member_nodes())
+    assert pool.memory_bytes() < 2**20
