@@ -1,0 +1,199 @@
+"""Event-engine wall-clock benchmark — the repo's perf trajectory anchor.
+
+Measures *host* performance (events/sec, wall-clock), not simulated time:
+this is the number the zero-re-encode wire layer and the slim event engine
+exist to improve, and the number CI guards against regressions
+(``--check`` compares against ``benchmarks/baseline_engine.json``).
+
+Three tiers, cheapest to fullest:
+
+* ``engine.timer_events_per_sec`` — pure event-loop floor: self-
+  rescheduling timers, no protocol, no network.
+* ``engine.message_events_per_sec`` — the per-message plumbing
+  (Node.send → NetworkModel → deliver → dispatch) on the unreplicated
+  RPC baseline.
+* ``engine.ubft_events_per_sec`` — the full uBFT hot path (batched
+  consensus, CTBcast, TBcast, wire cache) under closed-loop load.
+
+Usage::
+
+    PYTHONPATH=src:. python benchmarks/engine_perf.py [--json PATH] [--check]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import emit, tune_runtime  # noqa: E402
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__),
+                             "baseline_engine.json")
+#: CI fails when events/sec drops more than this fraction below baseline.
+REGRESSION_TOLERANCE = 0.30
+
+
+def bench_timer_engine(n_events: int = 200_000) -> dict:
+    """Pure event-loop floor: chains of self-rescheduling timers."""
+    from repro.sim.events import Simulator
+    sim = Simulator(seed=0)
+    state = {"left": n_events}
+
+    def tick() -> None:
+        state["left"] -= 1
+        if state["left"] > 0:
+            sim.after(1.0, tick)
+
+    # 64 concurrent timer chains exercise the heap, not just the top slot
+    for i in range(64):
+        state["left"] -= 1
+        sim.after(1.0 + i * 0.01, tick)
+    t0 = time.perf_counter()
+    sim.run()
+    wall = time.perf_counter() - t0
+    return {"events": sim.events_processed, "wall_s": wall,
+            "events_per_sec": sim.events_processed / wall}
+
+
+def bench_message_path(window_us: float = 10_000.0) -> dict:
+    """Per-message plumbing floor: unreplicated RPC closed loop."""
+    from repro.apps.flip import FlipApp
+    from repro.baselines.unreplicated import (UnreplicatedClient,
+                                              build_unreplicated)
+    sim, _server, client = build_unreplicated(FlipApp)
+    clients = [client] + [
+        UnreplicatedClient(sim, client.net, client.registry, f"c{i}", "s0")
+        for i in range(1, 16)]
+    payload = b"x" * 32
+    done = {"n": 0}
+
+    def refire(cl):
+        def cb(_res, _lat):
+            done["n"] += 1
+            cl.request(payload, cb)
+        return cb
+
+    for cl in clients:
+        cl.request(payload, refire(cl))
+    t0 = time.perf_counter()
+    sim.run(until=sim.now + window_us)
+    wall = time.perf_counter() - t0
+    return {"events": sim.events_processed, "wall_s": wall,
+            "events_per_sec": sim.events_processed / wall,
+            "requests": done["n"]}
+
+
+def bench_ubft_path(window_us: float = 10_000.0) -> dict:
+    """Full uBFT hot path: batched+pipelined consensus closed loop."""
+    from repro.apps.flip import FlipApp
+    from repro.core.consensus import ConsensusConfig
+    from repro.core.smr import build_cluster
+    cfg = ConsensusConfig(max_batch=8, pipeline_depth=4)
+    cluster = build_cluster(FlipApp, cfg=cfg)
+    clients = [cluster.new_client() for _ in range(16)]
+    payload = b"x" * 32
+    done = {"n": 0}
+
+    def refire(cl):
+        def cb(_res, _lat):
+            done["n"] += 1
+            cl.request(payload, cb)
+        return cb
+
+    for cl in clients:
+        cl.request(payload, refire(cl))
+    t0 = time.perf_counter()
+    cluster.sim.run(until=cluster.sim.now + window_us)
+    wall = time.perf_counter() - t0
+    return {"events": cluster.sim.events_processed, "wall_s": wall,
+            "events_per_sec": cluster.sim.events_processed / wall,
+            "requests": done["n"]}
+
+
+def run() -> dict:
+    tune_runtime()
+    out = {
+        "timer": bench_timer_engine(),
+        "message": bench_message_path(),
+        "ubft": bench_ubft_path(),
+    }
+    for tier, r in out.items():
+        emit(f"engine.{tier}_events_per_sec", r["events_per_sec"])
+        emit(f"engine.{tier}_wall_s", r["wall_s"])
+    return out
+
+
+def check_regression(results: dict, baseline_path: str = BASELINE_PATH,
+                     tolerance: float = REGRESSION_TOLERANCE) -> list:
+    """Return a list of human-readable failures (empty = pass)."""
+    if not os.path.exists(baseline_path):
+        return [f"missing baseline {baseline_path}"]
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    tolerance = baseline.get("tolerance", tolerance)
+    failures = []
+    for tier, base in baseline.get("tiers", {}).items():
+        got = results.get(tier, {}).get("events_per_sec")
+        floor = base["events_per_sec"] * (1.0 - tolerance)
+        if got is None:
+            failures.append(f"{tier}: no result")
+        elif got < floor:
+            failures.append(
+                f"{tier}: {got:,.0f} events/s < floor {floor:,.0f} "
+                f"(baseline {base['events_per_sec']:,.0f} - {tolerance:.0%})")
+    return failures
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write results to PATH (BENCH_engine.json)")
+    ap.add_argument("--check", action="store_true",
+                    help="fail (exit 1) on >%d%% events/sec regression "
+                         "vs the committed baseline"
+                         % int(REGRESSION_TOLERANCE * 100))
+    ap.add_argument("--record-baseline", action="store_true",
+                    help="overwrite benchmarks/baseline_engine.json")
+    ap.add_argument("--check-json", metavar="PATH", default=None,
+                    help="like --check, but gate on an existing "
+                         "BENCH_engine.json instead of re-running")
+    args = ap.parse_args()
+    if args.check_json:
+        with open(args.check_json) as f:
+            results = json.load(f)
+        failures = check_regression(results)
+        if failures:
+            for msg in failures:
+                print(f"REGRESSION: {msg}", file=sys.stderr)
+            sys.exit(1)
+        print("# perf check passed")
+        return
+    results = run()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}")
+    if args.record_baseline:
+        payload = {"tiers": {t: {"events_per_sec": r["events_per_sec"]}
+                             for t, r in results.items()},
+                   "tolerance": REGRESSION_TOLERANCE}
+        with open(BASELINE_PATH, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {BASELINE_PATH}")
+    if args.check:
+        failures = check_regression(results)
+        if failures:
+            for msg in failures:
+                print(f"REGRESSION: {msg}", file=sys.stderr)
+            sys.exit(1)
+        print("# perf check passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,20 +3,35 @@
 Prints ``name,us_per_call,derived`` CSV rows.  The roofline benchmark reads
 the dry-run artifacts (artifacts/dryrun/*.json) when present.
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [figure ...]
+``--json`` additionally writes the repo's perf-trajectory artifacts:
+
+* ``BENCH_engine.json``  — host performance (events/sec, wall-clock per
+  tier) from ``benchmarks/engine_perf.py``;
+* ``BENCH_protocol.json`` — simulated protocol results (p50/p99 µs,
+  throughput kops per sweep point) from ``benchmarks/throughput.py``.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--json] [figure ...]
 """
 
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _write_json(path: str, payload: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# wrote {path}", flush=True)
 
 
 def main() -> None:
-    from benchmarks import (fig7_app_latency, fig8_request_size,
+    from benchmarks import (engine_perf, fig7_app_latency, fig8_request_size,
                             fig9_breakdown, fig10_nonequivocation,
                             fig11_tail_latency, table2_memory, throughput,
                             roofline)
@@ -28,19 +43,45 @@ def main() -> None:
         "fig11": fig11_tail_latency,
         "table2": table2_memory,
         "throughput": throughput,
+        "engine": engine_perf,
         "roofline": roofline,
     }
-    wanted = sys.argv[1:] or list(mods)
+    args = sys.argv[1:]
+    want_json = "--json" in args
+    wanted = [a for a in args if a != "--json"] or list(mods)
+    results: dict = {}
     print("name,us_per_call,derived")
     for name in wanted:
         t0 = time.time()
         try:
-            mods[name].run()
+            results[name] = mods[name].run()
             print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
         except Exception as e:  # keep going — report the failure as a row
             import traceback
             traceback.print_exc()
             print(f"{name}.FAILED,0,{type(e).__name__}:{str(e)[:120]}")
+
+    if want_json:
+        # a module that already failed above must not crash the JSON pass
+        for name in ("engine", "throughput"):
+            if name not in results:
+                try:
+                    results[name] = mods[name].run()
+                except Exception:
+                    import traceback
+                    traceback.print_exc()
+                    print(f"# {name} failed — skipping its JSON artifact")
+        if "engine" in results:
+            _write_json("BENCH_engine.json", results["engine"])
+        if "throughput" in results:
+            tp = results["throughput"]
+            protocol = {
+                label: {k: v for k, v in metrics.items()}
+                for label, metrics in tp.items()
+                if isinstance(metrics, dict)
+            }
+            protocol["speedup_b8_p4"] = tp.get("speedup_b8_p4")
+            _write_json("BENCH_protocol.json", protocol)
 
 
 if __name__ == "__main__":

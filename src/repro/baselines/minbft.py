@@ -66,7 +66,7 @@ class MinBftReplica(Node):
         self.sim.at(done + lat, lambda: None if self.crashed else fn())
 
     def _bsend(self, dst: str, kind: str, body, size_hint: int) -> None:
-        size = crypto.wire_size(body) + size_hint
+        size = crypto.wire_size_cached(body) + size_hint
         extra = int(size * (BYTE_FACTOR - 1.0))
         self.send(dst, kind, body, extra_bytes=extra)
 
@@ -143,7 +143,7 @@ class MinBftClient(Node):
         def fire() -> None:
             for r in self.replicas:
                 body = (rid, payload, "CRED")
-                size = crypto.wire_size(body) + 64
+                size = crypto.wire_size_cached(body) + 64
                 extra = int(size * (BYTE_FACTOR - 1.0))
                 self.send(r, "REQ", body, extra_bytes=extra)
 

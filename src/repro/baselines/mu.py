@@ -38,7 +38,7 @@ class MuLeader(Node):
 
     def _on_req(self, src: str, body) -> None:
         rid, payload = body
-        size = crypto.wire_size(body) + 32
+        size = crypto.wire_size_cached(body) + 32
         st = {"acks": 1, "done": False}  # self counts
         self._pending[rid] = st
 
@@ -56,9 +56,11 @@ class MuLeader(Node):
         for fo in self.followers:
             # RDMA write + NIC-level completion: one RTT, no follower CPU,
             # no host copies (see MU_WRITE_* calibration above)
-            jit = float(self.sim.rng.lognormal(0.0, self.netp.jitter_sigma))
+            # draw through the network model's pre-drawn block so the
+            # seeded stream is consumed in the same order as scalar draws
+            jit = self.net.jitter()
             rtt = 2 * MU_WRITE_BASE_US * jit + size * MU_WRITE_PER_BYTE_US
-            self.sim.after(rtt, nic_ack, note=f"mu.write {fo}")
+            self.sim.after(rtt, nic_ack)
             # background apply at the follower (off critical path)
             self.net.send(self.pid, fo, ("MU_APPLY", (rid, payload)), size)
 

@@ -92,7 +92,7 @@ class App:
         pass
 
     def snapshot_fp(self) -> bytes:
-        return crypto.fingerprint(crypto.encode(self.snapshot()))
+        return crypto.fingerprint_cached(self.snapshot())
 
 
 # --------------------------------------------------------------------------
@@ -146,10 +146,13 @@ class Checkpoint:
         self.window = window
         self.app_fp = app_fp
         self.sigs = sigs
+        # cached: ``s in cp.open_slots`` runs several times per message and
+        # a fresh range() per access showed up in the hot-path profile
+        self._open = range(start, start + window)
 
     @property
     def open_slots(self) -> range:
-        return range(self.start, self.start + self.window)
+        return self._open
 
     def payload(self) -> tuple:
         return _cp_payload(self.start, self.window, self.app_fp)
@@ -218,6 +221,7 @@ class UbftReplica(Node):
 
         # --- consensus state (Alg. 2 lines 1-12) ---
         self.view = 0
+        self._leader_pid = replicas[0]  # cached replicas[view % n]
         self.next_slot = 0
         self.checkpoint = Checkpoint(0, self.cfg.window, app.snapshot_fp())
         self.state: Dict[str, PeerState] = {r: PeerState() for r in replicas}
@@ -267,6 +271,7 @@ class UbftReplica(Node):
 
         # summaries (Alg. 4)
         self.summary_sigs: Dict[int, Dict[str, bytes]] = {}
+        self._summary_digests: Dict[int, bytes] = {}  # k -> my stream digest
 
         # CTBcast instance per broadcaster (self included)
         self.ctb: Dict[str, CTBcast] = {}
@@ -284,8 +289,16 @@ class UbftReplica(Node):
         self.my_ctb = self.ctb[pid]
         self.ctb_k = 0
 
-        # TBcast streams for consensus messages
-        self.tb.register("cons/", self._on_tb_consensus)
+        # TBcast streams for consensus messages — registered per kind so
+        # the TB route memo lands directly on the specific handler (the
+        # split-and-branch dispatch showed up in the hot-path profile).
+        # NB: CERTIFY_CHECKPOINT before CERTIFY (prefix-matched).
+        self.tb.register("cons/WILL_CERTIFY", self._on_will_certify)
+        self.tb.register("cons/WILL_COMMIT", self._on_will_commit)
+        self.tb.register("cons/CERTIFY_CHECKPOINT", self._on_tb_certify_cp)
+        self.tb.register("cons/CERTIFY", self._on_tb_certify)
+        self.tb.register("cons/SUMMARY", self._on_tb_summary)
+        self.tb.register("cons/", self._on_tb_consensus)  # fallback
 
         # direct messages
         self.handle("REQ", self._on_client_request)
@@ -304,19 +317,27 @@ class UbftReplica(Node):
     # helpers
     # ------------------------------------------------------------------
     def leader(self, view: Optional[int] = None) -> str:
-        v = self.view if view is None else view
-        return self.replicas[v % self.n]
+        if view is None:
+            return self._leader_pid
+        return self.replicas[view % self.n]
 
     def is_leader(self) -> bool:
-        return self.leader() == self.pid
+        return self._leader_pid == self.pid
 
     def _ctb_broadcast(self, msg: tuple, slow: bool = False) -> None:
         k = self.ctb_k
         self.ctb_k += 1
         self.my_ctb.broadcast(k, msg, slow=slow)
 
+    #: interned "cons/<kind>" stream names (an f-string per broadcast and a
+    #: split per delivery showed up in the hot-path profile)
+    _STREAMS: Dict[str, str] = {}
+
     def _tb_broadcast(self, stream: str, key: int, payload: Any) -> None:
-        self.tb.broadcast(f"cons/{stream}", key, payload, self.replicas)
+        full = self._STREAMS.get(stream)
+        if full is None:
+            full = self._STREAMS[stream] = f"cons/{stream}"
+        self.tb.broadcast(full, key, payload, self.replicas)
 
     # ==================================================================
     # RPC (client requests; §5.4 Echo round)
@@ -368,7 +389,9 @@ class UbftReplica(Node):
             self._note_echo(rid, src)
 
     def _note_echo(self, rid: tuple, who: str) -> None:
-        s = self.echoes.setdefault(rid, set())
+        s = self.echoes.get(rid)
+        if s is None:
+            s = self.echoes[rid] = set()
         s.add(who)
         if rid in self.proposed_rids or rid in self.decided_rids:
             return
@@ -491,8 +514,13 @@ class UbftReplica(Node):
             m = st.fifo_pending.pop(k)
             st.fifo_next += 1
             st.recent[k] = m
-            for kk in [x for x in st.recent if x <= k - self.cfg.t]:
-                del st.recent[kk]
+            # ks enter in strictly increasing order, so the dict's first
+            # key is the oldest — O(1) expiry instead of an O(t) scan
+            while st.recent:
+                first = next(iter(st.recent))
+                if first > k - self.cfg.t:
+                    break
+                del st.recent[first]
             if not self._byz_check(p, m):       # Algorithm 5
                 st.blocked = True               # "block upon a Byzantine message"
                 return
@@ -540,7 +568,7 @@ class UbftReplica(Node):
                 if q in seen:
                     return False
                 seen.add(q)
-                digest = crypto.fingerprint(crypto.encode(snap))
+                digest = crypto.fingerprint_cached(snap)
                 pids = {pid for pid, _ in shares}
                 if len(pids) < self.quorum:
                     return False
@@ -584,7 +612,8 @@ class UbftReplica(Node):
         must = self._must_propose(slot, new_view)
         if must is None:        # any request may be proposed
             return True
-        return crypto.encode(as_batch(req)) == crypto.encode(as_batch(must))
+        return (crypto.encode_cached(as_batch(req)) ==
+                crypto.encode_cached(as_batch(must)))
 
     # ------------------------------------------------------------------
     # FIFO message processing (Alg. 2 / Alg. 3 receive sides)
@@ -655,7 +684,7 @@ class UbftReplica(Node):
             return
         self.my_certified.add((v, s))
         req = pr[1]
-        fp = crypto.fingerprint(crypto.encode(req))
+        fp = crypto.fingerprint_cached(req)
         payload = ("certify", v, s, fp)
         self.async_sign(payload, lambda sig: self._tb_broadcast(
             "CERTIFY", s, (v, s, fp, sig)))
@@ -679,7 +708,7 @@ class UbftReplica(Node):
             pr = self.my_prepared.get(s)
             if pr is None or pr[0] != v:
                 return
-            if crypto.fingerprint(crypto.encode(pr[1])) != fp:
+            if crypto.fingerprint_cached(pr[1]) != fp:
                 return
             if v != self.view:
                 return   # never broadcast a COMMIT for a view I have sealed
@@ -692,7 +721,7 @@ class UbftReplica(Node):
     def _on_commit(self, p: str, m: tuple) -> None:
         cert = m[1]
         v, s, fp, req = cert["view"], cert["slot"], cert["fp"], cert["req"]
-        if crypto.fingerprint(crypto.encode(req)) != fp:
+        if crypto.fingerprint_cached(req) != fp:
             return
         items = [(pid, ("certify", v, s, fp), sig) for pid, sig in cert["sigs"]]
         if len({pid for pid, _, _ in items}) < self.quorum:
@@ -716,33 +745,48 @@ class UbftReplica(Node):
             self._decide(s, cert["req"])
 
     # --- fast path (lines 24-31) ---
+    def _on_will_certify(self, origin: str, stream: str, key: int,
+                         payload: Any) -> None:
+        v, s = payload
+        ws = self.will_certify.get((v, s))
+        if ws is None:
+            ws = self.will_certify[(v, s)] = set()
+        ws.add(origin)
+        if (len(ws) >= 2 * self.f + 1 and v == self.view and
+                s in self.checkpoint.open_slots and
+                (v, s) not in self.my_will_commits):
+            self.my_will_commits.add((v, s))
+            self._tb_broadcast("WILL_COMMIT", s, (v, s))       # line 27
+
+    def _on_will_commit(self, origin: str, stream: str, key: int,
+                        payload: Any) -> None:
+        v, s = payload
+        ws = self.will_commit.get((v, s))
+        if ws is None:
+            ws = self.will_commit[(v, s)] = set()
+        ws.add(origin)
+        if (len(ws) >= 2 * self.f + 1 and v == self.view and
+                s in self.checkpoint.open_slots):
+            pr = self.state[self.leader(v)].prepares.get(s)
+            if pr is not None and pr[0] == v:
+                self._decide(s, pr[1])                         # line 31
+
+    def _on_tb_certify(self, origin: str, stream: str, key: int,
+                       payload: Any) -> None:
+        self._on_certify(origin, payload)
+
+    def _on_tb_certify_cp(self, origin: str, stream: str, key: int,
+                          payload: Any) -> None:
+        self._on_certify_checkpoint(origin, payload)
+
+    def _on_tb_summary(self, origin: str, stream: str, key: int,
+                       payload: Any) -> None:
+        self._on_summary(origin, payload)
+
     def _on_tb_consensus(self, origin: str, stream: str, key: int,
                          payload: Any) -> None:
-        kind = stream.split("/", 1)[1]
-        if kind == "WILL_CERTIFY":
-            v, s = payload
-            ws = self.will_certify.setdefault((v, s), set())
-            ws.add(origin)
-            if (len(ws) >= 2 * self.f + 1 and v == self.view and
-                    s in self.checkpoint.open_slots and
-                    (v, s) not in self.my_will_commits):
-                self.my_will_commits.add((v, s))
-                self._tb_broadcast("WILL_COMMIT", s, (v, s))   # line 27
-        elif kind == "WILL_COMMIT":
-            v, s = payload
-            ws = self.will_commit.setdefault((v, s), set())
-            ws.add(origin)
-            if (len(ws) >= 2 * self.f + 1 and v == self.view and
-                    s in self.checkpoint.open_slots):
-                pr = self.state[self.leader(v)].prepares.get(s)
-                if pr is not None and pr[0] == v:
-                    self._decide(s, pr[1])                     # line 31
-        elif kind == "CERTIFY":
-            self._on_certify(origin, payload)
-        elif kind == "CERTIFY_CHECKPOINT":
-            self._on_certify_checkpoint(origin, payload)
-        elif kind == "SUMMARY":
-            self._on_summary(origin, payload)
+        """Fallback for unknown cons/ streams (Byzantine noise tolerance)."""
+        return
 
     # ==================================================================
     # Decide → execute → reply
@@ -899,7 +943,7 @@ class UbftReplica(Node):
         start, snap, upto = body
         if self.exec_upto >= start - 1:
             return
-        fp = crypto.fingerprint(crypto.encode(snap))
+        fp = crypto.fingerprint_cached(snap)
         if fp != self.checkpoint.app_fp:
             return  # unverifiable snapshot — ignore
         self.app.adopt(snap)
@@ -963,6 +1007,7 @@ class UbftReplica(Node):
             self.timer(50.0, self._fulfill_promises_then_seal)
             return
         self.view += 1
+        self._leader_pid = self.replicas[self.view % self.n]
         self._ctb_broadcast(("SEAL_VIEW", self.view))
         self.changing_view = False
         self._after_view_entered()
@@ -996,7 +1041,7 @@ class UbftReplica(Node):
         st.new_view = None
         # certificate share attesting q's state (as of this FIFO point)
         snap = self._peer_snapshot(p)
-        digest = crypto.fingerprint(crypto.encode(snap))
+        digest = crypto.fingerprint_cached(snap)
         self.vc_snapshots[(v, p)] = snap
         ldr = self.leader(v)
         self.async_sign(("vc", v, p, digest), lambda sig: self.send(
@@ -1008,6 +1053,7 @@ class UbftReplica(Node):
     def _catch_up_view(self, v: int) -> None:
         while self.view < v:
             self.view += 1
+            self._leader_pid = self.replicas[self.view % self.n]
             self._ctb_broadcast(("SEAL_VIEW", self.view))
         self._after_view_entered()
 
@@ -1049,7 +1095,7 @@ class UbftReplica(Node):
             snap = self.vc_snapshots.get((v, q))
             if snap is None:
                 continue
-            my_digest = crypto.fingerprint(crypto.encode(snap))
+            my_digest = crypto.fingerprint_cached(snap)
             matching = tuple((pid, sig) for pid, (dg, sig) in sorted(shares.items())
                              if dg == my_digest)
             if len({pid for pid, _ in matching}) >= self.quorum:
@@ -1067,6 +1113,7 @@ class UbftReplica(Node):
         v = st.view
         while self.view < v:
             self.view += 1
+            self._leader_pid = self.replicas[self.view % self.n]
             self._ctb_broadcast(("SEAL_VIEW", self.view))
         # adopt the highest checkpoint in the certificates
         best_cp = self.checkpoint
@@ -1139,10 +1186,10 @@ class UbftReplica(Node):
             recent = dict(self.my_ctb.buf)
         else:
             recent = self.state[p].recent
-        window = tuple(sorted((kk, crypto.fingerprint(crypto.encode(m)))
+        window = tuple(sorted((kk, crypto.fingerprint_cached(m))
                               for kk, m in recent.items()
                               if k - self.cfg.t < kk <= k))
-        digest = crypto.fingerprint(crypto.encode(("sum", p, k, window)))
+        digest = crypto.fingerprint_cached(("sum", p, k, window))
         # bookkeeping signature → background task (§3), not the critical path
         self.background(lambda: self.async_sign(
             ("sum", p, k, digest),
@@ -1153,11 +1200,19 @@ class UbftReplica(Node):
         si = self.my_ctb.summary_interval
         if (k + 1) % si != 0:
             return
-        my_window = tuple(sorted((kk, crypto.fingerprint(crypto.encode(m)))
-                                 for kk, m in self.my_ctb.buf.items()
-                                 if k - self.cfg.t < kk <= k))
-        my_digest = crypto.fingerprint(crypto.encode(("sum", self.pid, k,
-                                                      my_window)))
+        # one digest per segment end, not one per incoming share: buf is
+        # append-only below k at this point, so the window is stable
+        my_digest = self._summary_digests.get(k)
+        if my_digest is None:
+            my_window = tuple(sorted((kk, crypto.fingerprint_cached(m))
+                                     for kk, m in self.my_ctb.buf.items()
+                                     if k - self.cfg.t < kk <= k))
+            my_digest = crypto.fingerprint_cached(("sum", self.pid, k,
+                                                   my_window))
+            self._summary_digests[k] = my_digest
+            for old in [kk for kk in self._summary_digests
+                        if kk <= k - self.cfg.t]:
+                del self._summary_digests[old]
         if digest != my_digest:
             return
         self.background(lambda: self.async_verify(
@@ -1181,9 +1236,9 @@ class UbftReplica(Node):
 
     def _on_summary(self, origin: str, payload: tuple) -> None:
         k, digest, sigs, history = payload
-        window = tuple((kk, crypto.fingerprint(crypto.encode(m)))
+        window = tuple((kk, crypto.fingerprint_cached(m))
                        for kk, m in history)
-        if crypto.fingerprint(crypto.encode(("sum", origin, k, window))) != digest:
+        if crypto.fingerprint_cached(("sum", origin, k, window)) != digest:
             return
         pids = {pid for pid, _ in sigs}
         if len(pids) < self.quorum:

@@ -33,9 +33,18 @@ def fingerprint(data: bytes) -> bytes:
     return hashlib.sha256(data).digest()
 
 
+#: suffix fed to the second CRC pass of :func:`checksum` — continuing the
+#: running CRC over a fixed salt decorrelates the two words without the
+#: O(n) reversed copy the old ``data[::-1]`` pass required.
+_CHECKSUM_SALT = b"\xa5ubft\x5a"
+
+
 def checksum(data: bytes) -> int:
-    """Fast 8-byte checksum (stands in for xxHash64)."""
-    return (zlib.crc32(data) << 32) | (zlib.crc32(data[::-1]) & 0xFFFFFFFF)
+    """Fast 8-byte checksum (stands in for xxHash64): the plain CRC32 in
+    the high word and a salted continuation of it in the low word —
+    single pass over ``data``, no copies."""
+    hi = zlib.crc32(data)
+    return (hi << 32) | zlib.crc32(_CHECKSUM_SALT, hi)
 
 
 def checksum_bytes(data: bytes) -> bytes:
@@ -43,8 +52,141 @@ def checksum_bytes(data: bytes) -> bytes:
 
 
 def encode(obj: Any) -> bytes:
-    """Canonical deterministic encoding of protocol payloads."""
+    """Canonical deterministic encoding of protocol payloads.
+
+    This is the *fresh* (uncached) computation; the hot path goes through
+    :func:`encode_cached`, which must always agree with it (enforced by a
+    property test).
+    """
     return _enc(obj)
+
+
+# ---------------------------------------------------------------------------
+# Zero-re-encode wire layer (DESIGN.md "wire-cache invariant")
+# ---------------------------------------------------------------------------
+# Protocol payloads are immutable tuples (and bytes) passed *by reference*
+# through the simulator, so a payload can be encoded / fingerprinted /
+# sized once per lifetime and every later touch — the sender's retransmits,
+# every receiver, every verify — reuses that result.  The cache is
+# identity-keyed: each entry holds a strong reference to its payload, which
+# pins the id() for the entry's lifetime (no aliasing is possible while the
+# entry lives).  Two generations bound memory: inserts go to the young
+# generation; when it fills, it becomes the old generation and the previous
+# old generation (entries unreferenced for a full cycle) is dropped.
+#
+# Only immutable containers (tuple, bytes) are cached.  Lists, dicts and
+# dataclasses always re-encode — mutating *those* after send is therefore
+# visible, while the discipline for tuples/bytes is: a payload handed to
+# ``Node.send`` / ``TBcastService.broadcast`` must never be mutated
+# afterwards (Byzantine test adversaries included — build a new tuple
+# instead).  Receiver-side reuse does not weaken unforgeability: the
+# KeyRegistry still recomputes MACs from its private secret table; the
+# cache only memoizes the *public* deterministic encoding.
+
+_CACHE_LIMIT = 1 << 16
+# id(obj) -> [obj, enc|None, fp|None, size|None, deeply_immutable|None]
+_g0: Dict[int, list] = {}
+_g1: Dict[int, list] = {}
+
+#: scalar types that are safe to memoize beneath a cached tuple
+_PURE_SCALARS = (int, float, str, bool, type(None))
+
+
+def _entry(obj: Any) -> list:
+    global _g0, _g1
+    key = id(obj)
+    e = _g0.get(key)
+    if e is not None:
+        return e
+    e = _g1.get(key)
+    if e is not None:
+        _g0[key] = e        # promote: survived a generation
+        return e
+    if len(_g0) >= _CACHE_LIMIT:
+        _g1 = _g0
+        _g0 = {}
+    e = [obj, None, None, None, None]
+    _g0[key] = e
+    return e
+
+
+def _pure(obj: Any) -> bool:
+    """True iff ``obj`` is deeply immutable (tuples of tuples/bytes/
+    scalars).  A tuple with a list/dict/dataclass anywhere beneath it must
+    never be memoized — mutating that child has to stay visible."""
+    if type(obj) is tuple:
+        e = _entry(obj)
+        p = e[4]
+        if p is None:
+            p = e[4] = all(_pure(x) for x in obj)
+        return p
+    return type(obj) is bytes or isinstance(obj, _PURE_SCALARS)
+
+
+def clear_wire_cache() -> None:
+    """Drop all memoized encodings (tests / long-lived drivers)."""
+    global _g0, _g1
+    _g0 = {}
+    _g1 = {}
+
+
+def wire_cache_len() -> int:
+    return len(_g0) + len(_g1)
+
+
+def _enc_c(obj: Any) -> bytes:
+    """Cache-aware mirror of :func:`_enc` — identical bytes, but deeply
+    immutable tuple subtrees are memoized so shared payloads encode once.
+    Tuples with mutable descendants (a COMMIT's cert dict, NEW_VIEW's cert
+    map) re-encode every time, keeping child mutation visible."""
+    if type(obj) is tuple:
+        e = _entry(obj)
+        v = e[1]
+        if v is None:
+            v = (b"T" + struct.pack("<I", len(obj)) +
+                 b"".join(_enc_c(x) for x in obj))
+            if _pure(obj):
+                e[1] = v
+        return v
+    return _enc(obj)
+
+
+def encode_cached(obj: Any) -> bytes:
+    """Memoized :func:`encode` for immutable payloads (tuples / bytes);
+    falls through to a fresh encode for anything else."""
+    if type(obj) is tuple:
+        return _enc_c(obj)
+    if type(obj) is bytes:
+        e = _entry(obj)
+        v = e[1]
+        if v is None:
+            v = e[1] = _enc(obj)
+        return v
+    return _enc(obj)
+
+
+def encode_shallow(obj: Any) -> bytes:
+    """Encode a freshly-built wrapper without caching the wrapper itself:
+    tuple *children* (the shared subtrees) still go through the memo.
+    Signature payloads are built fresh per sign/verify call, so caching
+    them would be all misses."""
+    if type(obj) is tuple:
+        return (b"T" + struct.pack("<I", len(obj)) +
+                b"".join(_enc_c(x) for x in obj))
+    return _enc(obj)
+
+
+def fingerprint_cached(obj: Any) -> bytes:
+    """Memoized ``fingerprint(encode(obj))`` — the protocol-layer digest."""
+    if type(obj) is tuple or type(obj) is bytes:
+        e = _entry(obj)
+        v = e[2]
+        if v is None:
+            v = hashlib.sha256(encode_cached(obj)).digest()
+            if _pure(obj):
+                e[2] = v
+        return v
+    return hashlib.sha256(_enc(obj)).digest()
 
 
 def _enc(obj: Any) -> bytes:
@@ -119,7 +261,8 @@ def _dec(data: bytes, off: int):
 
 
 def wire_size(obj: Any) -> int:
-    """Estimated wire size in bytes of a protocol payload."""
+    """Estimated wire size in bytes of a protocol payload (fresh
+    computation; the hot path uses :func:`wire_size_cached`)."""
     if obj is None:
         return 1
     if isinstance(obj, bool):
@@ -139,6 +282,44 @@ def wire_size(obj: Any) -> int:
     raise TypeError(f"cannot size {type(obj)!r}")
 
 
+def wire_size_cached(obj: Any) -> int:
+    """Memoized :func:`wire_size`: tuple subtrees are sized once, so a
+    fresh wrapper around a shared payload costs O(shallow fields)."""
+    if type(obj) is tuple:
+        e = _entry(obj)
+        v = e[3]
+        if v is None:
+            v = 4 + sum(wire_size_cached(x) for x in obj)
+            if _pure(obj):
+                e[3] = v
+        return v
+    return wire_size(obj)
+
+
+def wire_size_shallow(obj: Any) -> int:
+    """Size a message body without inserting it into the cache: scalar
+    fields are priced inline and only *nested tuples* (the shared payload
+    subtrees that actually recur — batches, certs, window contents) go
+    through the memo.  ``Node.send`` wraps every message in a fresh tuple,
+    so caching the wrapper itself would be all misses."""
+    if type(obj) is not tuple:
+        return wire_size_cached(obj)
+    n = 4
+    for x in obj:
+        t = type(x)
+        if t is tuple:
+            n += wire_size_cached(x)
+        elif t is int or t is float:
+            n += 8
+        elif t is bytes or t is str:
+            n += len(x)
+        elif x is None or t is bool:
+            n += 1
+        else:
+            n += wire_size(x)
+    return n
+
+
 #: per-request framing inside a batched slot: rid + client id + length header
 REQUEST_WIRE_OVERHEAD = 16
 
@@ -148,7 +329,7 @@ def batch_wire_size(batch: Any) -> int:
     triples): every coalesced request pays its own framing overhead on top
     of its recursive payload size, so the cost model prices batches
     honestly rather than treating a batch as one flat blob."""
-    return 4 + sum(wire_size(r) + REQUEST_WIRE_OVERHEAD for r in batch)
+    return 4 + sum(wire_size_cached(r) + REQUEST_WIRE_OVERHEAD for r in batch)
 
 
 class Signer:
@@ -159,7 +340,7 @@ class Signer:
         self.__secret = secret
 
     def sign(self, payload: Any) -> bytes:
-        data = encode(payload)
+        data = encode_shallow(payload)
         mac = hmac.new(self.__secret, data, hashlib.sha256).digest()
         return mac + mac  # pad to 64 B like Ed25519
 
@@ -176,10 +357,13 @@ class KeyRegistry:
         return Signer(pid, secret)
 
     def verify(self, pid: str, payload: Any, sig: bytes) -> bool:
+        # Recomputes the MAC from the private secret table on every call —
+        # memoizing the *encoding* is safe (it is public and deterministic),
+        # memoizing the verdict would not model "the math".
         secret = self._secrets.get(pid)
         if secret is None or sig is None:
             return False
-        data = encode(payload)
+        data = encode_shallow(payload)
         mac = hmac.new(secret, data, hashlib.sha256).digest()
         return hmac.compare_digest(mac + mac, sig)
 

@@ -150,7 +150,7 @@ class CTBcast:
         if k not in self.buf:
             return
         m = self.buf[k]
-        fp = crypto.fingerprint(crypto.encode(m))
+        fp = crypto.fingerprint_cached(m)
         self.node.async_sign(("ctb", self.broadcaster, k, fp), lambda sig:
                              self.tb.broadcast(self._s_signed, k, (m, sig),
                                                self.group))
@@ -178,21 +178,30 @@ class CTBcast:
     def _on_locked(self, origin: str, stream: str, k: int, m: Any) -> None:
         if origin not in self.locked:
             return
-        slot = self.locked[origin][k % self.t]
+        i = k % self.t
+        slot = self.locked[origin][i]
         if k > slot.k:                       # line 20
             slot.k, slot.m = k, m            # line 21
-        enc = crypto.encode(m)
-        if all(self.locked[q][k % self.t].k == k and
-               crypto.encode(self.locked[q][k % self.t].m) == enc
-               for q in self.group):         # line 22 (unanimity)
-            self._deliver_once(k, m)         # line 23
+        enc = None
+        for q in self.group:                 # line 22 (unanimity)
+            s2 = self.locked[q][i]
+            if s2.k != k:
+                return
+            if s2.m is not m:
+                # honest LOCKEDs all carry the broadcaster's object by
+                # reference; fall back to encoding only on mismatch
+                if enc is None:
+                    enc = crypto.encode_cached(m)
+                if crypto.encode_cached(s2.m) != enc:
+                    return
+        self._deliver_once(k, m)             # line 23
 
     # ------------------------------------------------------------ slow path
     def _on_signed(self, origin: str, stream: str, k: int, payload: Any) -> None:
         if origin != self.broadcaster or self.regs is None:
             return
         m, sig = payload
-        fp = crypto.fingerprint(crypto.encode(m))
+        fp = crypto.fingerprint_cached(m)
         self.node.async_verify(self.broadcaster, ("ctb", self.broadcaster, k, fp),
                                sig, lambda ok: self._signed_verified(ok, k, m, sig, fp))
 
@@ -201,7 +210,9 @@ class CTBcast:
         if not ok:                           # line 26
             return
         slot = self.locks[k % self.t]
-        same = slot.k == k and crypto.encode(slot.m) == crypto.encode(m)
+        same = slot.k == k and (slot.m is m or
+                                crypto.encode_cached(slot.m) ==
+                                crypto.encode_cached(m))
         if not (k > slot.k or same):         # lines 27-28
             return
         slot.k, slot.m = k, m                # line 29

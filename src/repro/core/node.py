@@ -7,6 +7,7 @@ model), and a message dispatch table.
 
 from __future__ import annotations
 
+from heapq import heappush as _heappush
 from typing import Any, Callable, Dict, Optional
 
 from repro.core import crypto
@@ -20,17 +21,58 @@ class Node(Process):
         super().__init__(sim, pid)
         self.net = net
         self.netp = net.p
+        self._net_send = net.send   # bound once; send() is the hot path
         self.registry = registry
         self.signer = registry.keygen(pid)
         self._dispatch: Dict[str, Callable[[str, Any], None]] = {}
+        # Subclasses overriding on_message (interceptors, Byzantine
+        # adversaries) must keep receiving messages even though the fast
+        # deliver() path below inlines the dispatch-table lookup.
+        self._custom_on_message = (type(self).on_message
+                                   is not Node.on_message)
 
     # -- message plumbing --------------------------------------------------
-    def send(self, dst: str, kind: str, body: Any, extra_bytes: int = 0) -> None:
-        size = crypto.wire_size(body) + len(kind) + 16 + extra_bytes
-        self.net.send(self.pid, dst, (kind, body), size)
+    def send(self, dst: str, kind: str, body: Any, extra_bytes: int = 0,
+             size: Optional[int] = None) -> None:
+        # Cached sizing: shared payload subtrees (batches, certs) are sized
+        # once per lifetime — see the wire-cache invariant in core/crypto.py.
+        # Fan-out senders that ship one body to many peers precompute the
+        # full wire size once and pass it via ``size``.
+        if size is None:
+            size = crypto.wire_size_shallow(body) + len(kind) + 16 + extra_bytes
+        self._net_send(self.pid, dst, (kind, body), size)
 
     def handle(self, kind: str, fn: Callable[[str, Any], None]) -> None:
         self._dispatch[kind] = fn
+
+    def deliver(self, src: str, msg: Any, size: int) -> None:
+        # Hot-path override of Process.deliver: same busy-server semantics,
+        # but the dispatch-table lookup happens inside the single closure —
+        # no intermediate on_message frame per message.
+        if self.crashed:
+            return
+        sim = self.sim
+        start = sim.now
+        if self.busy_until > start:
+            start = self.busy_until
+        done = start + self.handling_cost
+        self.busy_until = done
+
+        def _handle() -> None:
+            if self.crashed:
+                return
+            if self._custom_on_message:
+                self.on_message(src, msg)
+                return
+            kind, body = msg
+            fn = self._dispatch.get(kind)
+            if fn is None:
+                self.on_unhandled(src, kind, body)
+            else:
+                fn(src, body)
+
+        sim._seq += 1
+        _heappush(sim._heap, (done, sim._seq, _handle))
 
     def on_message(self, src: str, msg: Any) -> None:
         kind, body = msg
@@ -80,18 +122,18 @@ class Node(Process):
                 # completion handling costs a dispatch on the event thread
                 self.execute(cb, cost=self.handling_cost)
 
-        self.sim.at(done + latency, _fire, note=f"{self.pid}.crypto")
+        self.sim.at(done + latency, _fire)
 
     def background(self, cb: Callable[[], None]) -> None:
         """Run ``cb`` at the next background-task quantum boundary (the
         paper's bookkeeping-signature path, off the critical path)."""
         q = self.netp.bg_quantum_us
         delay = q - (self.sim.now % q)
-        self.timer(delay, cb, note=f"{self.pid}.bg")
+        self.timer(delay, cb)
 
     # -- timers --------------------------------------------------------------
     def timer(self, delay: float, cb: Callable[[], None], note: str = "") -> None:
         def _fire() -> None:
             if not self.crashed:
                 cb()
-        self.sim.after(delay, _fire, note=note or f"{self.pid}.timer")
+        self.sim.after(delay, _fire)

@@ -227,6 +227,7 @@ class _PoolManager(Node):
         self._sync: Dict[int, dict] = {}
         self._tok = 0
         self._leasing = False
+        self._lease_timer = None
         self.suspected: List[Tuple[float, str]] = []
         self._suspect_live: set = set()
         self.handle("LEASE_ACK", self._on_lease_ack)
@@ -240,10 +241,18 @@ class _PoolManager(Node):
         self._leasing = True
         for m in self.pool.members:
             self._last_ack[m] = self.sim.now
+        # First tick immediately, then coalesced on the shared periodic
+        # bucket: every pool with the same lease quantum rides ONE heap
+        # event per tick instead of one timer chain per pool manager.
         self._tick()
+        self._lease_timer = self.sim.periodic(self.pool.lease_us / 2,
+                                              self._tick)
 
     def stop_leases(self) -> None:
         self._leasing = False
+        if self._lease_timer is not None:
+            self._lease_timer.cancel()
+            self._lease_timer = None
 
     def _tick(self) -> None:
         if self._leasing:
@@ -253,8 +262,6 @@ class _PoolManager(Node):
                 expiry = self._last_ack.setdefault(m, now) + self.pool.lease_us
                 if now > expiry:
                     self._suspect(m)
-            self.timer(self.pool.lease_us / 2, self._tick,
-                       note=f"{self.pid}.lease")
 
     def _on_lease_ack(self, src: str, body: Any) -> None:
         self._last_ack[src] = self.sim.now
@@ -284,7 +291,7 @@ class _PoolManager(Node):
             if self._sync.pop(tok, None) is not None:
                 on_abort()
 
-        self.timer(self.pool.sync_timeout_us, expire, note=f"{self.pid}.sync")
+        self.timer(self.pool.sync_timeout_us, expire)
 
     def _on_pull_ack(self, src: str, body: Any) -> None:
         tok, cells = body
@@ -518,8 +525,10 @@ class RegisterClient:
         self._token += 1
         tok = self._token
         self._pending[tok] = {"kind": "w", "acks": 0, "cb": cb, "done": False}
+        body = (self.node.pid, reg, sub, blob, tok)
+        size = crypto.wire_size_shallow(body) + 25  # len("REG_WRITE") + 16
         for m in self.pool_for(self.node.pid, reg).members:
-            self.node.send(m, "REG_WRITE", (self.node.pid, reg, sub, blob, tok))
+            self.node.send(m, "REG_WRITE", body, size=size)
 
     def _on_write_ack(self, src: str, body: Any) -> None:
         _reg, _sub, tok = body
@@ -554,8 +563,10 @@ class RegisterClient:
             "start": self.node.sim.now, "owner": owner, "reg": reg,
             "attempt": attempt,
         }
+        body = (owner, reg, tok)
+        size = crypto.wire_size_shallow(body) + 24  # len("REG_READ") + 16
         for m in self.pool_for(owner, reg).members:
-            self.node.send(m, "REG_READ", (owner, reg, tok))
+            self.node.send(m, "REG_READ", body, size=size)
 
     def _on_read_ack(self, src: str, body: Any) -> None:
         owner, reg, tok, blobs = body

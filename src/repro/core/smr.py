@@ -39,8 +39,10 @@ class Client(Node):
         self._outstanding[rid] = {
             "t0": self.sim.now, "replies": {}, "cb": cb, "done": False,
         }
+        body = (rid, payload)
+        size = crypto.wire_size_shallow(body) + 19  # len("REQ") + 16
         for r in self.replicas:
-            self.send(r, "REQ", (rid, payload))
+            self.send(r, "REQ", body, size=size)
         return rid
 
     def _on_reply(self, src: str, body: Any) -> None:
@@ -48,16 +50,21 @@ class Client(Node):
         st = self._outstanding.get(rid)
         if st is None or st["done"]:
             return
-        st["replies"].setdefault(crypto.encode(result), set()).add(src)
-        for enc, who in st["replies"].items():
-            if len(who) >= self.f + 1:  # f+1 matching responses
-                st["done"] = True
-                lat = self.sim.now - st["t0"]
-                self.latencies.append(lat)
-                if st["cb"] is not None:
-                    st["cb"](result, lat)
-                del self._outstanding[rid]
-                return
+        # replies are fresh bytes per replica — plain encode, no memo
+        replies = st["replies"]
+        enc = crypto.encode(result)
+        who = replies.get(enc)
+        if who is None:
+            who = replies[enc] = set()
+        who.add(src)
+        # only the reply group that just grew can newly reach the quorum
+        if len(who) >= self.f + 1:  # f+1 matching responses
+            st["done"] = True
+            lat = self.sim.now - st["t0"]
+            self.latencies.append(lat)
+            if st["cb"] is not None:
+                st["cb"](result, lat)
+            del self._outstanding[rid]
 
 
 @dataclass

@@ -66,6 +66,7 @@ class TBcastService:
         self._send: Dict[Tuple[str, str], _SendState] = {}   # (stream, dst)
         self._recv: Dict[Tuple[str, str], _RecvState] = {}   # (origin, stream)
         self._handlers: List[Tuple[str, Callable[[str, str, int, Any], None]]] = []
+        self._route: Dict[str, Optional[Callable]] = {}  # stream -> handler
         self._conns: set = set()
         node.handle("TB", self._on_tb)
         node.handle("TB_ACK", self._on_ack)
@@ -75,36 +76,66 @@ class TBcastService:
                  handler: Callable[[str, str, int, Any], None]) -> None:
         """handler(origin_pid, stream, k, payload); matched by stream prefix."""
         self._handlers.append((prefix, handler))
+        self._route.clear()   # memoized routes may predate this prefix
 
     def broadcast(self, stream: str, k: int, payload: Any,
                   group: List[str]) -> None:
         """Broadcast (k, payload) on ``stream`` to ``group`` (may include self)."""
+        # wire size is identical for every destination — price it once
+        # (38 = tuple header 4 + two int fields 16 + kind "TB" 2 + framing 16)
+        size = 38 + len(stream) + crypto.wire_size_cached(payload)
+        node = self.node
         for dst in group:
-            if dst == self.node.pid:
+            if dst == node.pid:
                 # Local self-delivery (no wire) — still costs a dispatch.
-                self.node.execute(lambda kk=k, pl=payload:
-                                  self._deliver(self.node.pid, stream, kk, pl))
+                if not node.crashed:
+                    done = node.occupy(node.handling_cost)
+
+                    def _self(kk=k, pl=payload) -> None:
+                        if not node.crashed:
+                            self._deliver(node.pid, stream, kk, pl)
+
+                    node.sim.at(done, _self)
                 continue
-            st = self._send.setdefault((stream, dst), _SendState())
-            self._conns.add((stream, dst))
+            key = (stream, dst)
+            st = self._send.get(key)
+            if st is None:   # avoid constructing a throwaway default
+                st = self._send[key] = _SendState()
+                self._conns.add(key)
+            # min_k is maintained incrementally (an O(n) min() per
+            # broadcast dominated the hot path); the O(n) recompute only
+            # runs on the rare eviction under backlog.
+            if not st.window or k < st.min_k:
+                st.min_k = k
             st.window[k] = payload
-            st.next_k = max(st.next_k, k + 1)
+            if k >= st.next_k:
+                st.next_k = k + 1
             # Evict beyond 2t (tail semantics: old messages are overwritten).
             while len(st.window) > 2 * self.t:
                 oldest = min(st.window)
                 del st.window[oldest]
-            st.min_k = min(st.window) if st.window else k + 1
-            self._ship(stream, dst, st, k, payload)
-            self._arm_rto(stream, dst)
+                st.min_k = min(st.window)
+            # inlined _ship + the _arm_rto guard (hot loop: one frame per
+            # destination otherwise)
+            node.net.send(node.pid, dst,
+                          ("TB", (stream, k, st.min_k, payload)), size)
+            if not st.rto_pending:
+                self._arm_rto(stream, dst, st)
 
     # ----------------------------------------------------------------- wire
     def _ship(self, stream: str, dst: str, st: _SendState, k: int,
-              payload: Any) -> None:
-        body = (stream, k, st.min_k, payload)
-        self.node.send(dst, "TB", body)
+              payload: Any, size: Optional[int] = None) -> None:
+        if size is None:   # retransmission path
+            size = 38 + len(stream) + crypto.wire_size_cached(payload)
+        # straight to the network model: TB framing is fixed and this path
+        # carries every broadcast to every destination
+        self.node.net.send(self.node.pid, dst,
+                           ("TB", (stream, k, st.min_k, payload)), size)
 
-    def _arm_rto(self, stream: str, dst: str) -> None:
-        st = self._send[(stream, dst)]
+    def _arm_rto(self, stream: str, dst: str,
+                 st: Optional[_SendState] = None) -> None:
+        if st is None:
+            st = self._send[(stream, dst)]
         if st.rto_pending:
             return
         st.rto_pending = True
@@ -119,15 +150,33 @@ class TBcastService:
                 self._ship(stream, dst, st, k, live[k])
             self._arm_rto(stream, dst)
 
-        self.node.timer(self.rto_us, _fire, note=f"tb.rto {stream}->{dst}")
+        self.node.timer(self.rto_us, _fire)
 
     # ------------------------------------------------------------- receive
     def _on_tb(self, src: str, body: Any) -> None:
         stream, k, min_k, payload = body
-        rs = self._recv.setdefault((src, stream), _RecvState())
+        key = (src, stream)
+        rs = self._recv.get(key)
+        if rs is None:
+            rs = self._recv[key] = _RecvState()
         if k < rs.next_k:
             self._maybe_ack(src, stream, rs)
             return  # duplicate / already delivered
+        if k == rs.next_k and not rs.pending:
+            # in-order fast path (the overwhelmingly common case): skip the
+            # reorder-buffer round trip.  k == next_k implies min_k <= next_k,
+            # so the skip-ahead below would be a no-op anyway.
+            if k > rs.max_seen:
+                rs.max_seen = k
+            rs.next_k = k + 1
+            handler = self._route.get(stream)
+            if handler is not None:
+                handler(src, stream, k, payload)
+            else:
+                self._deliver(src, stream, k, payload)
+            if not rs.ack_pending and k > rs.last_acked:
+                self._maybe_ack(src, stream, rs)
+            return
         rs.max_seen = max(rs.max_seen, k)
         rs.pending[k] = payload
         # Skip-ahead: anything below the sender's window floor is lost
@@ -151,10 +200,17 @@ class TBcastService:
                 del rs.pending[kk]
 
     def _deliver(self, origin: str, stream: str, k: int, payload: Any) -> None:
-        for prefix, handler in self._handlers:
-            if stream.startswith(prefix):
-                handler(origin, stream, k, payload)
-                return
+        try:
+            handler = self._route[stream]
+        except KeyError:
+            handler = None
+            for prefix, h in self._handlers:
+                if stream.startswith(prefix):
+                    handler = h
+                    break
+            self._route[stream] = handler
+        if handler is not None:
+            handler(origin, stream, k, payload)
 
     def _maybe_ack(self, origin: str, stream: str, rs: _RecvState) -> None:
         if rs.ack_pending or rs.next_k - 1 <= rs.last_acked:
@@ -166,7 +222,7 @@ class TBcastService:
             rs.last_acked = rs.next_k - 1
             self.node.send(origin, "TB_ACK", (stream, rs.last_acked))
 
-        self.node.timer(self.ack_interval_us, _fire, note="tb.ack")
+        self.node.timer(self.ack_interval_us, _fire)
 
     def _on_ack(self, src: str, body: Any) -> None:
         stream, upto = body

@@ -8,9 +8,9 @@ calibrated network-latency model, and hooks for failure injection and
 Byzantine adversaries.
 """
 
-from repro.sim.events import Event, Process, Simulator
+from repro.sim.events import PeriodicHandle, Process, Simulator
 from repro.sim.faults import FaultEvent, FaultInjector, FaultSchedule
 from repro.sim.net import NetworkModel, NetParams
 
-__all__ = ["Event", "Process", "Simulator", "NetworkModel", "NetParams",
-           "FaultEvent", "FaultInjector", "FaultSchedule"]
+__all__ = ["PeriodicHandle", "Process", "Simulator", "NetworkModel",
+           "NetParams", "FaultEvent", "FaultInjector", "FaultSchedule"]

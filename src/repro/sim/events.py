@@ -10,24 +10,71 @@ Design notes
 * Determinism: all randomness flows through ``Simulator.rng`` (seeded); the
   event heap breaks ties with a monotonically increasing sequence number, so
   runs are exactly reproducible.
+* The heap holds plain ``(time, seq, callback)`` tuples — tuple comparison
+  is C-level and ``seq`` is unique, so callbacks are never compared.  The
+  ``note`` argument accepted by the scheduling calls is a debugging label
+  and is deliberately *not* stored: labels must cost nothing when tracing
+  is off, which also means call sites must not build f-strings for them on
+  hot paths.
+* Periodic work (lease pings, background quanta) goes through
+  :meth:`Simulator.periodic`: subscribers with the same period and phase
+  share ONE heap event per tick and run in registration order — exactly the
+  times and ordering that per-subscriber timer chains would produce, at a
+  fraction of the heap traffic (PR 2's per-pool ``LEASE_PING`` storm).
 """
 
 from __future__ import annotations
 
 import heapq
-import itertools
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 
-@dataclass(order=True)
-class Event:
-    time: float
-    seq: int
-    callback: Callable[[], None] = field(compare=False)
-    note: str = field(default="", compare=False)
+class _PeriodicBucket:
+    """All periodic subscribers sharing (period, phase): one heap event per
+    tick, callbacks run in registration order.  Cancelled slots are None."""
+
+    __slots__ = ("sim", "period", "next_fire", "cbs")
+
+    def __init__(self, sim: "Simulator", period: float, next_fire: float):
+        self.sim = sim
+        self.period = period
+        self.next_fire = next_fire
+        self.cbs: List[Optional[Callable[[], None]]] = []
+
+    def fire(self) -> None:
+        sim = self.sim
+        sim._periodic.pop((self.period, self.next_fire), None)
+        cbs = [c for c in self.cbs if c is not None]
+        if not cbs:
+            return  # every subscriber cancelled — bucket dies
+        self.cbs = cbs
+        # Re-key and reschedule *before* running callbacks so a callback
+        # registering a same-phase periodic joins this bucket.
+        self.next_fire += self.period
+        sim._periodic[(self.period, self.next_fire)] = self
+        sim.at(self.next_fire, self.fire)
+        for c in cbs:
+            if c is not None:   # cancelled by an earlier cb this tick
+                c()
+
+
+class PeriodicHandle:
+    """Cancellation handle returned by :meth:`Simulator.periodic`."""
+
+    __slots__ = ("_bucket", "_cb")
+
+    def __init__(self, bucket: _PeriodicBucket, cb: Callable[[], None]):
+        self._bucket = bucket
+        self._cb = cb
+
+    def cancel(self) -> None:
+        cbs = self._bucket.cbs
+        for i, c in enumerate(cbs):
+            if c is self._cb:
+                cbs[i] = None
+                return
 
 
 class Simulator:
@@ -35,24 +82,51 @@ class Simulator:
 
     def __init__(self, seed: int = 0):
         self.now: float = 0.0
-        self._heap: List[Event] = []
-        self._seq = itertools.count()
+        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = 0
         self.rng = np.random.default_rng(seed)
         self.processes: Dict[str, "Process"] = {}
         self.trace: List[tuple] = []
         self.tracing = False
+        #: total events executed by run()/run_until() (perf accounting)
+        self.events_processed: int = 0
+        self._periodic: Dict[Tuple[float, float], _PeriodicBucket] = {}
         # Global stabilization: before ``gst`` the network may apply extra
         # delay (asynchrony); after it, delays are bounded (eventual synchrony).
         self.gst: float = 0.0
 
     # -- scheduling ------------------------------------------------------
-    def at(self, time: float, callback: Callable[[], None], note: str = "") -> Event:
-        ev = Event(max(time, self.now), next(self._seq), callback, note)
-        heapq.heappush(self._heap, ev)
-        return ev
+    def at(self, time: float, callback: Callable[[], None],
+           note: str = "") -> None:
+        if time < self.now:
+            time = self.now
+        self._seq += 1
+        heapq.heappush(self._heap, (time, self._seq, callback))
 
-    def after(self, delay: float, callback: Callable[[], None], note: str = "") -> Event:
-        return self.at(self.now + delay, callback, note)
+    def after(self, delay: float, callback: Callable[[], None],
+              note: str = "") -> None:
+        # inlined at() — one call frame per event matters at this volume
+        time = self.now + delay if delay > 0.0 else self.now
+        self._seq += 1
+        heapq.heappush(self._heap, (time, self._seq, callback))
+
+    def periodic(self, period: float, callback: Callable[[], None]
+                 ) -> PeriodicHandle:
+        """Run ``callback`` every ``period`` µs, first at ``now + period``.
+        Subscribers registered at the same time with the same period share
+        one heap event per tick (coalescing); within a tick they run in
+        registration order — identical timing to a per-subscriber timer
+        chain.  Returns a handle whose ``cancel()`` stops the callback."""
+        if period <= 0:
+            raise ValueError("periodic() needs a positive period")
+        key = (period, self.now + period)
+        bucket = self._periodic.get(key)
+        if bucket is None:
+            bucket = _PeriodicBucket(self, period, self.now + period)
+            self._periodic[key] = bucket
+            self.at(bucket.next_fire, bucket.fire)
+        bucket.cbs.append(callback)
+        return PeriodicHandle(bucket, callback)
 
     # -- process registry ------------------------------------------------
     def add_process(self, proc: "Process") -> None:
@@ -62,18 +136,23 @@ class Simulator:
 
     # -- main loop -------------------------------------------------------
     def run(self, until: Optional[float] = None, max_events: int = 50_000_000) -> None:
+        heap = self._heap
+        pop = heapq.heappop
         n = 0
-        while self._heap:
-            ev = self._heap[0]
-            if until is not None and ev.time > until:
-                self.now = until
-                return
-            heapq.heappop(self._heap)
-            self.now = ev.time
-            ev.callback()
-            n += 1
-            if n >= max_events:
-                raise RuntimeError(f"simulation exceeded {max_events} events at t={self.now}")
+        try:
+            while heap:
+                if until is not None and heap[0][0] > until:
+                    self.now = until
+                    return
+                time, _seq, cb = pop(heap)
+                self.now = time
+                cb()
+                n += 1
+                if n >= max_events:
+                    raise RuntimeError(
+                        f"simulation exceeded {max_events} events at t={self.now}")
+        finally:
+            self.events_processed += n
         if until is not None:
             self.now = until
 
@@ -81,17 +160,22 @@ class Simulator:
                   max_events: int = 50_000_000) -> bool:
         """Run until ``pred()`` is true.  Returns False on timeout."""
         deadline = self.now + timeout
+        heap = self._heap
+        pop = heapq.heappop
         n = 0
-        while self._heap and not pred():
-            ev = self._heap[0]
-            if ev.time > deadline:
-                return pred()
-            heapq.heappop(self._heap)
-            self.now = ev.time
-            ev.callback()
-            n += 1
-            if n >= max_events:
-                raise RuntimeError(f"simulation exceeded {max_events} events at t={self.now}")
+        try:
+            while heap and not pred():
+                if heap[0][0] > deadline:
+                    return pred()
+                time, _seq, cb = pop(heap)
+                self.now = time
+                cb()
+                n += 1
+                if n >= max_events:
+                    raise RuntimeError(
+                        f"simulation exceeded {max_events} events at t={self.now}")
+        finally:
+            self.events_processed += n
         return pred()
 
 
@@ -126,7 +210,9 @@ class Process:
     def occupy(self, cost: float) -> float:
         """Claim ``cost`` µs of this process's CPU starting no earlier than
         now; returns the completion time."""
-        start = max(self.sim.now, self.busy_until)
+        start = self.sim.now
+        if self.busy_until > start:
+            start = self.busy_until
         self.busy_until = start + cost
         return self.busy_until
 
@@ -141,13 +227,27 @@ class Process:
             if not self.crashed:
                 fn()
 
-        self.sim.at(done, _run, note=note or f"{self.pid}.exec")
+        self.sim.at(done, _run)
 
     # -- messaging entry point (called by Network) ------------------------
     def deliver(self, src: str, msg: Any, size: int) -> None:
+        # flattened execute() with occupy() and at() inlined: one closure,
+        # one heap push, no intermediate frames — the per-message floor
         if self.crashed:
             return
-        self.execute(lambda: self.on_message(src, msg), note=f"{self.pid}<-{src}")
+        sim = self.sim
+        start = sim.now
+        if self.busy_until > start:
+            start = self.busy_until
+        done = start + self.handling_cost
+        self.busy_until = done
+
+        def _handle() -> None:
+            if not self.crashed:
+                self.on_message(src, msg)
+
+        sim._seq += 1
+        heapq.heappush(sim._heap, (done, sim._seq, _handle))
 
     def on_message(self, src: str, msg: Any) -> None:  # pragma: no cover - abstract
         raise NotImplementedError

@@ -6,15 +6,24 @@ on the paper's measurements (Fig 8); uBFT / MinBFT / SGX numbers are then
 *predicted* by protocol structure, which is the reproduction claim.
 
 Message size accounting: every protocol message computes its wire size from
-its payload (see ``repro.core.crypto.wire_size``); batched payloads (tuples
-of request tuples) are priced recursively, so a PREPARE carrying a batch
-pays for every request it coalesces; latency =
-``base + size * per_byte`` plus a small lognormal jitter, plus unbounded extra
-delay before GST if asynchrony injection is enabled.
+its payload (see ``repro.core.crypto.wire_size_cached`` — sizes of shared
+payload subtrees are memoized); batched payloads (tuples of request tuples)
+are priced recursively, so a PREPARE carrying a batch pays for every request
+it coalesces; latency = ``base + size * per_byte`` plus a small lognormal
+jitter, plus unbounded extra delay before GST if asynchrony injection is
+enabled.
+
+Jitter draws are pre-drawn in vectorized numpy blocks from the simulator's
+seeded RNG.  Filling an array consumes the PCG64 bitstream exactly like the
+equivalent sequence of scalar draws, so per-hop jitter values are
+bit-identical to the scalar-draw implementation — provided every consumer
+pulls from the *same* stream in call order, which is why the Mu baseline's
+leader also draws through :meth:`NetworkModel.jitter`.
 """
 
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -51,6 +60,9 @@ class NetParams:
 class NetworkModel:
     """Point-to-point message fabric with per-link asynchrony hooks."""
 
+    #: jitter factors pre-drawn per refill (vectorized; see module docstring)
+    JITTER_BLOCK = 4096
+
     def __init__(self, sim: Simulator, params: Optional[NetParams] = None):
         self.sim = sim
         self.p = params or NetParams()
@@ -63,15 +75,37 @@ class NetworkModel:
         self.forced: set = set()
         self.bytes_sent: int = 0
         self.msgs_sent: int = 0
+        self._jitter_buf = None
+        self._jitter_idx = 0
+        self._jitter_sigma = None   # sigma the buffer was drawn with
 
     # -- latency model ----------------------------------------------------
+    def jitter(self) -> float:
+        """Next multiplicative jitter factor (lognormal, mean≈1) from the
+        pre-drawn block.  Blocks refill deterministically from the seeded
+        RNG (vectorized fills consume the bitstream exactly like scalar
+        draws); a mid-run ``jitter_sigma`` change discards the stale
+        block.  The block lives as a plain Python list — scalar indexing
+        into a numpy array costs more than the draw itself."""
+        i = self._jitter_idx
+        buf = self._jitter_buf
+        sigma = self.p.jitter_sigma
+        if buf is None or i >= len(buf) or sigma != self._jitter_sigma:
+            buf = self._jitter_buf = self.sim.rng.lognormal(
+                mean=0.0, sigma=sigma, size=self.JITTER_BLOCK).tolist()
+            self._jitter_sigma = sigma
+            i = 0
+        self._jitter_idx = i + 1
+        return buf[i]
+
     def latency(self, src: str, dst: str, size: int) -> float:
         lat = self.p.base_us + size * self.p.per_byte_us
         if self.p.jitter_sigma > 0:
-            lat *= float(self.sim.rng.lognormal(mean=0.0, sigma=self.p.jitter_sigma))
-        extra = self.link_delay.get((src, dst), 0.0)
-        if extra and self.sim.now < self.sim.gst:
-            lat += extra
+            lat *= self.jitter()
+        if self.link_delay:
+            extra = self.link_delay.get((src, dst), 0.0)
+            if extra and self.sim.now < self.sim.gst:
+                lat += extra
         return lat
 
     # -- send --------------------------------------------------------------
@@ -80,27 +114,49 @@ class NetworkModel:
         """One-way message.  If ``deliver`` is given it is invoked at arrival
         time instead of the default ``Process.deliver`` (used by the circular
         buffer primitive to model slot overwrites)."""
-        if (src, dst) in self.forced or (
-                (src, dst) in self.partitioned and self.sim.now < self.sim.gst):
+        if (self.forced or self.partitioned) and (
+                (src, dst) in self.forced or (
+                    (src, dst) in self.partitioned and
+                    self.sim.now < self.sim.gst)):
             return  # dropped; retransmission layers must cope
         self.bytes_sent += size
         self.msgs_sent += 1
-        lat = self.latency(src, dst, size)
+        # inlined latency(): base + per-byte, jittered from the pre-drawn
+        # block — one call frame per message matters at this volume
+        p = self.p
+        lat = p.base_us + size * p.per_byte_us
+        if p.jitter_sigma > 0:
+            i = self._jitter_idx
+            buf = self._jitter_buf
+            if buf is None or i >= len(buf) or \
+                    p.jitter_sigma != self._jitter_sigma:
+                lat *= self.jitter()
+            else:
+                self._jitter_idx = i + 1
+                lat *= buf[i]
+        sim = self.sim
+        if self.link_delay:
+            extra = self.link_delay.get((src, dst), 0.0)
+            if extra and sim.now < sim.gst:
+                lat += extra
 
         if deliver is not None:
-            self.sim.after(lat, deliver, note=f"net {src}->{dst}")
+            sim.after(lat, deliver)
             return
 
-        proc = self.sim.processes.get(dst)
+        procs = sim.processes
+        proc = procs.get(dst)
         if proc is None or proc.crashed:
             return
 
         def _arrive() -> None:
-            p = self.sim.processes.get(dst)
+            p = procs.get(dst)
             if p is not None:
                 p.deliver(src, msg, size)
 
-        self.sim.after(lat, _arrive, note=f"net {src}->{dst}")
+        # inlined sim.after() — one call frame per message matters here
+        sim._seq += 1
+        heapq.heappush(sim._heap, (sim.now + lat, sim._seq, _arrive))
 
     # -- asynchrony / failure injection ------------------------------------
     def delay_link(self, src: str, dst: str, extra_us: float) -> None:

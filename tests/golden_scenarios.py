@@ -1,0 +1,179 @@
+"""Seeded golden-trace scenarios for the determinism invariant.
+
+The wire-cache / event-engine work (ISSUE 3) promises *faster but
+bit-identical*: a seeded run must produce exactly the same simulated
+results (latencies, message counts, byte counts) before and after any
+engine refactor.  This module defines the scenarios and their digests;
+``tests/golden/golden_traces.json`` holds digests recorded on the
+pre-refactor tree.  ``test_golden_determinism.py`` re-runs every scenario
+and asserts digest equality, making the invariant enforced rather than
+hoped for.
+
+Re-record (only when a change *intentionally* alters simulated results,
+e.g. a new cost model — say so in the commit message):
+
+    PYTHONPATH=src python tests/golden_scenarios.py --record
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import struct
+from typing import Dict, List
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "golden_traces.json")
+
+
+def _digest(floats: List[float], ints: List[int]) -> str:
+    """Bit-exact digest: doubles packed verbatim, then counters."""
+    h = hashlib.sha256()
+    for x in floats:
+        h.update(struct.pack("<d", x))
+    for x in ints:
+        h.update(struct.pack("<q", x))
+    return h.hexdigest()
+
+
+def _pcts(lats: List[float]):
+    if not lats:
+        return 0.0, 0.0
+    s = sorted(lats)
+    return s[len(s) // 2], s[min(len(s) - 1, int(len(s) * 0.99))]
+
+
+def _closed_loop(sim, clients, payload: bytes, until_us: float) -> List[float]:
+    lats: List[float] = []
+
+    def refire(cl):
+        def cb(_res, lat):
+            lats.append(lat)
+            cl.request(payload, cb)
+        return cb
+
+    for cl in clients:
+        cl.request(payload, refire(cl))
+    sim.run(until=until_us)
+    return lats
+
+
+def scenario_throughput_mini() -> dict:
+    """Batched+pipelined fast path under closed-loop load (jitter stream,
+    wire sizing, CTBcast fast path)."""
+    from repro.apps.flip import FlipApp
+    from repro.core.consensus import ConsensusConfig
+    from repro.core.smr import build_cluster
+
+    cfg = ConsensusConfig(max_batch=8, pipeline_depth=4)
+    cluster = build_cluster(FlipApp, cfg=cfg, seed=1234)
+    clients = [cluster.new_client() for _ in range(8)]
+    lats = _closed_loop(cluster.sim, clients, b"x" * 32, 4000.0)
+    p50, p99 = _pcts(lats)
+    return {
+        "digest": _digest(lats, [cluster.net.msgs_sent,
+                                 cluster.net.bytes_sent]),
+        "n": len(lats), "p50_us": p50, "p99_us": p99,
+        "msgs_sent": cluster.net.msgs_sent,
+        "bytes_sent": cluster.net.bytes_sent,
+    }
+
+
+def scenario_slow_path() -> dict:
+    """Signature slow path over disaggregated registers (async crypto,
+    register WRITE/READ, checksum packing)."""
+    from repro.apps.flip import FlipApp
+    from repro.core.consensus import ConsensusConfig
+    from repro.core.smr import build_cluster
+
+    cfg = ConsensusConfig(slow_mode="always")
+    cluster = build_cluster(FlipApp, cfg=cfg, seed=7)
+    client = cluster.new_client()
+    lats = []
+    for i in range(10):
+        _res, lat = cluster.run_request(client, bytes([i]) * (8 + i))
+        lats.append(lat)
+    return {
+        "digest": _digest(lats, [cluster.net.msgs_sent,
+                                 cluster.net.bytes_sent]),
+        "n": len(lats),
+        "msgs_sent": cluster.net.msgs_sent,
+        "bytes_sent": cluster.net.bytes_sent,
+    }
+
+
+def scenario_mu_baseline() -> dict:
+    """Mu baseline: its leader draws jitter from the *same* seeded stream
+    as the network model — guards the shared-draw-order invariant."""
+    from repro.apps.flip import FlipApp
+    from repro.baselines.mu import build_mu
+
+    sim, client = build_mu(FlipApp, seed=42)
+    lats = _closed_loop(sim, [client], b"y" * 64, 3000.0)
+    return {"digest": _digest(lats, []), "n": len(lats)}
+
+
+def scenario_faults_reconfig() -> dict:
+    """Lease-driven pool machinery + a seeded fault schedule (periodic
+    timer coalescing must not move lease/suspicion timing)."""
+    from repro.apps.kvstore import KVStoreApp, set_req
+    from repro.core.consensus import ConsensusConfig
+    from repro.core.smr import build_cluster
+    from repro.sim.faults import FaultInjector, FaultSchedule
+
+    cfg = ConsensusConfig(slow_mode="always")
+    c = build_cluster(KVStoreApp, cfg=cfg, seed=3, n_pools=2,
+                      auto_reconfigure=True, lease_us=200.0)
+    sched = FaultSchedule.seeded(3, horizon_us=3000.0, memory=["m0"],
+                                 pools=c.pools, n_memory_crashes=1,
+                                 reconfigure=True)
+    FaultInjector.for_cluster(c, sched)
+    client = c.new_client()
+    lats = []
+    for i in range(8):
+        _res, lat = c.run_request(client, set_req(b"k%d" % i, b"v" * 16),
+                                  timeout=5_000_000.0)
+        lats.append(lat)
+    c.sim.run(until=c.sim.now + 2000.0)
+    recfg = [(t, d, f) for (t, d, f) in c.pools[0].reconfigurations]
+    return {
+        "digest": _digest(lats + [t for (t, _d, _f) in recfg],
+                          [c.net.msgs_sent, c.net.bytes_sent, len(recfg)]),
+        "n": len(lats),
+        "reconfigurations": len(recfg),
+        "msgs_sent": c.net.msgs_sent,
+        "bytes_sent": c.net.bytes_sent,
+    }
+
+
+SCENARIOS = {
+    "throughput_mini": scenario_throughput_mini,
+    "slow_path": scenario_slow_path,
+    "mu_baseline": scenario_mu_baseline,
+    "faults_reconfig": scenario_faults_reconfig,
+}
+
+
+def run_all() -> Dict[str, dict]:
+    return {name: fn() for name, fn in SCENARIOS.items()}
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--record", action="store_true",
+                    help="overwrite the committed golden digests")
+    args = ap.parse_args()
+    results = run_all()
+    for name, res in results.items():
+        print(f"{name}: {json.dumps(res, sort_keys=True)}")
+    if args.record:
+        os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"recorded -> {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Golden seeded-determinism tests (ISSUE 3's enforced invariant).
+
+The digests in ``tests/golden/golden_traces.json`` were recorded on the
+tree *before* the zero-re-encode wire layer / fast event engine landed.
+Re-running each scenario must reproduce them bit-for-bit: every latency
+(packed as raw float64), every message count, every byte count.  An engine
+change that alters any simulated number fails here — "faster but
+identical" is a test, not a hope.
+
+If a change *intentionally* alters simulated results (e.g. a recalibrated
+cost model), re-record with::
+
+    PYTHONPATH=src python tests/golden_scenarios.py --record
+
+and say so explicitly in the commit message.
+"""
+
+import json
+import os
+
+import pytest
+
+from golden_scenarios import GOLDEN_PATH, SCENARIOS
+
+
+def _golden():
+    assert os.path.exists(GOLDEN_PATH), (
+        "golden digests missing — record them with "
+        "`PYTHONPATH=src python tests/golden_scenarios.py --record`")
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_golden_digest(name):
+    golden = _golden()
+    assert name in golden, f"scenario {name} has no recorded golden digest"
+    got = SCENARIOS[name]()
+    exp = golden[name]
+    assert got["digest"] == exp["digest"], (
+        f"seeded scenario {name!r} diverged from the pre-refactor golden "
+        f"trace:\n  golden: {exp}\n  got:    {got}")
+
+
+def test_goldens_cover_all_scenarios():
+    """Adding a scenario without recording its digest should be loud."""
+    golden = _golden()
+    assert set(golden) == set(SCENARIOS)
+
+
+def test_same_seed_same_run_twice():
+    """Within one process the same seed reproduces itself exactly (the
+    wire cache and jitter blocks carry no cross-run state)."""
+    fn = SCENARIOS["throughput_mini"]
+    assert fn()["digest"] == fn()["digest"]

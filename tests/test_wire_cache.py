@@ -1,0 +1,255 @@
+"""The wire-cache invariant (DESIGN_PERF.md): every cached form must agree
+with a fresh computation, for every protocol message shape — plus the
+immutability discipline the cache relies on and the engine helpers the
+refactor introduced (periodic timers, event accounting, jitter stream)."""
+
+import struct
+
+import pytest
+
+from repro.core import crypto
+from repro.sim.events import Simulator
+from repro.sim.net import NetParams, NetworkModel
+
+
+# --------------------------------------------------------------------------
+# protocol message shapes (requests, batches, checkpoints, summaries, certs)
+# --------------------------------------------------------------------------
+_RID = ("c0", 7)
+_REQ = (_RID, "c0", b"x" * 32)
+_BATCH = (_REQ, (("c1", 0), "c1", b"y" * 8), (("c2", 3), "c2", b""))
+_FP = bytes(range(32))
+PROTOCOL_SHAPES = [
+    _REQ,                                            # request triple
+    _BATCH,                                          # batched PREPARE payload
+    ("PREPARE", 0, 3, _BATCH),                       # CTBcast message
+    ("COMMIT", (0, 3, _FP, _BATCH, (("r0", b"s" * 64),))),
+    ("cp", 256, 256, _FP),                           # checkpoint payload
+    ("CPCERT", 256, 256, _FP, (("r0", b"s" * 64), ("r1", b"t" * 64))),
+    ("sum", "r0", 63, ((62, _FP), (63, _FP))),       # summary digest body
+    ("ctb/r0/LK/", 5, 0, ("PREPARE", 0, 5, _BATCH)),  # TB wire body
+    ("certify", 0, 3, _FP),                          # signature payload
+    (0, b"s" * 64, _FP),                             # register blob tuple
+    None, True, False, 0, -1, 2**40, 1.5, "", "pid", b"", b"\x00" * 129,
+    (), ((),), ("nested", ("deep", ("deeper", b"x"))),
+]
+
+
+@pytest.mark.parametrize("obj", PROTOCOL_SHAPES,
+                         ids=[f"shape{i}" for i in range(len(PROTOCOL_SHAPES))])
+def test_cached_forms_agree_with_fresh(obj):
+    assert crypto.encode_cached(obj) == crypto.encode(obj)
+    assert crypto.encode_shallow(obj) == crypto.encode(obj)
+    assert crypto.fingerprint_cached(obj) == crypto.fingerprint(crypto.encode(obj))
+    assert crypto.wire_size_cached(obj) == crypto.wire_size(obj)
+    assert crypto.wire_size_shallow(obj) == crypto.wire_size(obj)
+    # second pass: the memoized entry must return the same answers
+    assert crypto.encode_cached(obj) == crypto.encode(obj)
+    assert crypto.wire_size_cached(obj) == crypto.wire_size(obj)
+
+
+def test_property_cached_equals_fresh_random_shapes():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    scalars = st.one_of(
+        st.none(), st.booleans(),
+        st.integers(min_value=-2**62, max_value=2**62),
+        st.floats(allow_nan=False, allow_infinity=False, width=64),
+        st.binary(max_size=64), st.text(max_size=16))
+    payloads = st.recursive(
+        scalars, lambda inner: st.tuples(inner, inner, inner) |
+        st.lists(inner, max_size=4).map(tuple), max_leaves=24)
+
+    @settings(max_examples=200, deadline=None)
+    @given(payloads)
+    def check(obj):
+        assert crypto.encode_cached(obj) == crypto.encode(obj)
+        assert crypto.encode_shallow(obj) == crypto.encode(obj)
+        assert crypto.wire_size_cached(obj) == crypto.wire_size(obj)
+        assert crypto.wire_size_shallow(obj) == crypto.wire_size(obj)
+        assert (crypto.fingerprint_cached(obj) ==
+                crypto.fingerprint(crypto.encode(obj)))
+
+    check()
+
+
+def test_cache_generation_churn_stays_correct():
+    """Push far past the generation limit; late and early entries must
+    still answer correctly (strong refs pin ids; evicted entries simply
+    recompute)."""
+    early = ("early", b"payload", 1)
+    early_enc = crypto.encode_cached(early)
+    objs = [("churn", i, b"x" * (i % 7)) for i in range(3000)]
+    for o in objs:
+        assert crypto.encode_cached(o) == crypto.encode(o)
+    assert crypto.encode_cached(early) == early_enc == crypto.encode(early)
+
+
+def test_receiver_reuses_senders_encoding():
+    """Identity caching is what lets a receiver skip re-encoding: the same
+    object yields the very same bytes object back (no recompute)."""
+    payload = ("PREPARE", 0, 1, _BATCH)
+    first = crypto.encode_cached(payload)
+    assert crypto.encode_cached(payload) is first
+    assert crypto.fingerprint_cached(payload) is crypto.fingerprint_cached(payload)
+
+
+def test_immutability_discipline_mutable_containers_not_cached():
+    """Lists/dicts may be mutated between calls — the cache must never
+    memoize them (only tuples/bytes, which Python cannot mutate)."""
+    lst = [1, 2, 3]
+    before = crypto.encode_cached(lst)
+    lst.append(4)
+    after = crypto.encode_cached(lst)
+    assert before != after == crypto.encode(lst)
+    d = {"a": 1}
+    b1 = crypto.encode_cached(d)
+    d["b"] = 2
+    assert crypto.encode_cached(d) == crypto.encode(d) != b1
+
+
+def test_immutability_discipline_nested_mutables_not_frozen():
+    """A tuple with a dict/list anywhere beneath it (a COMMIT wraps its
+    cert dict exactly like this) must re-encode so child mutation stays
+    visible — the memo only freezes deeply immutable trees."""
+    cert = {"view": 0, "slot": 3, "sigs": (("r0", b"s" * 64),)}
+    m = ("COMMIT", cert)
+    e1 = crypto.encode_cached(m)
+    f1 = crypto.fingerprint_cached(m)
+    s1 = crypto.wire_size_cached(m)
+    assert e1 == crypto.encode(m)
+    cert["slot"] = 4
+    assert crypto.encode_cached(m) == crypto.encode(m) != e1
+    assert (crypto.fingerprint_cached(m) ==
+            crypto.fingerprint(crypto.encode(m)) != f1)
+    assert crypto.wire_size_cached(m) == crypto.wire_size(m)
+    nested = ("wrap", ("deeper", [1, 2]))
+    b = crypto.encode_cached(nested)
+    nested[1][1].append(3)
+    assert crypto.encode_cached(nested) == crypto.encode(nested) != b
+    assert s1 == crypto.wire_size(("COMMIT", {"view": 0, "slot": 3,
+                                              "sigs": (("r0", b"s" * 64),)}))
+
+
+def test_wire_cache_clear():
+    crypto.encode_cached(("fill", 1, b"x"))
+    assert crypto.wire_cache_len() > 0
+    crypto.clear_wire_cache()
+    assert crypto.wire_cache_len() == 0
+    # still functional after a clear
+    obj = ("post-clear", b"y")
+    assert crypto.encode_cached(obj) == crypto.encode(obj)
+
+
+# --------------------------------------------------------------------------
+# checksum satellite: single pass, no reversed copy, still 8 bytes
+# --------------------------------------------------------------------------
+def test_checksum_is_8_bytes_and_deterministic():
+    for data in [b"", b"a", b"hello world", bytes(range(256)) * 5]:
+        c = crypto.checksum(data)
+        assert 0 <= c < 2**64
+        assert c == crypto.checksum(data)
+        assert len(crypto.checksum_bytes(data)) == 8
+
+
+def test_checksum_two_words_decorrelated():
+    """The low word must not simply mirror the high word, and
+    prefix-sharing buffers must not collide (the reason for two words)."""
+    a = crypto.checksum(b"abcdef")
+    b = crypto.checksum(b"abcdeg")
+    assert a != b
+    assert (a >> 32) != (a & 0xFFFFFFFF)
+    # a torn blob (bit flip) is rejected
+    blob = crypto.checksum_bytes(b"payload") + b"payload"
+    torn = blob[:10] + bytes([blob[10] ^ 0xFF]) + blob[11:]
+    assert crypto.checksum_bytes(torn[8:]) != torn[:8]
+
+
+# --------------------------------------------------------------------------
+# engine helpers: periodic coalescing, event accounting, jitter stream
+# --------------------------------------------------------------------------
+def test_periodic_coalesces_and_preserves_order():
+    sim = Simulator(seed=0)
+    fired = []
+    sim.periodic(10.0, lambda: fired.append(("a", sim.now)))
+    sim.periodic(10.0, lambda: fired.append(("b", sim.now)))
+    sim.run(until=35.0)
+    assert fired == [("a", 10.0), ("b", 10.0), ("a", 20.0), ("b", 20.0),
+                     ("a", 30.0), ("b", 30.0)]
+    # both subscribers share one heap event per tick: 3 ticks = 3 events
+    assert sim.events_processed == 3
+
+
+def test_periodic_cancel():
+    sim = Simulator(seed=0)
+    fired = []
+    ha = sim.periodic(10.0, lambda: fired.append("a"))
+    sim.periodic(10.0, lambda: fired.append("b"))
+    sim.run(until=15.0)
+    ha.cancel()
+    sim.run(until=45.0)
+    assert fired == ["a", "b", "b", "b", "b"]
+
+
+def test_periodic_distinct_phases_do_not_merge():
+    sim = Simulator(seed=0)
+    fired = []
+    sim.periodic(10.0, lambda: fired.append(("a", sim.now)))
+    sim.after(5.0, lambda: sim.periodic(10.0,
+                                        lambda: fired.append(("b", sim.now))))
+    sim.run(until=26.0)
+    assert fired == [("a", 10.0), ("b", 15.0), ("a", 20.0), ("b", 25.0)]
+
+
+def test_events_processed_counter():
+    sim = Simulator(seed=0)
+    for i in range(5):
+        sim.after(float(i), lambda: None)
+    sim.run()
+    assert sim.events_processed == 5
+
+
+def test_jitter_block_matches_scalar_draws():
+    """Vectorized refills must consume the seeded stream exactly like
+    scalar draws (the bit-identical-results invariant)."""
+    import numpy as np
+    sim = Simulator(seed=123)
+    net = NetworkModel(sim, NetParams())
+    got = [net.jitter() for _ in range(5000)]
+    rng = np.random.default_rng(123)
+    want = [float(rng.lognormal(0.0, net.p.jitter_sigma)) for _ in range(5000)]
+    assert got == want
+
+
+def test_jitter_sigma_change_resets_block():
+    sim = Simulator(seed=1)
+    net = NetworkModel(sim, NetParams())
+    net.jitter()
+    net.p.jitter_sigma = 0.5
+    v = net.jitter()  # must be drawn with the new sigma, not the stale block
+    assert net._jitter_sigma == 0.5
+    assert v > 0
+
+
+def test_wire_sizes_priced_from_cache_match_message_sizes():
+    """End-to-end: bytes_sent accounting must be unchanged by caching —
+    send the same logical message twice (fresh object vs shared object)
+    and observe identical pricing."""
+    from repro.core.node import Node
+
+    class Probe(Node):
+        def on_message(self, src, msg):
+            pass
+
+    sim = Simulator(seed=0)
+    net = NetworkModel(sim, NetParams(jitter_sigma=0.0))
+    reg = crypto.KeyRegistry()
+    a = Probe(sim, net, reg, "a")
+    Probe(sim, net, reg, "b")
+    body = ("PREPARE", 0, 1, _BATCH)
+    a.send("b", "X", body)
+    first = net.bytes_sent
+    a.send("b", "X", ("PREPARE", 0, 1,
+                      (_REQ, (("c1", 0), "c1", b"y" * 8), (("c2", 3), "c2", b""))))
+    assert net.bytes_sent == 2 * first
