@@ -1,4 +1,13 @@
-"""Shared benchmark helpers: closed-loop drivers + percentile extraction."""
+"""Shared benchmark helpers: closed- and open-loop drivers + percentiles.
+
+The closed-loop driver re-fires on completion (self-throttling: offered
+load tracks service rate).  The open-loop driver injects a seeded Poisson
+arrival process at a fixed rate regardless of completions — the right
+workload for interference sweeps (``benchmarks/shared_pools.py``), where a
+slowdown must show up as queueing/latency rather than silently reducing
+the offered load.  Both are selectable per app from a
+``repro.scenario.Workload`` (kind="closed" / "open").
+"""
 
 from __future__ import annotations
 
@@ -49,6 +58,17 @@ def closed_loop_cluster(cluster, client, payload_fn, n: int,
     if not ok:
         raise TimeoutError(f"closed loop stalled with {state['left']} left")
     return list(client.latencies[start:])
+
+
+def open_loop_cluster(cluster, payload_fn, rate_rps: float,
+                      duration_us: float, n_clients: int = 1, seed: int = 0,
+                      timeout: float = 60_000_000.0) -> List[float]:
+    """Open-loop (Poisson-arrival, seeded) counterpart of
+    :func:`closed_loop_cluster`: inject arrivals at ``rate_rps`` per client
+    over ``duration_us``, drain, return completion latencies."""
+    from repro.scenario import open_loop
+    return open_loop(cluster, payload_fn, rate_rps, duration_us,
+                     n_clients=n_clients, seed=seed, timeout_us=timeout)
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

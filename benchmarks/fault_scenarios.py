@@ -18,14 +18,14 @@ import sys
 
 import numpy as np
 
-from benchmarks.common import closed_loop_cluster, emit, percentiles
+from benchmarks.common import emit, percentiles
 from repro.apps.kvstore import KVStoreApp, set_req
 from repro.core.consensus import ConsensusConfig
 from repro.core.registers import POOL_MEMORY_BUDGET as POOL_BUDGET
-from repro.core.smr import build_cluster
-from repro.sim.faults import FaultInjector, FaultSchedule
+from repro.scenario import AppSpec, ScenarioSpec, Workload, run_scenario
+from repro.sim.faults import FaultSchedule
 
-#: scenario name -> schedule builder(seed, cluster) — all registers-heavy
+#: scenario name -> schedule builder(seed, substrate) — all registers-heavy
 #: (slow_mode="always" keeps the disaggregated-memory path hot).
 SCENARIOS = {}
 
@@ -38,32 +38,32 @@ def scenario(name):
 
 
 @scenario("mem_crash")
-def _mem_crash(seed, cluster):
+def _mem_crash(seed, substrate):
     """Crash f_m memory nodes (one per pool), later recover them."""
     return FaultSchedule.seeded(
         seed, horizon_us=4000.0, memory=["m0", "p1m1"],
-        pools=cluster.pools, n_memory_crashes=2, recover=True)
+        pools=substrate.pools, n_memory_crashes=2, recover=True)
 
 
 @scenario("reconfig")
-def _reconfig(seed, cluster):
+def _reconfig(seed, substrate):
     """Crash one memory node mid-broadcast and reconfigure its pool."""
     return FaultSchedule.seeded(
-        seed, horizon_us=4000.0, memory=["m0"], pools=cluster.pools,
+        seed, horizon_us=4000.0, memory=["m0"], pools=substrate.pools,
         n_memory_crashes=1, reconfigure=True)
 
 
 @scenario("replica_plus_mem")
-def _replica_plus_mem(seed, cluster):
+def _replica_plus_mem(seed, substrate):
     """A follower replica crash on top of a memory-node crash."""
     return FaultSchedule.seeded(
-        seed, horizon_us=4000.0, memory=["m1"], pools=cluster.pools,
+        seed, horizon_us=4000.0, memory=["m1"], pools=substrate.pools,
         replicas=["r2"], n_memory_crashes=1, n_replica_crashes=1,
         reconfigure=True)
 
 
 @scenario("partition_heal")
-def _partition_heal(seed, cluster):
+def _partition_heal(seed, substrate):
     """Partition a replica pair, heal before the view times out."""
     return FaultSchedule.seeded(
         seed, horizon_us=3000.0, partitions=[("r1", "r2")], n_partitions=1)
@@ -88,10 +88,6 @@ def run(seeds=(0, 1, 2), n_reqs=40) -> dict:
             cfg = ConsensusConfig(t=16, window=16, slow_mode="always",
                                   ctb_fast_enabled=False,
                                   view_timeout_us=20_000.0)
-            cluster = build_cluster(KVStoreApp, cfg=cfg, seed=seed,
-                                    n_pools=2)
-            inj = FaultInjector.for_cluster(cluster, make(seed, cluster))
-            client = cluster.new_client()
             acked = {}
 
             def payload(i):
@@ -99,17 +95,24 @@ def run(seeds=(0, 1, 2), n_reqs=40) -> dict:
                 acked[k] = v
                 return set_req(k, v)
 
-            lats = closed_loop_cluster(cluster, client, payload, n_reqs,
-                                       timeout=600_000_000)
+            res = run_scenario(ScenarioSpec(
+                n_pools=2, seed=seed,
+                faults=lambda substrate: make(seed, substrate),
+                apps=[AppSpec(name="", app=KVStoreApp, cfg=cfg,
+                              workload=Workload(kind="closed",
+                                                n_requests=n_reqs,
+                                                payload_fn=payload,
+                                                timeout_us=600_000_000))]))
+            cluster = res.clusters[""]
             _check_safety(cluster, acked)
             pool = max(p.memory_bytes() for p in cluster.pools)
             reconf = sum(len(p.reconfigurations) for p in cluster.pools)
-            pcts = percentiles(lats)
+            pcts = percentiles(res.latencies())
             out[(name, seed)] = {"p50": pcts["p50"], "p99": pcts["p99"],
-                                 "faults": len(inj.log), "reconf": reconf,
-                                 "pool_bytes": pool}
+                                 "faults": len(res.injector.log),
+                                 "reconf": reconf, "pool_bytes": pool}
             emit(f"faults.{name}.s{seed}.p50", pcts["p50"],
-                 f"p99={pcts['p99']:.1f} faults={len(inj.log)} "
+                 f"p99={pcts['p99']:.1f} faults={len(res.injector.log)} "
                  f"reconf={reconf} pool={pool / 1024:.1f}KiB")
     return out
 

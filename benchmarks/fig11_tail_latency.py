@@ -11,10 +11,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import closed_loop_cluster, emit
+from benchmarks.common import emit
 from repro.apps.flip import FlipApp
 from repro.core.consensus import ConsensusConfig
-from repro.core.smr import build_cluster
+from repro.scenario import AppSpec, ScenarioSpec, Workload, run_scenario
 
 TAILS = (16, 32, 64, 128)
 N = 1200
@@ -26,12 +26,14 @@ def run() -> dict:
         payload = b"x" * size
         for t in TAILS:
             cfg = ConsensusConfig(t=t, window=256)
-            cluster = build_cluster(FlipApp, cfg=cfg)
-            client = cluster.new_client()
-            lats = np.asarray(closed_loop_cluster(
-                cluster, client, lambda i: payload, N,
-                timeout=120_000_000))
-            stalls = sum(r.my_ctb.stall_count for r in cluster.replicas)
+            res = run_scenario(ScenarioSpec(apps=[AppSpec(
+                name="", app=FlipApp, cfg=cfg,
+                workload=Workload(kind="closed", n_requests=N,
+                                  payload=payload,
+                                  timeout_us=120_000_000))]))
+            lats = np.asarray(res.latencies())
+            stalls = sum(r.my_ctb.stall_count
+                         for r in res.clusters[""].replicas)
             row = {f"p{p}": float(np.percentile(lats, p))
                    for p in (50, 90, 99, 99.9)}
             row["stalls"] = stalls

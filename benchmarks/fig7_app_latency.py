@@ -11,13 +11,13 @@ import struct
 
 import numpy as np
 
-from benchmarks.common import closed_loop_cluster, emit, percentiles
+from benchmarks.common import emit, percentiles
 from repro.apps.flip import FlipApp
 from repro.apps.kvstore import KVStoreApp, get_req, set_req
 from repro.apps.matching import MatchingEngineApp, order_req
 from repro.baselines.mu import build_mu
 from repro.baselines.unreplicated import build_unreplicated, run_closed_loop
-from repro.core.smr import build_cluster
+from repro.scenario import AppSpec, ScenarioSpec, Workload, run_scenario
 
 N = 300
 
@@ -65,10 +65,10 @@ def run() -> dict:
         lats = run_closed_loop(sim, client, pf(0), N)
         mu = percentiles(lats)
 
-        cluster = build_cluster(app_cls)
-        client = cluster.new_client()
-        lats = closed_loop_cluster(cluster, client, pf, N)
-        ubft = percentiles(lats)
+        res = run_scenario(ScenarioSpec(apps=[AppSpec(
+            name="", app=app_cls,
+            workload=Workload(kind="closed", n_requests=N, payload_fn=pf))]))
+        ubft = percentiles(res.latencies())
 
         out[name] = {"unrepl": unrepl, "mu": mu, "ubft": ubft}
         emit(f"fig7.{name}.unrepl.p90", unrepl["p90"])

@@ -9,13 +9,13 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import closed_loop_cluster, emit
+from benchmarks.common import emit
 from repro.apps.flip import FlipApp
 from repro.baselines.minbft import build_minbft
 from repro.baselines.mu import build_mu
 from repro.baselines.unreplicated import build_unreplicated, run_closed_loop
 from repro.core.consensus import ConsensusConfig
-from repro.core.smr import build_cluster
+from repro.scenario import AppSpec, ScenarioSpec, Workload, run_scenario
 
 SIZES = (32, 256, 1024, 4096, 8192)
 N = 150
@@ -37,17 +37,19 @@ def run() -> dict:
         sim, client = build_mu(FlipApp)
         row["mu"] = median(run_closed_loop(sim, client, payload, N))
 
-        cluster = build_cluster(FlipApp)
-        client = cluster.new_client()
-        row["ubft_fast"] = median(
-            closed_loop_cluster(cluster, client, lambda i: payload, N))
+        res = run_scenario(ScenarioSpec(apps=[AppSpec(
+            name="", app=FlipApp,
+            workload=Workload(kind="closed", n_requests=N,
+                              payload=payload))]))
+        row["ubft_fast"] = median(res.latencies())
 
         cfg = ConsensusConfig(slow_mode="always", fast_enabled=False,
                               ctb_fast_enabled=False)
-        cluster = build_cluster(FlipApp, cfg=cfg)
-        client = cluster.new_client()
-        row["ubft_slow"] = median(
-            closed_loop_cluster(cluster, client, lambda i: payload, 60))
+        res = run_scenario(ScenarioSpec(apps=[AppSpec(
+            name="", app=FlipApp, cfg=cfg,
+            workload=Workload(kind="closed", n_requests=60,
+                              payload=payload))]))
+        row["ubft_slow"] = median(res.latencies())
 
         for mode in ("vanilla", "hmac"):
             sim, client = build_minbft(FlipApp, client_mode=mode)

@@ -18,7 +18,7 @@ from typing import List, Tuple
 from benchmarks.common import emit
 from repro.apps.flip import FlipApp
 from repro.core.consensus import ConsensusConfig
-from repro.core.smr import build_cluster
+from repro.scenario import AppSpec, ScenarioSpec, build_deployment
 
 
 def _union_measure(spans: List[Tuple[float, float]], lo: float,
@@ -39,7 +39,11 @@ def _union_measure(spans: List[Tuple[float, float]], lo: float,
 
 
 def _measure(cfg, label: str, warmup: int = 20) -> dict:
-    cluster = build_cluster(FlipApp, cfg=cfg)
+    # declarative topology, manual driving (tracing needs warmup + a single
+    # traced steady-state request, not a canned workload)
+    _substrate, clusters = build_deployment(ScenarioSpec(apps=[
+        AppSpec(name="", app=FlipApp, cfg=cfg)]))
+    cluster = clusters[""]
     client = cluster.new_client()
     for _ in range(warmup):
         cluster.run_request(client, b"12345678", timeout=10_000_000)

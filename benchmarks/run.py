@@ -8,7 +8,10 @@ the dry-run artifacts (artifacts/dryrun/*.json) when present.
 * ``BENCH_engine.json``  — host performance (events/sec, wall-clock per
   tier) from ``benchmarks/engine_perf.py``;
 * ``BENCH_protocol.json`` — simulated protocol results (p50/p99 µs,
-  throughput kops per sweep point) from ``benchmarks/throughput.py``.
+  throughput kops per sweep point) from ``benchmarks/throughput.py``;
+* ``BENCH_shared.json`` — multi-application substrate sharing (per-app
+  latency + per-app per-pool memory) from ``benchmarks/shared_pools.py``
+  (when the ``shared`` figure is run).
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--json] [figure ...]
 """
@@ -33,8 +36,8 @@ def _write_json(path: str, payload: dict) -> None:
 def main() -> None:
     from benchmarks import (engine_perf, fig7_app_latency, fig8_request_size,
                             fig9_breakdown, fig10_nonequivocation,
-                            fig11_tail_latency, table2_memory, throughput,
-                            roofline)
+                            fig11_tail_latency, shared_pools, table2_memory,
+                            throughput, roofline)
     mods = {
         "fig7": fig7_app_latency,
         "fig8": fig8_request_size,
@@ -43,12 +46,14 @@ def main() -> None:
         "fig11": fig11_tail_latency,
         "table2": table2_memory,
         "throughput": throughput,
+        "shared": shared_pools,
         "engine": engine_perf,
         "roofline": roofline,
     }
     args = sys.argv[1:]
     want_json = "--json" in args
-    wanted = [a for a in args if a != "--json"] or list(mods)
+    explicit = [a for a in args if a != "--json"]
+    wanted = explicit or list(mods)
     results: dict = {}
     print("name,us_per_call,derived")
     for name in wanted:
@@ -62,8 +67,11 @@ def main() -> None:
             print(f"{name}.FAILED,0,{type(e).__name__}:{str(e)[:120]}")
 
     if want_json:
-        # a module that already failed above must not crash the JSON pass
-        for name in ("engine", "throughput"):
+        # a module that already failed above must not crash the JSON pass;
+        # with an explicit figure list, only the requested artifacts are
+        # (re)computed — `--json shared` must not drag in the full sweeps
+        backfill = () if explicit else ("engine", "throughput")
+        for name in backfill:
             if name not in results:
                 try:
                     results[name] = mods[name].run()
@@ -73,6 +81,9 @@ def main() -> None:
                     print(f"# {name} failed — skipping its JSON artifact")
         if "engine" in results:
             _write_json("BENCH_engine.json", results["engine"])
+        if "shared" in results:
+            shared = {str(k): v for k, v in results["shared"].items()}
+            _write_json("BENCH_shared.json", shared)
         if "throughput" in results:
             tp = results["throughput"]
             protocol = {

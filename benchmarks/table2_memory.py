@@ -16,11 +16,11 @@ dropping as register keys spread over more pools.
 
 from __future__ import annotations
 
-from benchmarks.common import closed_loop_cluster, emit
+from benchmarks.common import emit
 from repro.apps.flip import FlipApp
 from repro.core.consensus import ConsensusConfig
 from repro.core.registers import POOL_MEMORY_BUDGET as POOL_BUDGET
-from repro.core.smr import build_cluster
+from repro.scenario import AppSpec, ScenarioSpec, Workload, run_scenario
 
 TAILS = (16, 32, 64, 128)
 
@@ -30,16 +30,23 @@ def _pool_bytes(cluster) -> int:
     return max(p.memory_bytes() for p in cluster.pools)
 
 
+def _run_spec(cfg, size: int, n_reqs: int, n_pools: int = 1):
+    res = run_scenario(ScenarioSpec(
+        n_pools=n_pools,
+        apps=[AppSpec(name="", app=FlipApp, cfg=cfg,
+                      workload=Workload(kind="closed", n_requests=n_reqs,
+                                        payload=b"x" * size,
+                                        timeout_us=600_000_000))]))
+    return res.clusters[""]
+
+
 def run() -> dict:
     out = {}
     for size in (64, 2048):
         for t in TAILS:
             cfg = ConsensusConfig(t=t, window=256, max_request_bytes=size,
                                   slow_mode="always", ctb_fast_enabled=False)
-            cluster = build_cluster(FlipApp, cfg=cfg)
-            client = cluster.new_client()
-            closed_loop_cluster(cluster, client, lambda i: b"x" * size,
-                                3 * t, timeout=600_000_000)
+            cluster = _run_spec(cfg, size, 3 * t)
             local = cluster.replicas[0].memory_bytes()
             # measured occupancy at one memory node / one pool + model
             meas = max(m.memory_bytes() for m in cluster.mem_nodes)
@@ -66,10 +73,7 @@ def run() -> dict:
     for n_pools in (1, 2, 4):
         cfg = ConsensusConfig(t=t, window=256, max_request_bytes=64,
                               slow_mode="always", ctb_fast_enabled=False)
-        cluster = build_cluster(FlipApp, cfg=cfg, n_pools=n_pools)
-        client = cluster.new_client()
-        closed_loop_cluster(cluster, client, lambda i: b"x" * 64,
-                            3 * t, timeout=600_000_000)
+        cluster = _run_spec(cfg, 64, 3 * t, n_pools=n_pools)
         pool = _pool_bytes(cluster)
         assert pool < POOL_BUDGET
         out[("shard", n_pools)] = {"disagg_pool": pool}

@@ -76,16 +76,19 @@ def _job_ubft(args):
     tune_runtime()
     from repro.apps.flip import FlipApp
     from repro.core.consensus import ConsensusConfig
-    from repro.core.smr import build_cluster
+    from repro.scenario import AppSpec, ScenarioSpec, Workload, run_scenario
     cfg = ConsensusConfig(max_batch=max_batch, pipeline_depth=depth)
-    cluster = build_cluster(FlipApp, cfg=cfg)
-    clients = [cluster.new_client() for _ in range(N_CLIENTS)]
-    n, lats = _closed_loop(cluster.sim, clients, WINDOW_US)
+    res = run_scenario(ScenarioSpec(apps=[AppSpec(
+        name="", app=FlipApp, cfg=cfg,
+        workload=Workload(kind="closed", duration_us=WINDOW_US,
+                          n_clients=N_CLIENTS, payload=PAYLOAD))]))
+    lats = sorted(res.latencies())
+    n = len(lats)
     p50, p99 = _pcts(lats)
     return (label, {"kops": n / (WINDOW_US / 1e6) / 1e3,
                     "p50_us": p50, "p99_us": p99,
-                    "bytes_per_req": cluster.net.bytes_sent / max(1, n),
-                    "events": cluster.sim.events_processed})
+                    "bytes_per_req": res.bytes_sent / max(1, n),
+                    "events": res.events_processed})
 
 
 def _job_unreplicated(_):

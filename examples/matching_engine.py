@@ -14,11 +14,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.apps.matching import MatchingEngineApp, order_req
-from repro.core.smr import build_cluster
+from repro.core.smr import Cluster
+from repro.core.substrate import Substrate
 
 
 def main() -> None:
-    cluster = build_cluster(MatchingEngineApp)
+    substrate = Substrate()
+    cluster = Cluster.attach(substrate, MatchingEngineApp, name="book")
     client = cluster.new_client()
     rng = np.random.default_rng(1)
     lats, fills_total = [], 0

@@ -15,12 +15,16 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.apps.kvstore import KVStoreApp, get_req, set_req
 from repro.core.consensus import ConsensusConfig
-from repro.core.smr import build_cluster
+from repro.core.smr import Cluster
+from repro.core.substrate import Substrate
 
 
 def main() -> None:
-    cluster = build_cluster(KVStoreApp,
-                            cfg=ConsensusConfig(view_timeout_us=2000.0))
+    # one disaggregated-memory substrate; the replicated KV store is one
+    # application attached to it (more apps could share the same pools)
+    substrate = Substrate()
+    cluster = Cluster.attach(substrate, KVStoreApp, name="kv",
+                             cfg=ConsensusConfig(view_timeout_us=2000.0))
     client = cluster.new_client()
 
     print("== fast path (no failures) ==")

@@ -190,13 +190,19 @@ class UbftReplica(Node):
     def __init__(self, sim: Simulator, net: NetworkModel,
                  registry: crypto.KeyRegistry, pid: str,
                  replicas: List[str], mem_nodes,
-                 app: App, cfg: Optional[ConsensusConfig] = None):
+                 app: App, cfg: Optional[ConsensusConfig] = None,
+                 namespace: str = ""):
         # ``mem_nodes``: a bare pid list (legacy static TCB), one
         # ``MemoryPool`` or a list of pools (sharded disaggregated memory) —
         # handed to RegisterClient, which shards register keys across pools
         # and tracks pool membership across reconfigurations; every CTBcast
         # instance below rides the same pool-aware client.
+        # ``namespace`` is the application name when many replicated
+        # applications share one substrate: register keys shard by
+        # ``crc32(app:owner:reg)`` so each app spreads over the shared
+        # pools independently ("" = legacy single-app layout).
         super().__init__(sim, net, registry, pid)
+        self.namespace = namespace
         self.cfg = cfg or ConsensusConfig()
         self.replicas = list(replicas)
         self.n = len(replicas)
@@ -217,7 +223,8 @@ class UbftReplica(Node):
                            if self.cfg.max_batch > 1 else 0)
         self.tb = TBcastService(self, t=self.cfg.t,
                                 max_msg_bytes=slot_payload + 512)
-        self.regs = RegisterClient(self, mem_nodes, self.cfg.f_m)
+        self.regs = RegisterClient(self, mem_nodes, self.cfg.f_m,
+                                   namespace=namespace)
 
         # --- consensus state (Alg. 2 lines 1-12) ---
         self.view = 0

@@ -45,7 +45,12 @@ external membership/lease service, e.g. the provider's control plane):
   register keys are hashed ``crc32(owner:reg) % n_pools`` so many streams /
   replicated applications share disaggregated memory without one pool
   becoming the bottleneck ("shared by many replicated applications", §6.1).
-  Each pool independently satisfies the < 1 MiB Table 2 budget.
+  A client attached under an application *namespace* (see
+  :mod:`repro.core.substrate`) hashes ``crc32(app:owner:reg)`` instead, so
+  each app's register keys spread over the shared pools independently; the
+  empty namespace preserves the legacy layout bit-for-bit.  Each pool
+  independently satisfies the < 1 MiB Table 2 budget — accounted *per app*
+  when pools are shared (:meth:`MemoryPool.memory_bytes_by_owner`).
 
 Clients read the pool's *current* membership at each operation (epoch bumps
 on every reconfiguration); in-flight operations started against the previous
@@ -206,6 +211,15 @@ class MemoryNode(Node):
         WRITEs overwrite it in place (which is why READs can tear) —
         ``_Cell.prev`` is torn-read modeling, not allocated memory."""
         return sum(len(c.blob) for c in self.cells.values())
+
+    def memory_bytes_by_owner(self) -> Dict[str, int]:
+        """Occupancy split by writing owner pid — the attribution unit for
+        per-application Table 2 accounting on a shared substrate."""
+        out: Dict[str, int] = {}
+        for (owner, _reg, _sub), c in self.cells.items():
+            if c.blob:
+                out[owner] = out.get(owner, 0) + len(c.blob)
+        return out
 
 
 class _PoolManager(Node):
@@ -436,6 +450,15 @@ class MemoryPool:
         under 1 MiB per pool)."""
         return sum(n.memory_bytes() for n in self.member_nodes())
 
+    def memory_bytes_by_owner(self) -> Dict[str, int]:
+        """Occupancy of the current members split by owner pid; the
+        substrate rolls this up into per-application accounting."""
+        out: Dict[str, int] = {}
+        for n in self.member_nodes():
+            for owner, nbytes in n.memory_bytes_by_owner().items():
+                out[owner] = out.get(owner, 0) + nbytes
+        return out
+
 
 @dataclass
 class _StaticPool:
@@ -451,13 +474,19 @@ class RegisterClient:
 
     ``mem`` may be a bare list of memory-node pids (legacy static
     deployment), one :class:`MemoryPool`, or a list of pools — register
-    keys are then sharded ``crc32(owner:reg) % n_pools``.  Membership is
-    re-read from the pool directory at every operation, so reconfigurations
-    are picked up without any client-side protocol change.
+    keys are then sharded ``crc32(owner:reg) % n_pools``, or
+    ``crc32(app:owner:reg)`` when the client carries an application
+    ``namespace`` (many replicated applications over one substrate; the
+    empty namespace is the legacy single-app layout, preserved
+    bit-for-bit).  Membership is re-read from the pool directory at every
+    operation, so reconfigurations are picked up without any client-side
+    protocol change.
     """
 
-    def __init__(self, node: Node, mem, f_m: int, slot_bytes: int = 128):
+    def __init__(self, node: Node, mem, f_m: int, slot_bytes: int = 128,
+                 namespace: str = ""):
         self.node = node
+        self.namespace = namespace
         self.pools = self._normalize(mem)
         for p in self.pools:
             assert len(p.members) >= 2 * f_m + 1
@@ -488,10 +517,14 @@ class RegisterClient:
         return len(self.pools)
 
     def pool_for(self, owner: str, reg: str):
-        """Stable shard routing of register keys across pools."""
+        """Stable shard routing of register keys across pools.  Namespaced
+        clients hash ``app:owner:reg`` so each application's keys spread
+        independently; the unnamed app hashes the legacy ``owner:reg``."""
         if len(self.pools) == 1:
             return self.pools[0]
-        h = zlib.crc32(f"{owner}:{reg}".encode())
+        ns = self.namespace
+        key = f"{ns}:{owner}:{reg}" if ns else f"{owner}:{reg}"
+        h = zlib.crc32(key.encode())
         return self.pools[h % len(self.pools)]
 
     @property

@@ -1,9 +1,17 @@
 """SMR cluster wiring: replicas + memory nodes + clients (Figure 1).
 
-A :class:`Cluster` assembles 2f+1 :class:`UbftReplica`s, 2f_m+1
-:class:`MemoryNode`s and any number of :class:`Client`s on one simulator.
-Clients send unsigned requests to *all* replicas (§5.4) and complete when
-f+1 matching responses arrive.
+A :class:`Cluster` is one replicated application: 2f+1
+:class:`UbftReplica`s plus any number of :class:`Client`s.  Clusters no
+longer own their infrastructure — they :meth:`Cluster.attach` to a
+:class:`~repro.core.substrate.Substrate` (simulator + network + key
+registry + shared memory pools), so N independent applications can co-run
+on one event loop over the *same* disaggregated memory ("shared by many
+replicated applications", §8).  Clients send unsigned requests to *all*
+replicas (§5.4) and complete when f+1 matching responses arrive.
+
+``build_cluster`` remains as a thin shim (private substrate + one unnamed
+app) so existing call sites migrate incrementally; it reproduces the
+historical construction order bit-for-bit (golden traces).
 """
 
 from __future__ import annotations
@@ -14,7 +22,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 from repro.core import crypto
 from repro.core.consensus import App, ConsensusConfig, UbftReplica
 from repro.core.node import Node
-from repro.core.registers import MemoryNode, MemoryPool
+from repro.core.registers import POOL_MEMORY_BUDGET, MemoryNode, MemoryPool
+from repro.core.substrate import Substrate
 from repro.sim.events import Simulator
 from repro.sim.net import NetParams, NetworkModel
 
@@ -69,12 +78,60 @@ class Client(Node):
 
 @dataclass
 class Cluster:
+    """One replicated application over a (possibly shared) substrate."""
     sim: Simulator
     net: NetworkModel
     registry: crypto.KeyRegistry
     replicas: List[UbftReplica]
     pools: List[MemoryPool]
     clients: List[Client] = field(default_factory=list)
+    #: application name on the substrate ("" = legacy unnamed single app)
+    name: str = ""
+    #: the substrate this cluster is attached to (None only for hand-built
+    #: Cluster objects in old-style tests)
+    substrate: Optional[Substrate] = None
+
+    @classmethod
+    def attach(cls, substrate: Substrate, app_factory: Callable[[], App],
+               name: str = "", cfg: Optional[ConsensusConfig] = None,
+               replica_cls=UbftReplica,
+               budget: int = POOL_MEMORY_BUDGET) -> "Cluster":
+        """Attach one replicated application to a shared substrate.
+
+        Builds 2f+1 replicas (f from ``cfg`` alone) named
+        ``<name>/r<i>`` (bare ``r<i>`` for the unnamed app) on the
+        substrate's event loop, sharing its network, key registry and
+        memory pools.  Register keys are sharded ``crc32(name:owner:reg)``
+        so this app's slice of the shared pools is independent of its
+        neighbours'; ``budget`` is this app's per-pool Table 2 byte budget
+        (overruns surface as per-app faults via
+        ``substrate.audit_budgets()``, not as a global assert).
+        """
+        if name in substrate.apps:
+            raise ValueError(f"app {name!r} already attached to substrate")
+        cfg = cfg or ConsensusConfig(f_m=substrate.f_m)
+        if cfg.f_m != substrate.f_m:
+            # the memory fault budget is a property of the shared TCB; an
+            # app believing f_m is smaller would run f_m+1 register quorums
+            # that need not intersect on the substrate's 2·f_m+1-node pools
+            raise ValueError(
+                f"cfg.f_m={cfg.f_m} disagrees with the substrate's "
+                f"f_m={substrate.f_m} — the memory fault budget comes from "
+                f"the shared pools, not per-app config")
+        prefix = f"{name}/" if name else ""
+        replica_pids = [f"{prefix}r{i}" for i in range(2 * cfg.f + 1)]
+        replicas = [
+            replica_cls(substrate.sim, substrate.net, substrate.registry,
+                        pid, replica_pids, substrate.pools, app_factory(),
+                        cfg, namespace=name)
+            for pid in replica_pids
+        ]
+        cluster = cls(sim=substrate.sim, net=substrate.net,
+                      registry=substrate.registry, replicas=replicas,
+                      pools=substrate.pools, name=name, substrate=substrate)
+        substrate.register_app(name, cluster, tuple(replica_pids),
+                               budget=budget)
+        return cluster
 
     @property
     def mem_nodes(self) -> List[MemoryNode]:
@@ -86,11 +143,20 @@ class Cluster:
         return [r.pid for r in self.replicas]
 
     def new_client(self, pid: Optional[str] = None) -> Client:
-        pid = pid or f"c{len(self.clients)}"
+        if pid is None:
+            prefix = f"{self.name}/" if self.name else ""
+            pid = f"{prefix}c{len(self.clients)}"
         c = Client(self.sim, self.net, self.registry, pid,
                    self.replica_pids, self.replicas[0].f)
         self.clients.append(c)
         return c
+
+    def memory_by_pool(self) -> Dict[str, int]:
+        """This app's occupied disaggregated memory per shared pool
+        (Table 2, split per application)."""
+        if self.substrate is None:
+            return {p.name: p.memory_bytes() for p in self.pools}
+        return self.substrate.app_pool_bytes(self.name)
 
     def run_request(self, client: Client, payload: bytes,
                     timeout: float = 1_000_000.0) -> Tuple[bytes, float]:
@@ -133,7 +199,8 @@ class Cluster:
         return out  # type: ignore[return-value]
 
 
-def build_cluster(app_factory: Callable[[], App], f: int = 1, f_m: int = 1,
+def build_cluster(app_factory: Callable[[], App],
+                  f: Optional[int] = None, f_m: Optional[int] = None,
                   cfg: Optional[ConsensusConfig] = None,
                   params: Optional[NetParams] = None,
                   seed: int = 0,
@@ -141,28 +208,33 @@ def build_cluster(app_factory: Callable[[], App], f: int = 1, f_m: int = 1,
                   n_pools: int = 1,
                   auto_reconfigure: bool = False,
                   lease_us: float = 200.0) -> Cluster:
-    """Assemble a 2f+1-replica uBFT deployment over ``n_pools`` memory
-    pools of 2f_m+1 nodes each (register keys are sharded across pools;
-    ``auto_reconfigure`` turns on lease-based replacement of crashed
-    memory nodes)."""
-    sim = Simulator(seed=seed)
-    net = NetworkModel(sim, params)
-    registry = crypto.KeyRegistry()
-    cfg = cfg or ConsensusConfig(f=f, f_m=f_m)
-    cfg.f, cfg.f_m = f, f_m
+    """Legacy shim: a private :class:`Substrate` plus one unnamed app.
 
-    replica_pids = [f"r{i}" for i in range(2 * f + 1)]
-    # pool 0 keeps the historical m0/m1/... pids; extra shards are p<i>m<j>
-    pools = [
-        MemoryPool(sim, net, registry, f_m=f_m, name=f"pool{i}",
-                   prefix=("m" if i == 0 else f"p{i}m"),
-                   auto_reconfigure=auto_reconfigure, lease_us=lease_us)
-        for i in range(n_pools)
-    ]
-    replicas = [
-        replica_cls(sim, net, registry, pid, replica_pids, pools,
-                    app_factory(), cfg)
-        for pid in replica_pids
-    ]
-    return Cluster(sim=sim, net=net, registry=registry,
-                   replicas=replicas, pools=pools)
+    Assembles a 2f+1-replica uBFT deployment over ``n_pools`` memory pools
+    of 2f_m+1 nodes each, exactly as the pre-substrate builder did
+    (identical pids, process-creation order, and draw order — the recorded
+    golden traces hold bit-for-bit).
+
+    In the substrate API the fault parameters come from ``cfg`` alone.
+    When ``cfg`` is supplied together with explicit ``f``/``f_m`` keywords
+    that *disagree* with it, this shim raises instead of silently
+    clobbering the config (the historical footgun: ``cfg.f`` used to be
+    overwritten by the defaulted keyword).
+    """
+    if cfg is not None:
+        if f is not None and f != cfg.f:
+            raise ValueError(
+                f"conflicting fault budgets: build_cluster(f={f}) vs "
+                f"cfg.f={cfg.f} — with cfg=..., f comes from cfg alone")
+        if f_m is not None and f_m != cfg.f_m:
+            raise ValueError(
+                f"conflicting fault budgets: build_cluster(f_m={f_m}) vs "
+                f"cfg.f_m={cfg.f_m} — with cfg=..., f_m comes from cfg alone")
+    else:
+        cfg = ConsensusConfig(f=1 if f is None else f,
+                              f_m=1 if f_m is None else f_m)
+    substrate = Substrate(f_m=cfg.f_m, n_pools=n_pools, params=params,
+                          seed=seed, auto_reconfigure=auto_reconfigure,
+                          lease_us=lease_us)
+    return Cluster.attach(substrate, app_factory, name="", cfg=cfg,
+                          replica_cls=replica_cls)

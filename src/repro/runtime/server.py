@@ -53,18 +53,49 @@ class ReplicatedServer:
     cluster: Cluster
 
     @classmethod
-    def build(cls, decode_fn, f: int = 1, f_m: int = 1, n_pools: int = 1,
+    def build(cls, decode_fn, f: Optional[int] = None,
+              f_m: Optional[int] = None, n_pools: int = 1,
               auto_reconfigure: bool = False,
-              cfg: Optional[ConsensusConfig] = None) -> "ReplicatedServer":
+              cfg: Optional[ConsensusConfig] = None,
+              substrate=None, name: str = "") -> "ReplicatedServer":
         """``n_pools`` shards the serving cluster's register keys over that
         many disaggregated-memory pools (the paper's "shared by many
         replicated applications" deployment); ``auto_reconfigure`` enables
         lease-based replacement of crashed memory nodes underneath a
-        running token server."""
-        cfg = cfg or ConsensusConfig(max_request_bytes=4096)
-        cluster = build_cluster(lambda: TokenServerApp(decode_fn), f=f,
-                                f_m=f_m, n_pools=n_pools,
-                                auto_reconfigure=auto_reconfigure, cfg=cfg)
+        running token server.
+
+        Pass ``substrate=`` (and a ``name``) to attach the token server to
+        an *existing* shared substrate instead of building a private one —
+        several replicated servers (or a server next to other replicated
+        apps) then co-run over the same disaggregated-memory pools.  With
+        ``cfg=`` the fault budgets come from the config alone (a
+        conflicting explicit ``f``/``f_m`` raises, mirroring
+        ``build_cluster``); with ``substrate=`` the pool topology comes
+        from the substrate alone."""
+        if cfg is not None:
+            if f is not None and f != cfg.f:
+                raise ValueError(f"conflicting fault budgets: f={f} vs "
+                                 f"cfg.f={cfg.f}")
+            if f_m is not None and f_m != cfg.f_m:
+                raise ValueError(f"conflicting fault budgets: f_m={f_m} vs "
+                                 f"cfg.f_m={cfg.f_m}")
+        else:
+            cfg = ConsensusConfig(f=1 if f is None else f,
+                                  f_m=1 if f_m is None else f_m,
+                                  max_request_bytes=4096)
+        if substrate is not None:
+            if n_pools != 1 or auto_reconfigure:
+                raise ValueError(
+                    "n_pools/auto_reconfigure describe a private substrate "
+                    "— with substrate=, the pool topology is already fixed")
+            from repro.core.smr import Cluster
+            cluster = Cluster.attach(substrate, lambda: TokenServerApp(
+                decode_fn), name=name, cfg=cfg)
+        else:
+            cluster = build_cluster(lambda: TokenServerApp(decode_fn),
+                                    n_pools=n_pools,
+                                    auto_reconfigure=auto_reconfigure,
+                                    cfg=cfg)
         return cls(cluster=cluster)
 
     def generate(self, client, session: str, prompt: List[int], n: int,

@@ -111,10 +111,19 @@ class ReplicatedTrainer:
     history: List[Dict] = field(default_factory=list)
 
     @classmethod
-    def build(cls, train_step_fn, f: int = 1,
+    def build(cls, train_step_fn, f: Optional[int] = None,
               cfg: Optional[ConsensusConfig] = None) -> "ReplicatedTrainer":
-        cluster = build_cluster(CoordinatorApp, f=f, cfg=cfg)
-        return cls(cluster=cluster, train_step_fn=train_step_fn, f=f)
+        # f comes from cfg alone in the substrate API; a conflicting
+        # explicit f raises (mirrors build_cluster) instead of being
+        # silently dropped.
+        if cfg is not None:
+            if f is not None and f != cfg.f:
+                raise ValueError(f"conflicting fault budgets: f={f} vs "
+                                 f"cfg.f={cfg.f}")
+        else:
+            cfg = ConsensusConfig(f=1 if f is None else f)
+        cluster = build_cluster(CoordinatorApp, cfg=cfg)
+        return cls(cluster=cluster, train_step_fn=train_step_fn, f=cfg.f)
 
     def _submit(self, client, payload: dict, timeout=60_000_000.0) -> dict:
         raw, _lat = self.cluster.run_request(

@@ -1,0 +1,345 @@
+"""Declarative scenarios: topology + apps + workloads + faults, executed.
+
+A :class:`ScenarioSpec` describes a whole deployment the way the paper's
+evaluation sections describe theirs: one shared disaggregated-memory
+substrate (f_m, n_pools, network parameters, seed), any number of
+replicated applications attached to it (:class:`AppSpec` — app factory,
+consensus config, per-pool byte budget), a workload per app
+(:class:`Workload` — closed-loop back-to-back clients or an open-loop
+seeded Poisson arrival process), and an optional
+:class:`~repro.sim.faults.FaultSchedule`.  :func:`run_scenario` builds it,
+drives every workload concurrently on the one event loop, audits the
+per-app Table 2 budgets, and returns per-app latencies / counters /
+memory occupancy.
+
+This replaces the hand-rolled setup previously copied across every
+``benchmarks/fig*.py``, ``benchmarks/throughput.py``,
+``benchmarks/fault_scenarios.py``, the test fixtures and the examples —
+and it is the only way to express the paper's headline deployment: *many*
+replicated applications sharing one substrate (§8), since a private
+``build_cluster`` per app cannot put two apps on one event loop.
+
+Workload semantics
+------------------
+* ``closed`` — ``n_clients`` clients re-fire back-to-back.  With
+  ``n_requests`` set, the app completes after that many requests total
+  (the classic figure workload); with ``duration_us`` set instead, clients
+  re-fire until the window closes (the throughput workload).
+* ``open`` — arrivals are a seeded Poisson process (``rate_rps`` per
+  client over ``duration_us``); requests are injected at their arrival
+  times *regardless of completions*, so interference sweeps do not
+  self-throttle the way closed loops do.  Arrival draws come from a
+  dedicated ``numpy`` RNG (``seed``), never from the simulator's RNG —
+  adding an open-loop app cannot perturb the network jitter stream of its
+  neighbours.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.consensus import App, ConsensusConfig
+from repro.core.registers import POOL_MEMORY_BUDGET
+from repro.core.smr import Cluster
+from repro.core.substrate import Substrate
+from repro.sim.faults import FaultInjector, FaultSchedule
+from repro.sim.net import NetParams
+
+
+# --------------------------------------------------------------------------
+# Specs
+# --------------------------------------------------------------------------
+@dataclass
+class Workload:
+    """One app's load: closed-loop (count- or duration-bounded) or
+    open-loop Poisson arrivals."""
+    kind: str = "closed"               # "closed" | "open"
+    n_requests: int = 0                # closed: total requests to complete
+    duration_us: float = 0.0           # closed: window; open: arrival window
+    rate_rps: float = 0.0              # open: Poisson rate per client (req/s)
+    payload: bytes = b"x" * 32
+    payload_fn: Optional[Callable[[int], bytes]] = None
+    n_clients: int = 1
+    seed: int = 0                      # open: arrival-process stream
+    timeout_us: float = 60_000_000.0   # drain bound after the window closes
+
+    def __post_init__(self):
+        if self.kind not in ("closed", "open"):
+            raise ValueError(f"unknown workload kind {self.kind!r}")
+        if self.kind == "closed":
+            if not (self.n_requests or self.duration_us):
+                raise ValueError(
+                    "closed workload needs n_requests or duration_us")
+            if self.n_requests and self.duration_us:
+                raise ValueError(
+                    "closed workload takes n_requests OR duration_us, not "
+                    "both (a count target cannot be guaranteed inside a "
+                    "fixed window)")
+        if self.kind == "open" and not (self.rate_rps > 0 and
+                                        self.duration_us > 0):
+            raise ValueError("open workload needs rate_rps and duration_us")
+
+    def payload_for(self, i: int) -> bytes:
+        return self.payload_fn(i) if self.payload_fn is not None \
+            else self.payload
+
+
+@dataclass
+class AppSpec:
+    """One replicated application on the shared substrate."""
+    name: str
+    app: Callable[[], App]
+    cfg: Optional[ConsensusConfig] = None
+    workload: Optional[Workload] = None
+    budget: int = POOL_MEMORY_BUDGET   # per-pool Table 2 byte budget
+    replica_cls: Any = None            # default: UbftReplica
+
+
+@dataclass
+class ScenarioSpec:
+    """Topology + apps + workloads + faults, declaratively."""
+    apps: List[AppSpec]
+    f_m: int = 1
+    n_pools: int = 1
+    seed: int = 0
+    params: Optional[NetParams] = None
+    auto_reconfigure: bool = False
+    lease_us: float = 200.0
+    #: a FaultSchedule, or a callable ``(substrate) -> FaultSchedule`` for
+    #: schedules that need the live pools (FaultSchedule.seeded)
+    faults: Any = None
+    #: extra settle time after all workloads complete (lets view changes,
+    #: reconfigurations and replica convergence finish before assertions)
+    drain_us: float = 0.0
+
+
+# --------------------------------------------------------------------------
+# Results
+# --------------------------------------------------------------------------
+@dataclass
+class AppResult:
+    name: str
+    latencies: List[float]
+    issued: int
+    completed: int
+    #: this app's occupied disaggregated memory per pool (Table 2 per app)
+    memory_by_pool: Dict[str, int]
+
+    @property
+    def stalled(self) -> int:
+        return self.issued - self.completed
+
+
+@dataclass
+class ScenarioResult:
+    substrate: Substrate
+    clusters: Dict[str, Cluster]
+    apps: Dict[str, AppResult]
+    injector: Optional[FaultInjector]
+    #: per-app budget overruns recorded by the substrate audit
+    budget_overruns: List[Tuple[float, str, str, int, int]]
+    msgs_sent: int
+    bytes_sent: int
+    events_processed: int
+
+    def latencies(self, name: str = "") -> List[float]:
+        return self.apps[name].latencies
+
+
+# --------------------------------------------------------------------------
+# Workload drivers
+# --------------------------------------------------------------------------
+class _WorkloadRun:
+    """Live state of one app's workload on the event loop."""
+
+    def __init__(self, cluster: Cluster, w: Workload):
+        self.cluster = cluster
+        self.w = w
+        self.lats: List[float] = []
+        self.issued = 0
+        self.completed = 0
+        self._open_seq = -1
+        self.t_end = (cluster.sim.now + w.duration_us
+                      if w.duration_us else None)
+        self.clients = [cluster.new_client() for _ in range(w.n_clients)]
+        if w.kind == "closed":
+            self._start_closed()
+        else:
+            self._start_open()
+
+    # ------------------------------------------------------------- closed
+    def _start_closed(self) -> None:
+        for cl in self.clients:
+            self._fire_closed(cl)
+
+    def _fire_closed(self, cl) -> None:
+        w, sim = self.w, self.cluster.sim
+        if w.n_requests and self.issued >= w.n_requests:
+            return
+        if self.t_end is not None and sim.now >= self.t_end:
+            return
+        i = self.issued
+        self.issued += 1
+
+        def done(_res, lat: float) -> None:
+            self.completed += 1
+            self.lats.append(lat)
+            self._fire_closed(cl)
+
+        cl.request(w.payload_for(i), done)
+
+    # --------------------------------------------------------------- open
+    def _start_open(self) -> None:
+        """Schedule the whole seeded Poisson arrival process up front.
+
+        Inter-arrival gaps are exponential with mean ``1e6 / rate_rps`` µs,
+        drawn client-by-client from a dedicated RNG — the schedule is a
+        pure function of (seed, rate, duration, n_clients) and is
+        independent of everything else in the simulation.
+        """
+        w, sim = self.w, self.cluster.sim
+        rng = np.random.default_rng(w.seed)
+        mean_gap = 1e6 / w.rate_rps
+        t0 = sim.now
+        for cl in self.clients:
+            t = t0 + float(rng.exponential(mean_gap))
+            while t < t0 + w.duration_us:
+                sim.at(t, (lambda cl=cl: self._fire_open(cl)),
+                       note="workload.arrival")
+                self.issued += 1
+                t += float(rng.exponential(mean_gap))
+
+    def _fire_open(self, cl) -> None:
+        self._open_seq += 1
+        i = self._open_seq
+
+        def done(_res, lat: float) -> None:
+            self.completed += 1
+            self.lats.append(lat)
+
+        cl.request(self.w.payload_for(i), done)
+
+    # ----------------------------------------------------------- progress
+    def done(self) -> bool:
+        w = self.w
+        if w.kind == "closed":
+            if w.n_requests:
+                return self.completed >= w.n_requests
+            # duration-bounded closed loop: the window IS the measurement —
+            # in-flight stragglers are not drained (classic throughput
+            # window; ``issued - completed`` shows up as ``stalled``)
+            return (self.t_end is not None and
+                    self.cluster.sim.now >= self.t_end)
+        # open loop: every arrival of the window issued and completed
+        if self.t_end is not None and self.cluster.sim.now < self.t_end:
+            return False
+        return self.completed >= self.issued
+
+
+def open_loop(cluster: Cluster, payload_fn: Callable[[int], bytes],
+              rate_rps: float, duration_us: float, n_clients: int = 1,
+              seed: int = 0, timeout_us: float = 60_000_000.0) -> List[float]:
+    """Standalone open-loop driver for one already-built cluster: seeded
+    Poisson arrivals at ``rate_rps`` per client over ``duration_us``, then
+    drain.  Returns completion latencies (see ``benchmarks/common.py``'s
+    ``open_loop_cluster`` wrapper)."""
+    run = _WorkloadRun(cluster, Workload(
+        kind="open", rate_rps=rate_rps, duration_us=duration_us,
+        payload_fn=payload_fn, n_clients=n_clients, seed=seed,
+        timeout_us=timeout_us))
+    cluster.sim.run(until=cluster.sim.now + duration_us)
+    ok = cluster.sim.run_until(run.done, timeout=timeout_us)
+    if not ok:
+        raise TimeoutError(
+            f"open loop stalled: {run.completed}/{run.issued} completed")
+    return run.lats
+
+
+# --------------------------------------------------------------------------
+# Execution
+# --------------------------------------------------------------------------
+def build_deployment(spec: ScenarioSpec
+                     ) -> Tuple[Substrate, Dict[str, Cluster]]:
+    """Build the substrate and attach every app — no workload driving.
+    For benchmarks that need manual control (tracing, warmup) over a
+    declaratively-specified topology."""
+    substrate = Substrate(f_m=spec.f_m, n_pools=spec.n_pools,
+                          params=spec.params, seed=spec.seed,
+                          auto_reconfigure=spec.auto_reconfigure,
+                          lease_us=spec.lease_us)
+    clusters: Dict[str, Cluster] = {}
+    for a in spec.apps:
+        kw: Dict[str, Any] = {}
+        if a.replica_cls is not None:
+            kw["replica_cls"] = a.replica_cls
+        clusters[a.name] = Cluster.attach(substrate, a.app, name=a.name,
+                                          cfg=a.cfg, budget=a.budget, **kw)
+    return substrate, clusters
+
+
+def run_scenario(spec: ScenarioSpec) -> ScenarioResult:
+    """Execute a scenario end to end: build, inject faults, drive every
+    app's workload concurrently on the shared event loop, drain, audit the
+    per-app memory budgets."""
+    substrate, clusters = build_deployment(spec)
+    sim = substrate.sim
+
+    injector: Optional[FaultInjector] = None
+    if spec.faults is not None:
+        sched = spec.faults(substrate) if callable(spec.faults) \
+            else spec.faults
+        if not isinstance(sched, FaultSchedule):
+            sched = FaultSchedule(sched)
+        injector = FaultInjector(sim, substrate.net,
+                                 substrate.pools).install(sched)
+
+    runs: Dict[str, _WorkloadRun] = {}
+    for a in spec.apps:
+        if a.workload is not None:
+            runs[a.name] = _WorkloadRun(clusters[a.name], a.workload)
+
+    # Phase 1: run out the longest load window (duration-bounded apps keep
+    # injecting/refiring until their own t_end inside this window).
+    t_end = max((r.t_end for r in runs.values() if r.t_end is not None),
+                default=None)
+    if t_end is not None:
+        sim.run(until=t_end)
+    # Phase 2: drain — count-bounded closed loops finish their totals,
+    # open loops complete their in-flight tail.
+    if runs:
+        timeout = max(r.w.timeout_us for r in runs.values())
+        ok = sim.run_until(lambda: all(r.done() for r in runs.values()),
+                           timeout=timeout)
+        if not ok:
+            detail = ", ".join(
+                f"{name or '<default>'}: {r.completed}/"
+                f"{r.issued if r.issued else r.w.n_requests}"
+                for name, r in runs.items() if not r.done())
+            raise TimeoutError(f"scenario stalled after {timeout} µs "
+                               f"({detail})")
+    if spec.drain_us:
+        sim.run(until=sim.now + spec.drain_us)
+
+    usage = substrate.memory_by_app()
+    overruns = substrate.audit_budgets(usage)
+    apps = {
+        name: AppResult(name=name, latencies=r.lats, issued=r.issued,
+                        completed=r.completed,
+                        memory_by_pool=dict(usage.get(name, {})))
+        for name, r in runs.items()
+    }
+    # apps without a workload still get their memory accounting
+    for a in spec.apps:
+        if a.name not in apps:
+            apps[a.name] = AppResult(name=a.name, latencies=[], issued=0,
+                                     completed=0,
+                                     memory_by_pool=dict(
+                                         usage.get(a.name, {})))
+    return ScenarioResult(substrate=substrate, clusters=clusters, apps=apps,
+                          injector=injector, budget_overruns=overruns,
+                          msgs_sent=substrate.net.msgs_sent,
+                          bytes_sent=substrate.net.bytes_sent,
+                          events_processed=sim.events_processed)

@@ -147,11 +147,65 @@ def scenario_faults_reconfig() -> dict:
     }
 
 
+def scenario_shared_substrate() -> dict:
+    """Two replicated applications on ONE substrate (shared pools), a
+    mid-run pool reconfiguration underneath both, and one open-loop
+    workload — gates the multi-app attach path, the app-namespaced
+    register sharding, the seeded Poisson arrival process, and the per-app
+    Table 2 accounting with one digest."""
+    from repro.apps.kvstore import KVStoreApp, set_req
+    from repro.core.consensus import ConsensusConfig
+    from repro.scenario import AppSpec, ScenarioSpec, Workload, run_scenario
+    from repro.sim.faults import FaultSchedule
+
+    def cfg():
+        return ConsensusConfig(t=16, window=16, slow_mode="always",
+                               ctb_fast_enabled=False,
+                               view_timeout_us=20_000.0)
+
+    sched = (FaultSchedule()
+             .add(700.0, "crash", "m1")
+             .add(1500.0, "reconfigure", ("pool0", "m1")))
+    spec = ScenarioSpec(
+        n_pools=2, seed=11, faults=sched, drain_us=2000.0,
+        apps=[
+            AppSpec(name="A", app=KVStoreApp, cfg=cfg(),
+                    workload=Workload(kind="closed", n_requests=10,
+                                      payload_fn=lambda i: set_req(
+                                          b"a%d" % (i % 4), b"v%d" % i),
+                                      timeout_us=5_000_000.0)),
+            AppSpec(name="B", app=KVStoreApp, cfg=cfg(),
+                    workload=Workload(kind="open", rate_rps=6000.0,
+                                      duration_us=2500.0,
+                                      payload_fn=lambda i: set_req(
+                                          b"b%d" % (i % 4), b"w%d" % i),
+                                      seed=21, timeout_us=5_000_000.0)),
+        ])
+    res = run_scenario(spec)
+    pool0 = res.substrate.pools[0]
+    recfg_times = [t for (t, _d, _f) in pool0.reconfigurations]
+    mem = [nbytes for name in ("A", "B")
+           for _pool, nbytes in sorted(res.apps[name].memory_by_pool.items())]
+    lats = res.apps["A"].latencies + res.apps["B"].latencies
+    return {
+        "digest": _digest(lats + recfg_times,
+                          [res.msgs_sent, res.bytes_sent,
+                           res.apps["B"].issued, len(recfg_times)] + mem),
+        "n_a": len(res.apps["A"].latencies),
+        "n_b": len(res.apps["B"].latencies),
+        "reconfigurations": len(recfg_times),
+        "msgs_sent": res.msgs_sent,
+        "bytes_sent": res.bytes_sent,
+        "mem_per_app_pool": mem,
+    }
+
+
 SCENARIOS = {
     "throughput_mini": scenario_throughput_mini,
     "slow_path": scenario_slow_path,
     "mu_baseline": scenario_mu_baseline,
     "faults_reconfig": scenario_faults_reconfig,
+    "shared_substrate": scenario_shared_substrate,
 }
 
 

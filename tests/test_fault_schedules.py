@@ -17,6 +17,7 @@ deterministic seeds, and asserts after every run that
 import pytest
 
 from repro.apps.kvstore import KVStoreApp, set_req
+from repro.core import crypto
 from repro.core.consensus import ConsensusConfig
 from repro.core.registers import POOL_MEMORY_BUDGET as POOL_BUDGET
 from repro.core.smr import build_cluster
@@ -170,6 +171,98 @@ def test_reconfigure_noop_is_logged_as_skipped(pooled_cluster,
     c.sim.run(until=1000.0)
     assert inj.log == []            # nothing was crashed: nothing applied
     assert len(inj.skipped) == 1
+
+
+# --------------------------------------------------------------------------
+# Cross-app isolation on a shared substrate (ISSUE 4)
+# --------------------------------------------------------------------------
+def _run_kv_workload(cluster, n_reqs=10, timeout=600_000_000):
+    """Like _run_workload but keyed per app (no cross-app key overlap)."""
+    client = cluster.new_client()
+    acked = {}
+    for i in range(n_reqs):
+        k, v = b"%s.k%d" % (cluster.name.encode(), i % 5), b"v%d" % i
+        r, _ = cluster.run_request(client, set_req(k, v), timeout=timeout)
+        assert r == b"OK"
+        acked[k] = v
+    return acked
+
+
+def _assert_app_safe(substrate, cluster, acked):
+    alive = [r for r in cluster.replicas if not r.crashed]
+    assert len(alive) >= 2
+    for rep in alive:
+        for k, v in acked.items():
+            assert rep.app.store.get(k) == v, (rep.pid, k, v)
+    for a, b in zip(alive, alive[1:]):
+        assert a.app.store == b.app.store
+    # per-app Table 2 bound on the SHARED pools (not just the pool total)
+    for pool_name, nbytes in substrate.app_pool_bytes(cluster.name).items():
+        assert nbytes < POOL_BUDGET, (cluster.name, pool_name, nbytes)
+
+
+def test_cross_app_isolation_memory_crash_and_reconfig(shared_substrate,
+                                                       fault_injector):
+    """A crashed memory node + pool reconfiguration while app A is active
+    must not violate safety or per-app memory bounds in app B on the same
+    substrate (both apps run the registers-heavy slow path)."""
+    substrate, clusters = shared_substrate(["A", "B"], n_pools=2,
+                                           cfg_fn=_registers_cfg)
+    a, b = clusters["A"], clusters["B"]
+    sched = (FaultSchedule()
+             .add(600.0, "crash", "m0")
+             .add(1800.0, "reconfigure", ("pool0", "m0")))
+    inj = FaultInjector(substrate.sim, substrate.net,
+                        substrate.pools).install(sched)
+    # interleave the two apps' workloads on the one event loop
+    acked_a, acked_b = {}, {}
+    for i in range(12):
+        cluster, acked = (a, acked_a) if i % 2 == 0 else (b, acked_b)
+        client = (cluster.clients[0] if cluster.clients
+                  else cluster.new_client())
+        k, v = b"%s.k%d" % (cluster.name.encode(), i % 5), b"v%d" % i
+        r, _ = cluster.run_request(client, set_req(k, v),
+                                   timeout=600_000_000)
+        assert r == b"OK"
+        acked[k] = v
+    substrate.sim.run(until=substrate.sim.now + 100_000)
+    _assert_app_safe(substrate, a, acked_a)
+    _assert_app_safe(substrate, b, acked_b)
+    assert len(inj.log) == 2
+    assert substrate.pools[0].reconfigurations
+    assert not substrate.audit_budgets()
+
+
+def test_cross_app_isolation_byzantine_leader(shared_substrate):
+    """App A's leader equivocates (different PREPAREs to different
+    followers below CTBcast).  App B — sharing the substrate — must stay
+    safe and live, and A's own followers must not diverge."""
+    substrate, clusters = shared_substrate(["A", "B"], n_pools=2,
+                                           cfg_fn=_registers_cfg)
+    a, b = clusters["A"], clusters["B"]
+    leader = a.replicas[0]
+    cl_a = a.new_client()
+
+    reqA = (("evil", 0), cl_a.pid, set_req(b"k", b"A1"))
+    reqB = (("evil", 0), cl_a.pid, set_req(b"k", b"A2"))
+    stream = leader.my_ctb._s_lock
+    leader.tb.broadcast(stream, 0, ("PREPARE", 0, 0, reqA), ["A/r1"])
+    leader.tb.broadcast(stream, 0, ("PREPARE", 0, 0, reqB), ["A/r2"])
+    leader.tb.broadcast(stream, 0, ("PREPARE", 0, 0, reqA), ["A/r0"])
+    substrate.sim.run(until=substrate.sim.now + 50_000)
+
+    # A's followers never decide different values for the equivocated slot
+    decided = [crypto.encode(rep.decided[0]) for rep in a.replicas[1:]
+               if 0 in rep.decided]
+    assert len(set(decided)) <= 1
+    # B is fully functional and bounded despite A's Byzantine leader
+    acked_b = _run_kv_workload(b, n_reqs=10)
+    substrate.sim.run(until=substrate.sim.now + 100_000)
+    _assert_app_safe(substrate, b, acked_b)
+    # ...and B's stores never saw A's keys
+    for rep in b.replicas:
+        assert b"k" not in rep.app.store
+    assert not substrate.audit_budgets()
 
 
 def test_reconfigure_sync_timeout_unwedges_pool():

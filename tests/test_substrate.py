@@ -1,0 +1,221 @@
+"""Substrate / Cluster.attach / ScenarioSpec — the multi-application API.
+
+Covers the three new layers (ISSUE 4):
+
+* ``Substrate`` — shared simulator/network/registry/pools, per-app
+  accounting and per-app budget faults;
+* ``Cluster.attach`` — N independent 2f+1 clusters co-running on one
+  event loop over the same pools, with app-namespaced pids and
+  ``crc32(app:owner:reg)`` register sharding;
+* ``ScenarioSpec``/``run_scenario`` — declarative topology + workloads
+  (closed and open loop) + faults;
+* the ``build_cluster`` shim — legacy layout preserved, f/f_m conflicts
+  raise instead of silently clobbering the caller's config.
+"""
+
+import pytest
+
+from repro.apps.flip import FlipApp
+from repro.apps.kvstore import KVStoreApp, set_req
+from repro.core.consensus import ConsensusConfig
+from repro.core.registers import RegisterClient
+from repro.core.smr import Cluster, build_cluster
+from repro.core.substrate import Substrate
+from repro.scenario import (AppSpec, ScenarioSpec, Workload, open_loop,
+                            run_scenario)
+
+
+def _slow_cfg(**kw):
+    base = dict(t=16, window=16, slow_mode="always", ctb_fast_enabled=False,
+                view_timeout_us=20_000.0)
+    base.update(kw)
+    return ConsensusConfig(**base)
+
+
+# --------------------------------------------------------------------------
+# Substrate + attach
+# --------------------------------------------------------------------------
+def test_two_apps_share_one_substrate_and_both_make_progress():
+    substrate = Substrate(n_pools=2)
+    a = Cluster.attach(substrate, KVStoreApp, name="A", cfg=_slow_cfg())
+    b = Cluster.attach(substrate, KVStoreApp, name="B", cfg=_slow_cfg())
+
+    assert a.replica_pids == ["A/r0", "A/r1", "A/r2"]
+    assert b.replica_pids == ["B/r0", "B/r1", "B/r2"]
+    assert a.pools is b.pools  # genuinely the same TCB
+
+    ca, cb = a.new_client(), b.new_client()
+    assert ca.pid == "A/c0" and cb.pid == "B/c0"
+    ra, _ = a.run_request(ca, set_req(b"x", b"from-A"))
+    rb, _ = b.run_request(cb, set_req(b"x", b"from-B"))
+    assert ra == b"OK" and rb == b"OK"
+    # same key, different apps: no cross-talk through the shared memory
+    for rep in a.replicas:
+        assert rep.app.store[b"x"] == b"from-A"
+    for rep in b.replicas:
+        assert rep.app.store[b"x"] == b"from-B"
+
+
+def test_duplicate_app_name_rejected():
+    substrate = Substrate()
+    Cluster.attach(substrate, FlipApp, name="A")
+    with pytest.raises(ValueError, match="already attached"):
+        Cluster.attach(substrate, FlipApp, name="A")
+
+
+def test_namespaced_register_sharding_differs_between_apps():
+    """crc32(app:owner:reg) — the same (owner, reg) pair must not be
+    pinned to the same shard for every app (and "" preserves the legacy
+    crc32(owner:reg) routing)."""
+    substrate = Substrate(n_pools=4)
+    legacy = Cluster.attach(substrate, FlipApp, name="")
+    rc = legacy.replicas[0].regs
+    assert rc.namespace == ""
+    import zlib
+    for owner, reg in [("r0", "r0/3"), ("r1", "r1/7")]:
+        expect = substrate.pools[zlib.crc32(f"{owner}:{reg}".encode()) % 4]
+        assert rc.pool_for(owner, reg) is expect
+
+    # different namespaces spread the same key differently somewhere
+    node = legacy.replicas[0]
+    shards = {
+        ns: [RegisterClient(node, substrate.pools, 1, namespace=ns
+                            ).pool_for("r0", f"r0/{k}").name
+             for k in range(16)]
+        for ns in ("A", "B")
+    }
+    assert shards["A"] != shards["B"]
+
+
+def test_per_app_memory_accounting_sums_to_pool_totals():
+    substrate = Substrate(n_pools=2)
+    a = Cluster.attach(substrate, KVStoreApp, name="A", cfg=_slow_cfg())
+    b = Cluster.attach(substrate, KVStoreApp, name="B", cfg=_slow_cfg())
+    for cluster in (a, b):
+        cl = cluster.new_client()
+        for i in range(4):
+            cluster.run_request(cl, set_req(b"k%d" % i, b"v"))
+    usage = substrate.memory_by_app()
+    assert usage["A"] and usage["B"]
+    for pool in substrate.pools:
+        total = pool.memory_bytes()
+        attributed = sum(by_pool.get(pool.name, 0)
+                         for by_pool in usage.values())
+        assert attributed == total, pool.name
+    # the per-cluster view agrees with the substrate rollup
+    assert a.memory_by_pool() == usage["A"]
+
+
+def test_budget_overrun_is_a_per_app_fault_not_a_global_assert():
+    substrate = Substrate(n_pools=1)
+    a = Cluster.attach(substrate, KVStoreApp, name="A", cfg=_slow_cfg(),
+                       budget=1024)  # absurdly small: guaranteed overrun
+    b = Cluster.attach(substrate, KVStoreApp, name="B", cfg=_slow_cfg())
+    for cluster in (a, b):
+        cl = cluster.new_client()
+        for i in range(3):
+            cluster.run_request(cl, set_req(b"k%d" % i, b"v" * 32))
+    overruns = substrate.audit_budgets()
+    assert overruns and all(app == "A" for (_t, app, _p, _b, _bud)
+                            in overruns)
+    assert substrate.budget_faults == overruns
+    # B is unaffected: no fault recorded against it, and it keeps running
+    r, _ = b.run_request(b.clients[0], set_req(b"after", b"audit"))
+    assert r == b"OK"
+
+
+# --------------------------------------------------------------------------
+# build_cluster shim
+# --------------------------------------------------------------------------
+def test_shim_preserves_legacy_layout():
+    c = build_cluster(FlipApp, n_pools=2)
+    assert c.replica_pids == ["r0", "r1", "r2"]
+    assert [p.name for p in c.pools] == ["pool0", "pool1"]
+    assert c.pools[0].members == ["m0", "m1", "m2"]
+    assert c.pools[1].members == ["p1m0", "p1m1", "p1m2"]
+    assert c.new_client().pid == "c0"
+    assert c.substrate is not None and "" in c.substrate.apps
+
+
+def test_shim_raises_on_conflicting_fault_budgets():
+    cfg = ConsensusConfig(f=1, f_m=1)
+    with pytest.raises(ValueError, match="conflicting fault budgets"):
+        build_cluster(FlipApp, f=2, cfg=cfg)
+    with pytest.raises(ValueError, match="conflicting fault budgets"):
+        build_cluster(FlipApp, f_m=2, cfg=cfg)
+    # agreement (or omission) is fine, and cfg is never mutated
+    c = build_cluster(FlipApp, f=1, cfg=cfg)
+    assert cfg.f == 1 and c.replicas[0].f == 1
+    c = build_cluster(FlipApp, cfg=ConsensusConfig(f=2))
+    assert len(c.replicas) == 5  # f comes from cfg alone
+
+
+# --------------------------------------------------------------------------
+# ScenarioSpec / workloads
+# --------------------------------------------------------------------------
+def test_run_scenario_two_apps_closed_plus_open():
+    acked = {}
+
+    def kv_payload(i):
+        k, v = b"k%d" % (i % 4), b"v%d" % i
+        acked[k] = v
+        return set_req(k, v)
+
+    spec = ScenarioSpec(
+        n_pools=2,
+        apps=[
+            AppSpec(name="A", app=KVStoreApp, cfg=_slow_cfg(),
+                    workload=Workload(kind="closed", n_requests=8,
+                                      payload_fn=kv_payload)),
+            AppSpec(name="B", app=FlipApp, cfg=_slow_cfg(),
+                    workload=Workload(kind="open", rate_rps=10_000.0,
+                                      duration_us=1500.0,
+                                      payload=b"y" * 8, seed=3)),
+        ])
+    res = run_scenario(spec)
+    assert res.apps["A"].completed == 8
+    assert res.apps["B"].completed == res.apps["B"].issued > 0
+    assert not res.budget_overruns
+    a = res.clusters["A"]
+    for rep in a.replicas:
+        for k, v in acked.items():
+            assert rep.app.store.get(k) == v
+    # flips really executed on B's replicas, not A's
+    assert all(r.app.count > 0 for r in res.clusters["B"].replicas)
+
+
+def test_open_loop_arrivals_are_seeded_and_deterministic():
+    def arrivals(seed):
+        c = build_cluster(FlipApp, seed=0)
+        lats = open_loop(c, lambda i: b"z" * 16, rate_rps=50_000.0,
+                         duration_us=800.0, seed=seed)
+        return len(lats), tuple(lats)
+
+    n1, l1 = arrivals(seed=5)
+    n2, l2 = arrivals(seed=5)
+    n3, l3 = arrivals(seed=6)
+    assert n1 > 0 and (n1, l1) == (n2, l2)
+    assert (n3, l3) != (n1, l1)
+
+
+def test_workload_validation():
+    with pytest.raises(ValueError):
+        Workload(kind="open")                # no rate/duration
+    with pytest.raises(ValueError):
+        Workload(kind="closed")              # no count/duration
+    with pytest.raises(ValueError):
+        Workload(kind="closed", n_requests=10, duration_us=100.0)  # both
+    with pytest.raises(ValueError):
+        Workload(kind="sawtooth", n_requests=1)
+
+
+def test_attach_rejects_f_m_disagreeing_with_substrate():
+    """An app's cfg.f_m must equal the substrate's — a smaller value would
+    run register quorums that need not intersect on the shared pools."""
+    substrate = Substrate(f_m=2)
+    with pytest.raises(ValueError, match="f_m"):
+        Cluster.attach(substrate, FlipApp, name="A",
+                       cfg=ConsensusConfig(f_m=1))
+    # omitting cfg inherits the substrate's budget
+    c = Cluster.attach(substrate, FlipApp, name="B")
+    assert c.replicas[0].regs.quorum == 3
