@@ -1,0 +1,136 @@
+"""Fig 11-style reconfiguration-under-load sweep: CTBcast slow-path tail
+latency while *replica replacement* and a *pool sync* are in flight.
+
+The paper's Fig 11 shows tail latency vs the CTBcast tail parameter; this
+sweep extends the reconfiguration story to the membership-epoch machinery
+(ISSUE 5): an open-loop kvstore app runs the registers-heavy slow path
+while the fault schedule drives
+
+* ``baseline``        — no faults (the reference tail);
+* ``pool_sync``       — a memory-node crash + pool reconfiguration
+                        (PR 2's pull/push state transfer);
+* ``replace``         — a replica crash + ``replace_replica`` (non-voting
+                        install, xfer via the pools, agreed epoch bump);
+* ``replace+sync``    — both at once: the epoch bump commits while the
+                        pool it is transferring state over is itself
+                        mid-reconfiguration.
+
+Per mode: p50/p99/p99.9 completion latency, stalled arrivals, peak
+per-pool disaggregated memory (must stay < 1 MiB throughout — sampled,
+not just at the end).  ``benchmarks/run.py --json membership`` writes the
+result as ``BENCH_membership.json``.
+
+Usage:  PYTHONPATH=src:. python benchmarks/fig11_reconfig.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from benchmarks.common import emit, tune_runtime
+from repro.apps.kvstore import KVStoreApp, set_req
+from repro.core.consensus import ConsensusConfig
+from repro.core.registers import POOL_MEMORY_BUDGET
+from repro.scenario import AppSpec, ScenarioSpec, Workload, run_scenario
+from repro.sim.faults import FaultSchedule
+
+MODES = ("baseline", "pool_sync", "replace", "replace+sync")
+
+
+def _cfg() -> ConsensusConfig:
+    return ConsensusConfig(t=32, window=32, slow_mode="always",
+                           ctb_fast_enabled=False,
+                           view_timeout_us=20_000.0)
+
+
+def _schedule(mode: str, substrate) -> FaultSchedule:
+    sched = FaultSchedule()
+    if mode in ("pool_sync", "replace+sync"):
+        sched.add(900.0, "crash", "m1")
+        sched.add(1600.0, "reconfigure", ("pool0", "m1"))
+    if mode in ("replace", "replace+sync"):
+        sched.add(1100.0, "crash", "r2")
+        sched.add(1800.0, "replace_replica", "r2")
+    return sched
+
+
+def _run_mode(mode: str, rate_rps: float, duration_us: float,
+              seed: int) -> dict:
+    peak = {"bytes": 0}
+
+    def _faults(substrate, m=mode):
+        # piggy-back a mid-run memory sampler on the faults hook (it gets
+        # the live substrate before the workloads start): peak per-pool
+        # bytes *throughout* the transfer, not just at the end
+        def sample() -> None:
+            peak["bytes"] = max(peak["bytes"],
+                                max(p.memory_bytes()
+                                    for p in substrate.pools))
+        substrate.sim.periodic(100.0, sample)
+        return _schedule(m, substrate)
+
+    spec = ScenarioSpec(
+        n_pools=2, seed=seed, drain_us=30_000.0, faults=_faults,
+        apps=[AppSpec(
+            name="", app=KVStoreApp, cfg=_cfg(),
+            workload=Workload(kind="open", rate_rps=rate_rps,
+                              duration_us=duration_us,
+                              payload_fn=lambda i: set_req(
+                                  b"k%d" % (i % 8), b"v%d" % i),
+                              seed=seed + 1,
+                              timeout_us=120_000_000.0))])
+    res = run_scenario(spec)
+    # sample once more after drain (the pools retain transferred state)
+    peak["bytes"] = max(peak["bytes"],
+                        max(p.memory_bytes() for p in res.substrate.pools))
+    lats = np.asarray(res.latencies())
+    app = res.apps[""]
+    cluster = res.clusters[""]
+    live = [r for r in cluster.replicas if not r.crashed]
+    row = {f"p{p}": float(np.percentile(lats, p)) if len(lats) else 0.0
+           for p in (50, 99, 99.9)}
+    row.update({
+        "n": int(len(lats)),
+        "issued": app.issued,
+        "stalled": app.stalled,
+        "epoch": max(r.membership.epoch for r in live),
+        "replacements": len(cluster.replacements),
+        "pool_syncs": sum(len(p.reconfigurations)
+                          for p in res.substrate.pools),
+        "peak_pool_bytes": int(peak["bytes"]),
+    })
+    assert row["peak_pool_bytes"] < POOL_MEMORY_BUDGET, \
+        f"{mode}: pool exceeded the Table 2 budget"
+    if mode in ("replace", "replace+sync"):
+        assert row["epoch"] == 1, f"{mode}: epoch bump never committed"
+        assert all(not r.joining for r in live), \
+            f"{mode}: joiner never activated"
+    if mode in ("pool_sync", "replace+sync"):
+        assert row["pool_syncs"] >= 1, f"{mode}: pool sync never ran"
+    return row
+
+
+def run(smoke: bool = False) -> dict:
+    tune_runtime()
+    rate = 4_000.0 if smoke else 8_000.0
+    duration = 4_000.0 if smoke else 12_000.0
+    out: dict = {}
+    for mode in MODES:
+        row = _run_mode(mode, rate_rps=rate, duration_us=duration, seed=11)
+        out[mode] = row
+        emit(f"fig11_reconfig.{mode}.p50", row["p50"])
+        emit(f"fig11_reconfig.{mode}.p99", row["p99"],
+             f"p99.9={row['p99.9']:.1f};stalled={row['stalled']};"
+             f"peak_pool_KiB={row['peak_pool_bytes'] / 1024:.0f}")
+    base = out["baseline"]["p99"]
+    if base > 0:
+        for mode in MODES[1:]:
+            out[mode]["p99_vs_baseline"] = out[mode]["p99"] / base
+    return out
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(smoke="--smoke" in sys.argv)

@@ -11,7 +11,10 @@ the dry-run artifacts (artifacts/dryrun/*.json) when present.
   throughput kops per sweep point) from ``benchmarks/throughput.py``;
 * ``BENCH_shared.json`` — multi-application substrate sharing (per-app
   latency + per-app per-pool memory) from ``benchmarks/shared_pools.py``
-  (when the ``shared`` figure is run).
+  (when the ``shared`` figure is run);
+* ``BENCH_membership.json`` — reconfiguration-under-load tails (replica
+  replacement × pool sync) from ``benchmarks/fig11_reconfig.py`` (when
+  the ``membership`` figure is run).
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--json] [figure ...]
 """
@@ -36,14 +39,15 @@ def _write_json(path: str, payload: dict) -> None:
 def main() -> None:
     from benchmarks import (engine_perf, fig7_app_latency, fig8_request_size,
                             fig9_breakdown, fig10_nonequivocation,
-                            fig11_tail_latency, shared_pools, table2_memory,
-                            throughput, roofline)
+                            fig11_reconfig, fig11_tail_latency, shared_pools,
+                            table2_memory, throughput, roofline)
     mods = {
         "fig7": fig7_app_latency,
         "fig8": fig8_request_size,
         "fig9": fig9_breakdown,
         "fig10": fig10_nonequivocation,
         "fig11": fig11_tail_latency,
+        "membership": fig11_reconfig,
         "table2": table2_memory,
         "throughput": throughput,
         "shared": shared_pools,
@@ -84,6 +88,8 @@ def main() -> None:
         if "shared" in results:
             shared = {str(k): v for k, v in results["shared"].items()}
             _write_json("BENCH_shared.json", shared)
+        if "membership" in results:
+            _write_json("BENCH_membership.json", results["membership"])
         if "throughput" in results:
             tp = results["throughput"]
             protocol = {

@@ -36,6 +36,7 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Set, Tuple
 from repro.core import crypto
 from repro.core.crypto import SignedBundle
 from repro.core.ctbcast import CTBcast
+from repro.core.membership import MembershipEpoch
 from repro.core.node import Node
 from repro.core.registers import RegisterClient
 from repro.core.tbcast import TBcastService
@@ -191,7 +192,8 @@ class UbftReplica(Node):
                  registry: crypto.KeyRegistry, pid: str,
                  replicas: List[str], mem_nodes,
                  app: App, cfg: Optional[ConsensusConfig] = None,
-                 namespace: str = ""):
+                 namespace: str = "", joining: bool = False,
+                 epoch: int = 0):
         # ``mem_nodes``: a bare pid list (legacy static TCB), one
         # ``MemoryPool`` or a list of pools (sharded disaggregated memory) —
         # handed to RegisterClient, which shards register keys across pools
@@ -201,9 +203,15 @@ class UbftReplica(Node):
         # applications share one substrate: register keys shard by
         # ``crc32(app:owner:reg)`` so each app spreads over the shared
         # pools independently ("" = legacy single-app layout).
+        # ``joining``/``epoch``: a replacement replica is installed
+        # *non-voting* (``joining=True``) with ``replicas`` naming the
+        # current epoch's members (itself excluded); it observes but casts
+        # no votes until the epoch bump commits through a consensus slot
+        # and f+1 members of the new epoch confirm the switch (EPOCH).
         super().__init__(sim, net, registry, pid)
         self.namespace = namespace
         self.cfg = cfg or ConsensusConfig()
+        self.membership = MembershipEpoch(epoch, tuple(replicas))
         self.replicas = list(replicas)
         self.n = len(replicas)
         self.f = self.cfg.f
@@ -211,6 +219,23 @@ class UbftReplica(Node):
         assert self.cfg.max_batch >= 1 and self.cfg.pipeline_depth >= 1, \
             "max_batch and pipeline_depth must be >= 1"
         self.quorum = self.f + 1
+        self.joining = joining
+        assert joining == (pid not in self.membership.replicas), \
+            "a member replica must not join; a joiner is not yet a member"
+        self._member_set = frozenset(replicas)
+        #: pids replaced out of the group — their streams are stale-epoch
+        self.retired: Set[str] = set()
+        #: epoch -> (old_pid, new_pid) the control plane announced; a
+        #: MEMBERSHIP slot only applies when it matches (a Byzantine leader
+        #: cannot smuggle an unauthorised membership change past execution)
+        self.pending_membership: Dict[int, Tuple[str, str]] = {}
+        #: joiner activation: (epoch, members) -> confirming member pids
+        self._epoch_votes: Dict[tuple, Set[str]] = {}
+        self._epoch_view: Dict[tuple, int] = {}
+        self._join_state: Optional[dict] = None
+        #: completed switches, for the control plane / tests:
+        #: (sim time, epoch, old_pid, new_pid)
+        self.epoch_switches: List[Tuple[float, int, str, str]] = []
         self.app = app
 
         # A TBcast slot must hold the largest message: with batching that is
@@ -231,9 +256,19 @@ class UbftReplica(Node):
         self._leader_pid = replicas[0]  # cached replicas[view % n]
         self.next_slot = 0
         self.checkpoint = Checkpoint(0, self.cfg.window, app.snapshot_fp())
-        self.state: Dict[str, PeerState] = {r: PeerState() for r in replicas}
+        # Participants I interpret CTBcast streams of: the current members,
+        # plus myself when I am a joiner (not yet in the member list).
+        participants = list(replicas)
+        if pid not in self._member_set:
+            participants.append(pid)
+        self.state: Dict[str, PeerState] = {r: PeerState()
+                                            for r in participants}
         for st in self.state.values():
             st.checkpoint = self.checkpoint
+        #: app snapshots taken exactly at checkpoint boundaries — the only
+        #: snapshots whose fingerprint a signed checkpoint can vouch for
+        #: (served to joiners via XFER_REQ and published by publish_xfer)
+        self._boundary_snaps: Dict[int, Any] = {0: app.snapshot()}
 
         self.decided: Dict[int, tuple] = {}        # slot -> request tuple
         self.exec_upto = -1                         # highest executed slot
@@ -282,7 +317,7 @@ class UbftReplica(Node):
 
         # CTBcast instance per broadcaster (self included)
         self.ctb: Dict[str, CTBcast] = {}
-        for p in replicas:
+        for p in participants:
             self.ctb[p] = CTBcast(
                 self, self.tb, self.regs, broadcaster=p, group=replicas,
                 t=self.cfg.t,
@@ -314,6 +349,11 @@ class UbftReplica(Node):
         self.handle("CERTIFY_SUMMARY", self._on_certify_summary)
         self.handle("STATE_REQ", self._on_state_req)
         self.handle("STATE_RESP", self._on_state_resp)
+        # membership epochs (replica replacement)
+        self.handle("EPOCH", self._on_epoch)
+        self.handle("JOIN_SYNC", self._on_join_sync)
+        self.handle("XFER_REQ", self._on_xfer_req)
+        self.handle("XFER_RESP", self._on_xfer_resp)
 
         # decided callback hooks (runtime integration)
         self.on_decide_hooks: List[Callable[[int, tuple], None]] = []
@@ -384,6 +424,8 @@ class UbftReplica(Node):
             if not miss:
                 del self.prepare_missing[(v, s)]
                 self._endorse(v, s)
+        if self.joining:
+            return  # a non-voting joiner buffers but does not echo
         if self.is_leader():
             self._note_echo(rid, self.pid)
         else:
@@ -396,6 +438,8 @@ class UbftReplica(Node):
             self._note_echo(rid, src)
 
     def _note_echo(self, rid: tuple, who: str) -> None:
+        if who not in self._member_set:
+            return  # only current-epoch members count toward echo quorums
         s = self.echoes.get(rid)
         if s is None:
             s = self.echoes[rid] = set()
@@ -506,8 +550,8 @@ class UbftReplica(Node):
     # CTBcast delivery → FIFO interpretation (Alg. 2 line 1)
     # ==================================================================
     def _ctb_deliver(self, p: str, k: int, m: Any) -> None:
-        st = self.state[p]
-        if st.blocked:
+        st = self.state.get(p)
+        if st is None or st.blocked or p in self.retired:
             return
         if k < st.fifo_next:
             return
@@ -669,6 +713,8 @@ class UbftReplica(Node):
                        lambda: self._slow_path_kick(v, s))
 
     def _endorse(self, v: int, s: int) -> None:
+        if self.joining:
+            return  # non-voting: observe, never promise
         if v != self.view or s not in self.checkpoint.open_slots:
             return
         if self.cfg.fast_enabled:
@@ -684,7 +730,9 @@ class UbftReplica(Node):
 
     # --- CERTIFY (lines 22, 34-36) ---
     def _do_certify(self, v: int, s: int) -> None:
-        if (v, s) in self.my_certified:
+        if self.joining:
+            return  # non-voting: a joiner's signature must never complete
+        if (v, s) in self.my_certified:  # a certificate quorum
             return
         pr = self.my_prepared.get(s)
         if pr is None or pr[0] != v:
@@ -754,12 +802,15 @@ class UbftReplica(Node):
     # --- fast path (lines 24-31) ---
     def _on_will_certify(self, origin: str, stream: str, key: int,
                          payload: Any) -> None:
+        if origin not in self._member_set:
+            return  # promises from outside the current epoch never count
         v, s = payload
         ws = self.will_certify.get((v, s))
         if ws is None:
             ws = self.will_certify[(v, s)] = set()
         ws.add(origin)
         if (len(ws) >= 2 * self.f + 1 and v == self.view and
+                not self.joining and
                 s in self.checkpoint.open_slots and
                 (v, s) not in self.my_will_commits):
             self.my_will_commits.add((v, s))
@@ -767,6 +818,8 @@ class UbftReplica(Node):
 
     def _on_will_commit(self, origin: str, stream: str, key: int,
                         payload: Any) -> None:
+        if origin not in self._member_set:
+            return  # promises from outside the current epoch never count
         v, s = payload
         ws = self.will_commit.get((v, s))
         if ws is None:
@@ -780,10 +833,14 @@ class UbftReplica(Node):
 
     def _on_tb_certify(self, origin: str, stream: str, key: int,
                        payload: Any) -> None:
+        if origin not in self._member_set:
+            return  # a non-member (joiner / retired pid) casts no votes
         self._on_certify(origin, payload)
 
     def _on_tb_certify_cp(self, origin: str, stream: str, key: int,
                           payload: Any) -> None:
+        if origin not in self._member_set:
+            return  # a non-member (joiner / retired pid) casts no votes
         self._on_certify_checkpoint(origin, payload)
 
     def _on_tb_summary(self, origin: str, stream: str, key: int,
@@ -826,6 +883,12 @@ class UbftReplica(Node):
             results = []
             # the batch executes atomically (one slot), replies per-request
             for rid, client, payload in self.decided[s]:
+                if (client == "" and isinstance(rid, tuple) and
+                        len(rid) == 4 and rid[0] == "member"):
+                    # agreed MEMBERSHIP slot: every honest replica applies
+                    # the epoch bump at the same point of its execution
+                    # order — the switch is atomic across the group
+                    self._apply_membership(rid[1], rid[2], rid[3], s)
                 if client == "" or rid in self.executed_rids:
                     # no-op / duplicate: does not touch the app and sends
                     # no reply (a duplicate's real reply came from the slot
@@ -853,6 +916,14 @@ class UbftReplica(Node):
     def _maybe_checkpoint_round(self) -> None:
         last = self.checkpoint.open_slots[-1]
         if self.exec_upto >= last:
+            # the boundary snapshot is the only one a signed checkpoint can
+            # vouch for — retained (bounded) for joiner state transfer
+            self._boundary_snaps[last + 1] = self.app.snapshot()
+            for old in [k for k in self._boundary_snaps
+                        if k < last + 1 - self.cfg.window]:
+                del self._boundary_snaps[old]
+            if self.joining:
+                return  # non-voting: no checkpoint certificate shares
             payload = _cp_payload(last + 1, self.cfg.window, self.app.snapshot_fp())
             self.async_sign(payload, lambda sig: self._tb_broadcast(
                 "CERTIFY_CHECKPOINT", last + 1, (payload, sig)))
@@ -934,9 +1005,13 @@ class UbftReplica(Node):
 
     # --- state transfer (checkpoint adoption) ---
     def _request_state(self, cp: Checkpoint) -> None:
+        # epoch-0 groups keep the historical STATE_REQ path bit-for-bit;
+        # reconfigured groups use the boundary-snapshot path (XFER_REQ),
+        # which verifies against the signed checkpoint unconditionally
+        kind = "STATE_REQ" if self.membership.epoch == 0 else "XFER_REQ"
         for q in self.replicas:
             if q != self.pid:
-                self.send(q, "STATE_REQ", (cp.start,))
+                self.send(q, kind, (cp.start,))
 
     def _on_state_req(self, src: str, body: tuple) -> None:
         (start,) = body
@@ -956,6 +1031,289 @@ class UbftReplica(Node):
         self.app.adopt(snap)
         self.exec_upto = max(self.exec_upto, self.checkpoint.start - 1)
         self._execute_ready()
+
+    # --- boundary-snapshot state transfer (post-epoch-0 deployments) ---
+    # STATE_RESP ships the responder's *current* snapshot, which only
+    # verifies against the checkpoint fingerprint when the responder sits
+    # exactly at the boundary.  Reconfigurable deployments instead serve
+    # the retained boundary snapshot (``_boundary_snaps``), whose
+    # fingerprint the f+1-signed checkpoint vouches for unconditionally —
+    # a joiner that lags the window always converges.  Epoch-0 groups keep
+    # the historical STATE_REQ wire path bit-for-bit.
+    def _on_xfer_req(self, src: str, body: tuple) -> None:
+        (start,) = body
+        snap = self._boundary_snaps.get(start)
+        if snap is None or self.checkpoint.start < start:
+            return
+        self.send(src, "XFER_RESP", (start, snap), extra_bytes=256)
+
+    def _on_xfer_resp(self, src: str, body: tuple) -> None:
+        start, snap = body
+        if self.exec_upto >= start - 1 or start != self.checkpoint.start:
+            return
+        if crypto.fingerprint_cached(snap) != self.checkpoint.app_fp:
+            return  # unverifiable snapshot — ignore
+        self.app.adopt(snap)
+        self._boundary_snaps[start] = snap
+        self.exec_upto = max(self.exec_upto, start - 1)
+        self._execute_ready()
+
+    # ==================================================================
+    # Membership epochs — live replica replacement
+    # ==================================================================
+    def publish_xfer(self, new_epoch: int) -> None:
+        """Survivor side of joiner state transfer: WRITE my latest signed
+        checkpoint + its boundary snapshot + prepared-slot state into my
+        own SWMR register ``xfer/<epoch>`` — the transfer travels through
+        the disaggregated-memory pools (the same machinery PR 2 built for
+        memory-node replacement), never through a trusted side channel."""
+        cp = self.checkpoint
+        snap = self._boundary_snaps.get(cp.start)
+        prepared = tuple(sorted(
+            (s, v, batch) for s, (v, batch) in self.my_prepared.items()
+            if s in cp.open_slots))
+        payload = (cp.to_wire(),
+                   snap if snap is not None else (),
+                   self.exec_upto, self.view, prepared)
+        self.regs.write(f"xfer/{new_epoch}", crypto.encode(payload),
+                        lambda: None)
+
+    def propose_membership(self, new_epoch: int, old_pid: str,
+                           new_pid: str) -> None:
+        """Arm the epoch bump: record the control plane's announcement and
+        route a MEMBERSHIP request into the consensus hot path (it rides a
+        normal slot, so the switch is *agreed*, not merely broadcast).  A
+        Byzantine leader that refuses to propose it loses its view: the
+        pending request trips the same progress timer as any client
+        request, and the next honest leader proposes it."""
+        if new_epoch <= self.membership.epoch or self.joining:
+            return
+        self.pending_membership[new_epoch] = (old_pid, new_pid)
+        # interpretation state for the joiner's stream exists *before* its
+        # first broadcast can arrive (its pre-switch messages are dropped
+        # by the epoch checks, not lost at the wire layer)
+        self._ensure_participant(new_pid)
+        rid = ("member", new_epoch, old_pid, new_pid)
+        if rid in self.decided_rids or rid in self.proposed_rids:
+            return
+        self.pending_req[rid] = (rid, "", b"")
+        if self.is_leader():
+            self._note_echo(rid, self.pid)
+        else:
+            self.send(self.leader(), "ECHO", (rid,))
+        self._arm_progress_timer()
+
+    def _switch_epoch(self, membership: MembershipEpoch, old: str,
+                      new: str) -> None:
+        """The one epoch-switch mutation sequence, shared by the member
+        path (executing a MEMBERSHIP slot) and the joiner path
+        (activation): install the new member set, retire everyone who
+        left, create interpretation state for everyone who arrived, and
+        re-derive every membership-dependent structure."""
+        self.membership = membership
+        self.replicas = list(membership.replicas)
+        self._member_set = frozenset(self.replicas)
+        for p in list(self.state):
+            if p not in self._member_set and p != self.pid:
+                self.state[p].blocked = True   # stop interpreting it
+                self.retired.add(p)
+                self.tb.drop_peer(p)   # free retired wire buffers (Table 2)
+        # fresh interpretation state for arrivals (the joiner's broadcasts)
+        for p in self.replicas:
+            self._ensure_participant(p)
+        # quorums (LOCKED unanimity, summary groups) follow the new epoch
+        for c in self.ctb.values():
+            c.set_group(self.replicas)
+        self._leader_pid = self.replicas[self.view % self.n]
+        self.epoch_switches.append((self.sim.now, membership.epoch, old,
+                                    new))
+
+    def _ensure_participant(self, p: str) -> None:
+        """Interpretation state (PeerState + a receiver CTBcast instance)
+        for a broadcaster that is not yet / no longer in the member list."""
+        if p not in self.state:
+            st = PeerState()
+            st.checkpoint = self.checkpoint
+            self.state[p] = st
+        if p not in self.ctb:
+            self.ctb[p] = CTBcast(
+                self, self.tb, self.regs, broadcaster=p,
+                group=self.replicas, t=self.cfg.t,
+                deliver=(lambda k, m, p=p: self._ctb_deliver(p, k, m)),
+                auto_slow_after_us=(0.0 if self.cfg.slow_mode == "always"
+                                    else self.cfg.slow_after_us),
+                fast_enabled=self.cfg.ctb_fast_enabled,
+            )
+
+    def _apply_membership(self, e: int, old: str, new: str,
+                          slot: int) -> None:
+        """Execute an agreed MEMBERSHIP slot: switch to the next epoch.
+
+        Applied only when it matches the control plane's announcement
+        (``pending_membership``) — a forged MEMBERSHIP request decided by a
+        Byzantine leader is a no-op at every honest replica, identically.
+        """
+        if e != self.membership.epoch + 1:
+            return  # stale or out-of-order bump
+        if self.pending_membership.get(e) != (old, new):
+            return  # unannounced (forged) membership change
+        if old not in self._member_set or new in self._member_set:
+            return
+        self._switch_epoch(self.membership.replace(old, new), old, new)
+        # the joiner could not see this slot (it was outside the old
+        # group's broadcast set): f+1 members vouching for the switch
+        # activate it
+        if new != self.pid:
+            # replay my own recent stream first, so the joiner's view of
+            # *my* broadcasts (commits, seals) converges with everyone
+            # else's — without this, view-change certificates about my
+            # stream could never match the joiner's share (liveness); the
+            # EPOCH confirmation follows so the replay lands while the
+            # joiner is still in its observer-only phase
+            history = tuple(sorted(self.my_ctb.buf.items()))
+            if history:
+                self.send(new, "JOIN_SYNC", (history,), extra_bytes=64)
+            self.send(new, "EPOCH",
+                      (e, tuple(self.replicas), slot, self.view))
+        elif self.joining:
+            # the joiner decided the MEMBERSHIP slot itself (JOIN_SYNC
+            # replays can carry it): it just activated along with everyone
+            self.joining = False
+            self._after_view_entered()
+
+    # ----------------------------------------------------- joiner side
+    def begin_join(self, new_epoch: int, survivors: List[str],
+                   expected: Tuple[str, str]) -> None:
+        """Joiner side of the replacement: pull the survivors' published
+        ``xfer/<epoch>`` registers (f+1 needed), adopt the best signed
+        checkpoint + snapshot, then wait for the agreed epoch bump."""
+        assert self.joining
+        self.pending_membership[new_epoch] = expected
+        self._join_state = {"e": new_epoch, "survivors": list(survivors),
+                            "done": False}
+        self._poll_xfer()
+
+    def _poll_xfer(self) -> None:
+        js = self._join_state
+        if js is None or js["done"]:
+            return
+        reg = f"xfer/{js['e']}"
+        results: Dict[str, Any] = {}
+        remaining = set(js["survivors"])
+
+        def on_read(q: str, val, _byz: bool) -> None:
+            results[q] = val
+            remaining.discard(q)
+            if remaining:
+                return
+            good = {q: v for q, v in results.items() if v is not None}
+            if len(good) >= self.quorum and self._adopt_xfer(good):
+                js["done"] = True
+            else:
+                self.timer(200.0, self._poll_xfer)
+
+        for q in js["survivors"]:
+            self.regs.read(q, reg, lambda val, byz, q=q: on_read(q, val, byz))
+
+    def _adopt_xfer(self, good: Dict[str, tuple]) -> bool:
+        """Adopt transferred state.  Only quorum-verifiable pieces are
+        trusted unconditionally: the checkpoint must carry f+1 signatures
+        and the snapshot must match its fingerprint.  Prepared-slot state
+        is adopted only when f+1 survivors agree on a slot's (view, batch)
+        — a single Byzantine survivor cannot plant a proposal."""
+        best: Optional[Tuple[Checkpoint, Any]] = None
+        views: List[int] = []
+        prep_votes: Dict[Tuple[int, int, bytes], List[tuple]] = {}
+        for q in sorted(good):
+            _ts, raw = good[q]
+            try:
+                cp_wire, snap, _upto, view, prepared = crypto.decode(raw)
+                cp = Checkpoint.from_wire(cp_wire)
+            except Exception:
+                continue
+            views.append(view)
+            if (cp.valid(self.registry, self.quorum) and
+                    (best is None or cp.supersedes(best[0]))):
+                if (cp.start == 0 or
+                        crypto.fingerprint_cached(snap) == cp.app_fp):
+                    best = (cp, snap)
+            for (s, v, batch) in prepared:
+                key = (s, v, crypto.fingerprint_cached(batch))
+                prep_votes.setdefault(key, []).append(batch)
+        if best is None:
+            return False
+        cp, snap = best
+        if cp.start > 0:
+            self.app.adopt(snap)
+            self._boundary_snaps[cp.start] = snap
+            self.exec_upto = max(self.exec_upto, cp.start - 1)
+            self._maybe_checkpoint(cp)
+        for (s, v, _fp), batches in sorted(prep_votes.items()):
+            if len(batches) >= self.quorum and s not in self.my_prepared:
+                self.my_prepared[s] = (v, as_batch(batches[0]))
+        target = max(views, default=0)
+        self._join_view_hint = target
+        return True
+
+    def _on_join_sync(self, src: str, body: tuple) -> None:
+        """A member replays its own recent CTBcast stream to me (I joined
+        after those broadcasts left the tail).  The broadcaster vouching
+        for its own stream is exactly what a broadcast is — a Byzantine
+        sender can only mis-describe *its own* history, which at worst
+        keeps its view-change certificates from forming (liveness), never
+        alters what verified certificates let me adopt (COMMITs are
+        f+1-signed and re-verified on this path like on any other).
+
+        Full replay is gated to the observer-only joining phase: a voting
+        replica accepting replays would let a Byzantine leader equivocate
+        around CTBcast (send one PREPARE on its stream, a different one as
+        a replay) — the joiner casts no votes, so nothing it interprets
+        here can complete any quorum.  Once voting (a replay can race the
+        activation), only the self-authenticating part is salvaged: COMMIT
+        certificates carry f+1 certify signatures and are re-verified, so
+        adopting one is safe on any path at any time."""
+        st = self.state.get(src)
+        if st is None or st.blocked or src in self.retired:
+            return
+        (history,) = body
+        if not self.joining:
+            for _kk, m in history:
+                if isinstance(m, tuple) and m and m[0] == "COMMIT":
+                    self._on_commit(src, m)
+            return
+        for kk, m in history:
+            if kk >= st.fifo_next:
+                st.fifo_next = kk + 1
+                st.recent[kk] = m
+                self._process_ctb(src, kk, m)
+        self._fifo_drain(src)
+
+    def _on_epoch(self, src: str, body: tuple) -> None:
+        """f+1 members of the new epoch confirm the agreed switch — the
+        joiner becomes a voting member."""
+        e, members, _slot, view = body
+        if not self.joining or self.pid not in members:
+            return
+        key = (e, members)
+        votes = self._epoch_votes.setdefault(key, set())
+        votes.add(src)
+        self._epoch_view[key] = max(self._epoch_view.get(key, 0), view)
+        if len(votes & set(members)) >= self.quorum:
+            self._activate(e, members, self._epoch_view[key])
+
+    def _activate(self, e: int, members: Tuple[str, ...],
+                  view_hint: int) -> None:
+        if not self.joining or e <= self.membership.epoch:
+            return
+        self.joining = False
+        self._switch_epoch(MembershipEpoch(e, tuple(members)), "", self.pid)
+        # catch the group's view up loudly (peers track my view through my
+        # SEAL_VIEWs) and re-route anything a client already sent me
+        target = max(view_hint, getattr(self, "_join_view_hint", 0))
+        if target > self.view:
+            self._catch_up_view(target)
+        else:
+            self._after_view_entered()
 
     # ==================================================================
     # View change (Algorithm 3)
@@ -989,10 +1347,19 @@ class UbftReplica(Node):
         return undecided or bool(self.waiting_prepare)
 
     def change_view(self) -> None:
-        if self.changing_view:
+        if self.changing_view or self.joining:
             return
         self.changing_view = True
         self._fulfill_promises_then_seal()
+
+    def _seal_view_msg(self) -> tuple:
+        """SEAL_VIEW carries the membership epoch once it is non-zero;
+        epoch-0 messages keep the historical 2-tuple shape (bit-identical
+        static deployments)."""
+        e = self.membership.epoch
+        if e == 0:
+            return ("SEAL_VIEW", self.view)
+        return ("SEAL_VIEW", self.view, e)
 
     def _fulfill_promises_then_seal(self) -> None:
         """Alg. 3 lines 4-5 + §5.4 promises.
@@ -1015,7 +1382,7 @@ class UbftReplica(Node):
             return
         self.view += 1
         self._leader_pid = self.replicas[self.view % self.n]
-        self._ctb_broadcast(("SEAL_VIEW", self.view))
+        self._ctb_broadcast(self._seal_view_msg())
         self.changing_view = False
         self._after_view_entered()
 
@@ -1041,18 +1408,28 @@ class UbftReplica(Node):
 
     def _on_seal_view(self, p: str, m: tuple) -> None:
         v = m[1]
+        e = m[2] if len(m) > 2 else 0
+        if e != self.membership.epoch:
+            # Wrong-epoch SEAL_VIEW: rejected like a stale view.  The
+            # drop is permanent (the FIFO slot is consumed) — recovery is
+            # by *fresh* seals, not resends: a replica whose pending work
+            # stalls re-seals through its own progress timer, and later
+            # same-epoch SEAL_VIEWs re-establish the peer's view.  Worst
+            # case is a bounded liveness delay around the switch window.
+            return
         st = self.state[p]
         st.seal_view = v
         st.view = v
         st.noncp_msgs_in_view = 0
         st.new_view = None
-        # certificate share attesting q's state (as of this FIFO point)
-        snap = self._peer_snapshot(p)
-        digest = crypto.fingerprint_cached(snap)
-        self.vc_snapshots[(v, p)] = snap
-        ldr = self.leader(v)
-        self.async_sign(("vc", v, p, digest), lambda sig: self.send(
-            ldr, "CRTFY_VC", (v, p, digest, sig)))
+        if not self.joining:
+            # certificate share attesting q's state (as of this FIFO point)
+            snap = self._peer_snapshot(p)
+            digest = crypto.fingerprint_cached(snap)
+            self.vc_snapshots[(v, p)] = snap
+            ldr = self.leader(v)
+            self.async_sign(("vc", v, p, digest), lambda sig: self.send(
+                ldr, "CRTFY_VC", (v, p, digest, sig)))
         if v > self.view:
             # peer is ahead: join the view change
             self._catch_up_view(v)
@@ -1061,7 +1438,7 @@ class UbftReplica(Node):
         while self.view < v:
             self.view += 1
             self._leader_pid = self.replicas[self.view % self.n]
-            self._ctb_broadcast(("SEAL_VIEW", self.view))
+            self._ctb_broadcast(self._seal_view_msg())
         self._after_view_entered()
 
     def _peer_snapshot(self, p: str) -> tuple:
@@ -1078,6 +1455,8 @@ class UbftReplica(Node):
 
     def _on_crtfy_vc(self, src: str, body: tuple) -> None:
         v, q, digest, sig = body
+        if src not in self._member_set:
+            return  # view-change shares come from current-epoch members
         if self.leader(v) != self.pid:
             return
         self.async_verify(src, ("vc", v, q, digest), sig,
@@ -1110,18 +1489,23 @@ class UbftReplica(Node):
         if len(certs) < self.quorum:
             return
         self.new_view_sent.add(v)
-        self._ctb_broadcast(("NEW_VIEW", certs))
+        e = self.membership.epoch
+        self._ctb_broadcast(("NEW_VIEW", certs) if e == 0
+                            else ("NEW_VIEW", certs, e))
         # leader applies its own NEW_VIEW when it FIFO-delivers it
 
     def _on_new_view(self, p: str, m: tuple) -> None:
         certs = m[1]
+        e = m[2] if len(m) > 2 else 0
+        if e != self.membership.epoch:
+            return  # stale-epoch NEW_VIEW: rejected like a stale view
         st = self.state[p]
         st.new_view = certs
         v = st.view
         while self.view < v:
             self.view += 1
             self._leader_pid = self.replicas[self.view % self.n]
-            self._ctb_broadcast(("SEAL_VIEW", self.view))
+            self._ctb_broadcast(self._seal_view_msg())
         # adopt the highest checkpoint in the certificates
         best_cp = self.checkpoint
         for q, (snap, _shares) in certs.items():
@@ -1189,6 +1573,8 @@ class UbftReplica(Node):
     def _send_certify_summary(self, p: str, k: int) -> None:
         """I have FIFO-processed p's stream up to k (a segment boundary) —
         sign a certificate share of p's recent window (Alg. 4 line 2)."""
+        if self.joining:
+            return  # summary quorums are drawn from the current epoch
         if p == self.pid:
             recent = dict(self.my_ctb.buf)
         else:
@@ -1204,6 +1590,8 @@ class UbftReplica(Node):
 
     def _on_certify_summary(self, src: str, body: tuple) -> None:
         k, digest, sig = body
+        if src not in self._member_set:
+            return  # summary quorums are drawn from the current epoch
         si = self.my_ctb.summary_interval
         if (k + 1) % si != 0:
             return
@@ -1234,7 +1622,10 @@ class UbftReplica(Node):
         sigs[src] = sig
         si = self.my_ctb.summary_interval
         seg = k // si
-        if len(sigs) >= self.quorum and seg > self.my_ctb.summaries_ok:
+        # quorum drawn from the *current* epoch's membership (shares from
+        # since-retired replicas must not certify a summary on their own)
+        live = sum(1 for q in sigs if q in self._member_set)
+        if live >= self.quorum and seg > self.my_ctb.summaries_ok:
             history = tuple(sorted((kk, m) for kk, m in self.my_ctb.buf.items()
                                    if k - self.cfg.t < kk <= k))
             bundle = (k, digest, tuple(sorted(sigs.items())), history)
@@ -1253,7 +1644,9 @@ class UbftReplica(Node):
         if not all(self.registry.verify(pid, ("sum", origin, k, digest), sig)
                    for pid, sig in sigs):
             return
-        st = self.state[origin]
+        st = self.state.get(origin)
+        if st is None or st.blocked or origin in self.retired:
+            return
         if st.fifo_next > k:
             return  # no gap — nothing to heal
         # Heal the gap: apply missed messages in order WITHOUT the Byzantine

@@ -165,6 +165,27 @@ class CTBcast:
         for k, m in q:
             self.broadcast(k, m)
 
+    # --------------------------------------------------------- membership
+    def set_group(self, group: List[str]) -> None:
+        """Switch the receiver group to the current membership epoch.
+
+        LOCKED unanimity (line 22) and every fan-out are computed over
+        ``group``; a replaced replica's slots are dropped (its LOCKEDs must
+        no longer gate delivery) and a joiner gets fresh t-sized arrays.
+        Called by the consensus layer when an agreed MEMBERSHIP slot
+        executes — never on the static path.
+        """
+        group = list(group)
+        if group == self.group:
+            return
+        for q in group:
+            if q not in self.locked:
+                self.locked[q] = [_Slot() for _ in range(self.t)]
+        for q in [q for q in self.locked if q not in group]:
+            del self.locked[q]
+        self.group = group
+        self.n = len(group)
+
     # ------------------------------------------------------------ fast path
     def _on_lock(self, origin: str, stream: str, k: int, m: Any) -> None:
         if origin != self.broadcaster:

@@ -147,15 +147,25 @@ class MemoryNode(Node):
         self.write_duration_us = write_duration_us
         self.manager = manager
         self.serving = serving
+        #: owners whose write permission was re-keyed away (replica
+        #: replacement): their WRITEs are dropped like any permission
+        #: violation — a Byzantine replaced replica cannot keep writing
+        self.revoked: set = set()
+        #: Byzantine memory-side adversary (beyond the crash-only TCB
+        #: contract): serve old-but-well-formed blobs — valid checksums,
+        #: stale timestamps (see ``set_stale_serve``)
+        self.stale_serve = False
+        self._stale_cells: Dict[Tuple[str, str, int], bytes] = {}
         self.handle("REG_WRITE", self._on_write)
         self.handle("REG_READ", self._on_read)
         self.handle("LEASE_PING", self._on_lease_ping)
         self.handle("POOL_PULL", self._on_pool_pull)
         self.handle("POOL_PUSH", self._on_pool_push)
+        self.handle("POOL_REKEY", self._on_pool_rekey)
 
     def _on_write(self, src: str, body: Any) -> None:
         owner, reg, sub, blob, token = body
-        if owner != src:
+        if owner != src or owner in self.revoked:
             return  # permission violation: only the owner may write (SWMR)
         cell = self.cells.setdefault((owner, reg, sub), _Cell())
         cell.write(blob, self.sim.now, self.write_duration_us)
@@ -165,11 +175,41 @@ class MemoryNode(Node):
         if not self.serving:
             return  # replacement node: no READs before re-replication
         owner, reg, token = body
-        blobs = tuple(
-            self.cells.setdefault((owner, reg, sub), _Cell()).read(self.sim.now)
-            for sub in (0, 1)
-        )
+        if self.stale_serve:
+            # adversarial mode: answer from the frozen snapshot — complete,
+            # checksum-valid blobs whose timestamps have fallen behind
+            blobs = tuple(self._stale_cells.get((owner, reg, sub), b"")
+                          for sub in (0, 1))
+        else:
+            blobs = tuple(
+                self.cells.setdefault((owner, reg, sub), _Cell()).read(self.sim.now)
+                for sub in (0, 1)
+            )
         self.send(src, "REG_READ_ACK", (owner, reg, token, blobs))
+
+    def set_stale_serve(self, on: bool = True) -> None:
+        """Toggle the stale-serve adversary.  On enable, the node freezes
+        its current committed blobs and serves those for every subsequent
+        READ (it keeps *applying and acking* WRITEs, so its stored state
+        stays fresh — only what it serves is stale).  This is strictly
+        outside the paper's crash-only TCB contract.  What the
+        fault-schedule tests show: once a completed write has propagated
+        to the other live members (the steady state — WRITEs go to every
+        member, only the ack quorum is f_m+1), ≤ f_m such nodes cannot
+        break regularity, because READs take the highest valid timestamp
+        over f_m+1 responses and some fresh responder outbids the stale
+        one.  The residual hole is the propagation race: a stale server
+        still *acks* writes, so it can transiently be the only write-acker
+        inside a read quorum whose other members have not yet applied the
+        write — that schedule can return stale data, and it is exactly
+        where the crash-only boundary of §3 sits (see ROADMAP: locating
+        it with a negative test is queued work)."""
+        if on and not self.stale_serve:
+            self._stale_cells = {key: c.blob for key, c in self.cells.items()
+                                 if c.blob}
+        if not on:
+            self._stale_cells = {}
+        self.stale_serve = on
 
     # ---------------------------------------------- pool-management plane
     def _on_lease_ping(self, src: str, body: Any) -> None:
@@ -205,6 +245,28 @@ class MemoryNode(Node):
                 cell.write(blob, self.sim.now, 0.0)
         self.serving = True
         self.send(src, "POOL_PUSH_ACK", token)
+
+    def _on_pool_rekey(self, src: str, body: Any) -> None:
+        """Re-key a replaced replica's register permission: install the
+        merged cells under the new owner pid, revoke the old owner's write
+        access, and drop its cells (the permission token moves — §6.1's
+        RDMA access control, now epoch-aware)."""
+        if self.manager is not None and src != self.manager:
+            return
+        token, old, new, cells = body
+        self.revoked.add(old)
+        for key, blob in cells:
+            _owner, reg, sub = tuple(key)
+            v = _unpack(blob)
+            if v is None:
+                continue
+            cell = self.cells.setdefault((new, reg, sub), _Cell())
+            cur = _unpack(cell.blob)
+            if cur is None or v[0] > cur[0]:
+                cell.write(blob, self.sim.now, 0.0)
+        for key in [k for k in self.cells if k[0] == old]:
+            del self.cells[key]
+        self.send(src, "POOL_REKEY_ACK", token)
 
     def memory_bytes(self) -> int:
         """Occupied disaggregated memory: one RDMA buffer per sub-register.
@@ -247,6 +309,7 @@ class _PoolManager(Node):
         self.handle("LEASE_ACK", self._on_lease_ack)
         self.handle("POOL_PULL_ACK", self._on_pull_ack)
         self.handle("POOL_PUSH_ACK", self._on_push_ack)
+        self.handle("POOL_REKEY_ACK", self._on_rekey_ack)
 
     # ------------------------------------------------------------- leases
     def start_leases(self) -> None:
@@ -294,8 +357,8 @@ class _PoolManager(Node):
                    on_abort: Callable[[], None]) -> None:
         self._tok += 1
         tok = self._tok
-        self._sync[tok] = {"resps": [], "fresh": fresh, "dead": dead,
-                           "pushed": False, "cb": on_done,
+        self._sync[tok] = {"kind": "sync", "resps": [], "fresh": fresh,
+                           "dead": dead, "pushed": False, "cb": on_done,
                            "need": self.pool.f_m + 1}
         for s in survivors:
             self.send(s, "POOL_PULL", tok)
@@ -303,6 +366,35 @@ class _PoolManager(Node):
         # exceeded) must not wedge the pool: abort and let the caller retry.
         def expire() -> None:
             if self._sync.pop(tok, None) is not None:
+                on_abort()
+
+        self.timer(self.pool.sync_timeout_us, expire)
+
+    def begin_rekey(self, old: str, new: str,
+                    on_done: Callable[[Dict[str, int]], None],
+                    on_abort: Optional[Callable[[], None]] = None) -> None:
+        """Re-key register permissions ``old`` → ``new`` (replica
+        replacement): the *same* pull/merge path as reconfiguration
+        gathers the old owner's highest-valid-timestamp cells from f_m+1
+        members, then every member installs them under the new owner and
+        revokes the old one's write access (POOL_REKEY).  ``on_done``
+        receives the per-register max write timestamps so the new owner's
+        RegisterClient can adopt them (its next WRITE must supersede the
+        inherited blobs).  A round that cannot complete within
+        ``sync_timeout_us`` calls ``on_abort`` (the pool's
+        :meth:`MemoryPool.rekey_owner` retries — a transiently degraded
+        pool must not silently leave the old permission live)."""
+        self._tok += 1
+        tok = self._tok
+        self._sync[tok] = {"kind": "rekey", "resps": [], "old": old,
+                           "new": new, "pushed": False, "cb": on_done,
+                           "need": self.pool.f_m + 1, "acks": 0,
+                           "wts": {}}
+        for s in self.pool.members:
+            self.send(s, "POOL_PULL", tok)
+
+        def expire() -> None:
+            if self._sync.pop(tok, None) is not None and on_abort is not None:
                 on_abort()
 
         self.timer(self.pool.sync_timeout_us, expire)
@@ -328,6 +420,18 @@ class _PoolManager(Node):
                     continue
                 if key not in merged or v[0] > merged[key][0]:
                     merged[key] = (v[0], blob)
+        if st["kind"] == "rekey":
+            old, new = st["old"], st["new"]
+            keep = [(k, blob) for k, (_ts, blob) in merged.items()
+                    if k[0] == old]
+            wts: Dict[str, int] = {}
+            for (owner, reg, _sub), (ts, _blob) in merged.items():
+                if owner == old and ts > wts.get(reg, 0):
+                    wts[reg] = ts
+            st["wts"] = wts
+            for m in self.pool.members:
+                self.send(m, "POOL_REKEY", (tok, old, new, keep))
+            return
         self.send(st["fresh"], "POOL_PUSH",
                   (tok, [(k, blob) for k, (_ts, blob) in merged.items()]))
 
@@ -335,6 +439,15 @@ class _PoolManager(Node):
         st = self._sync.pop(body, None)
         if st is not None:
             st["cb"]()
+
+    def _on_rekey_ack(self, src: str, body: Any) -> None:
+        st = self._sync.get(body)
+        if st is None or st.get("kind") != "rekey":
+            return
+        st["acks"] += 1
+        if st["acks"] >= st["need"]:
+            del self._sync[body]
+            st["cb"](st["wts"])
 
 
 class MemoryPool:
@@ -372,6 +485,10 @@ class MemoryPool:
         self.reconfigurations: List[Tuple[float, str, str]] = []
         #: (time, dead_pid, fresh_pid) per timed-out, rolled-back sync
         self.aborted_syncs: List[Tuple[float, str, str]] = []
+        #: (time, old_owner, new_owner) per completed permission rekey
+        self.rekeys: List[Tuple[float, str, str]] = []
+        #: (time, old_owner, new_owner) per timed-out (retried) rekey round
+        self.aborted_rekeys: List[Tuple[float, str, str]] = []
         self.manager = _PoolManager(sim, net, registry, f"{self.prefix}gr",
                                     self)
         for _ in range(2 * f_m + 1):
@@ -440,6 +557,34 @@ class MemoryPool:
 
         self.manager.begin_sync(dead, fresh.pid, survivors, done, abort)
         return True
+
+    def rekey_owner(self, old: str, new: str,
+                    cb: Optional[Callable[[Dict[str, int]], None]] = None
+                    ) -> None:
+        """Move the register permission of owner ``old`` to ``new`` on
+        every member (replica replacement).  Reuses the reconfiguration
+        pull/merge machinery; records the completed rekey and forwards the
+        inherited per-register write timestamps to ``cb``.  A round that
+        times out (pull quorum transiently unreachable) is recorded in
+        ``aborted_rekeys`` and retried — the revocation must eventually
+        land on every serving member, or a Byzantine replaced replica
+        could keep writing."""
+
+        def done(wts: Dict[str, int]) -> None:
+            self.rekeys.append((self.sim.now, old, new))
+            if cb is not None:
+                cb(wts)
+
+        def aborted() -> None:
+            self.aborted_rekeys.append((self.sim.now, old, new))
+            self.manager.timer(self.sync_timeout_us / 2, retry)
+
+        def retry() -> None:
+            if not any(o == old and n == new
+                       for (_t, o, n) in self.rekeys):
+                self.manager.begin_rekey(old, new, done, aborted)
+
+        self.manager.begin_rekey(old, new, done, aborted)
 
     # --------------------------------------------------------- accounting
     def member_nodes(self) -> List[MemoryNode]:
@@ -531,6 +676,16 @@ class RegisterClient:
     def mem_nodes(self) -> List[str]:
         """Legacy single-pool view of the current membership."""
         return list(self.pools[0].members)
+
+    def adopt_wts(self, wts: Dict[str, int]) -> None:
+        """Adopt inherited per-register write timestamps (permission rekey
+        during replica replacement): the new owner's next WRITE to an
+        inherited register must carry a higher timestamp than any blob the
+        pools re-keyed over, or readers would keep preferring the stale
+        inherited value."""
+        for reg, ts in wts.items():
+            if ts > self._wts.get(reg, 0):
+                self._wts[reg] = ts
 
     # ------------------------------------------------------------- WRITE
     def write(self, reg: str, value: bytes, cb: Callable[[], None]) -> None:

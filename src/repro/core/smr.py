@@ -90,12 +90,21 @@ class Cluster:
     #: the substrate this cluster is attached to (None only for hand-built
     #: Cluster objects in old-style tests)
     substrate: Optional[Substrate] = None
+    #: retained for live replica replacement (``replace_replica``)
+    app_factory: Optional[Callable[[], App]] = None
+    cfg: Optional[ConsensusConfig] = None
+    replica_cls: Any = None
+    #: replicas retired by an epoch switch (control-plane bookkeeping)
+    retired_replicas: List[UbftReplica] = field(default_factory=list)
+    #: (sim time, old_pid, new_pid) per initiated replacement
+    replacements: List[Tuple[float, str, str]] = field(default_factory=list)
 
     @classmethod
     def attach(cls, substrate: Substrate, app_factory: Callable[[], App],
                name: str = "", cfg: Optional[ConsensusConfig] = None,
                replica_cls=UbftReplica,
-               budget: int = POOL_MEMORY_BUDGET) -> "Cluster":
+               budget: int = POOL_MEMORY_BUDGET,
+               pools: Optional[Any] = None) -> "Cluster":
         """Attach one replicated application to a shared substrate.
 
         Builds 2f+1 replicas (f from ``cfg`` alone) named
@@ -106,6 +115,12 @@ class Cluster:
         neighbours'; ``budget`` is this app's per-pool Table 2 byte budget
         (overruns surface as per-app faults via
         ``substrate.audit_budgets()``, not as a global assert).
+
+        ``pools`` pins this app's register sharding to a *subset* of the
+        substrate's pools (a placement policy on top of the namespaced
+        crc32 sharding): pass pool indices, names, or MemoryPool objects;
+        ``None`` spreads over every pool (the default layout, preserved
+        bit-for-bit).
         """
         if name in substrate.apps:
             raise ValueError(f"app {name!r} already attached to substrate")
@@ -118,17 +133,20 @@ class Cluster:
                 f"cfg.f_m={cfg.f_m} disagrees with the substrate's "
                 f"f_m={substrate.f_m} — the memory fault budget comes from "
                 f"the shared pools, not per-app config")
+        app_pools = substrate.select_pools(pools)
         prefix = f"{name}/" if name else ""
         replica_pids = [f"{prefix}r{i}" for i in range(2 * cfg.f + 1)]
         replicas = [
             replica_cls(substrate.sim, substrate.net, substrate.registry,
-                        pid, replica_pids, substrate.pools, app_factory(),
+                        pid, replica_pids, app_pools, app_factory(),
                         cfg, namespace=name)
             for pid in replica_pids
         ]
         cluster = cls(sim=substrate.sim, net=substrate.net,
                       registry=substrate.registry, replicas=replicas,
-                      pools=substrate.pools, name=name, substrate=substrate)
+                      pools=app_pools, name=name, substrate=substrate,
+                      app_factory=app_factory, cfg=cfg,
+                      replica_cls=replica_cls)
         substrate.register_app(name, cluster, tuple(replica_pids),
                                budget=budget)
         return cluster
@@ -150,6 +168,92 @@ class Cluster:
                    self.replica_pids, self.replicas[0].f)
         self.clients.append(c)
         return c
+
+    # ------------------------------------------------ replica replacement
+    def replace_replica(self, old_pid: str,
+                        new_pid: Optional[str] = None
+                        ) -> Optional[UbftReplica]:
+        """Replace a (typically crashed) replica with a fresh one — the
+        control-plane operation behind the membership-epoch machinery.
+
+        The sequence (DESIGN_MEMBERSHIP.md):
+
+        1. install the joiner *non-voting* (``joining=True``) — it observes
+           the group but cannot affect any quorum;
+        2. survivors publish their latest signed checkpoint + boundary
+           snapshot + prepared-slot state into their own ``xfer/<epoch>``
+           registers, and the joiner pulls f+1 of them — the state
+           transfer travels entirely through the disaggregated-memory
+           pools (the PR 2 machinery);
+        3. every pool re-keys the old pid's register permission to the new
+           pid (``MemoryPool.rekey_owner`` — the reconfiguration
+           pull/merge path, retried on timeout), so a Byzantine replaced
+           replica cannot keep writing.  Rekey completion is *not* ordered
+           before joiner activation: if the joiner writes an inherited
+           register before ``adopt_wts`` lands, its entry is transiently
+           shadowed by the inherited higher-timestamp blob — harmless for
+           safety (the inherited CTBcast entries carry the old pid's
+           signature and fail verification at every reader) and
+           self-healing (``adopt_wts`` takes the max, so the next write
+           supersedes);
+        4. survivors route the epoch bump through a consensus slot
+           (MEMBERSHIP); executing it switches every honest replica to the
+           new epoch at the same point of its execution order, and f+1
+           EPOCH confirmations activate the joiner.
+
+        Returns the joiner (already on the event loop), or ``None`` when
+        the replacement cannot start (unknown pid / one already in
+        flight).  The switch itself completes asynchronously — drive the
+        simulator and watch ``replica.membership.epoch``.
+        """
+        if self.app_factory is None:
+            raise RuntimeError("replace_replica needs the app factory — "
+                               "attach the cluster via Cluster.attach")
+        by_pid = {r.pid: r for r in self.replicas}
+        old = by_pid.get(old_pid)
+        if old is None:
+            return None
+        survivors = [r for r in self.replicas
+                     if r.pid != old_pid and not r.crashed and not r.joining]
+        if not survivors:
+            return None
+        if any(ne > r.membership.epoch
+               for r in survivors for ne in r.pending_membership):
+            return None  # a replacement is already in flight
+        cur_epoch = max(r.membership.epoch for r in survivors)
+        members = next(r for r in survivors
+                       if r.membership.epoch == cur_epoch).membership.replicas
+        if old_pid not in members:
+            return None  # already replaced out of the group
+        e = cur_epoch + 1
+        if new_pid is None:
+            prefix = f"{self.name}/" if self.name else ""
+            new_pid = f"{prefix}r{len(self.replicas) + len(self.retired_replicas)}"
+        cls = self.replica_cls or UbftReplica
+        joiner = cls(self.sim, self.net, self.registry, new_pid,
+                     list(members), self.pools, self.app_factory(),
+                     self.cfg, namespace=self.name, joining=True,
+                     epoch=cur_epoch)
+        survivor_pids = [r.pid for r in survivors
+                         if r.membership.epoch == cur_epoch]
+        for r in survivors:
+            r.publish_xfer(e)
+        for pool in self.pools:
+            pool.rekey_owner(old_pid, new_pid,
+                             cb=joiner.regs.adopt_wts)
+        joiner.begin_join(e, survivor_pids, (old_pid, new_pid))
+        for r in survivors:
+            r.propose_membership(e, old_pid, new_pid)
+        # control-plane bookkeeping: the cluster now routes around old_pid
+        idx = self.replicas.index(old)
+        self.replicas[idx] = joiner
+        self.retired_replicas.append(old)
+        for c in self.clients:
+            c.replicas = self.replica_pids
+        if self.substrate is not None:
+            self.substrate.add_owner(self.name, new_pid)
+        self.replacements.append((self.sim.now, old_pid, new_pid))
+        return joiner
 
     def memory_by_pool(self) -> Dict[str, int]:
         """This app's occupied disaggregated memory per shared pool

@@ -94,6 +94,46 @@ class Substrate:
             self._owner_app[pid] = name
         return rec
 
+    def add_owner(self, name: str, pid: str) -> None:
+        """Register a pid created after attach (replica replacement) under
+        its app, so per-app accounting keeps attributing its cells."""
+        rec = self.apps.get(name)
+        if rec is None:
+            raise KeyError(f"no app {name!r} on this substrate")
+        if pid not in rec.owner_pids:
+            rec.owner_pids = rec.owner_pids + (pid,)
+        self._owner_app[pid] = name
+
+    def select_pools(self, pools: Optional[Any]) -> List[MemoryPool]:
+        """Resolve a pool-placement policy: ``None`` → every pool (the
+        same list object, so legacy identity checks hold); otherwise a
+        subset given as indices, names, or MemoryPool objects."""
+        if pools is None:
+            return self.pools
+        by_name = {p.name: p for p in self.pools}
+        out: List[MemoryPool] = []
+        for ref in pools:
+            if isinstance(ref, MemoryPool):
+                if ref not in self.pools:
+                    raise ValueError(f"pool {ref.name!r} is not on this "
+                                     f"substrate")
+                out.append(ref)
+            elif isinstance(ref, int):
+                if not 0 <= ref < len(self.pools):
+                    raise ValueError(f"cannot resolve pool {ref!r} "
+                                     f"(substrate has {len(self.pools)})")
+                out.append(self.pools[ref])
+            elif ref in by_name:
+                out.append(by_name[ref])
+            else:
+                raise ValueError(f"cannot resolve pool {ref!r}")
+        if not out:
+            raise ValueError("pool placement must select at least one pool")
+        if len(set(id(p) for p in out)) != len(out):
+            raise ValueError("pool placement lists a pool twice — the "
+                             "crc32 shard denominator would double-count")
+        return out
+
     @property
     def clusters(self) -> Dict[str, Any]:
         return {name: rec.cluster for name, rec in self.apps.items()}

@@ -122,6 +122,23 @@ class TBcastService:
             if not st.rto_pending:
                 self._arm_rto(stream, dst, st)
 
+    def drop_peer(self, pid: str) -> None:
+        """Free every connection to/from a replica retired by an epoch
+        switch: its send windows stop retransmitting and its receive
+        buffers are released, so the preallocated wire memory of §6.2
+        (``memory_bytes``) stays bounded across replacements instead of
+        accumulating one dead connection set per retired pid."""
+        for key in [key for key in self._send if key[1] == pid]:
+            st = self._send[key]
+            # a pending RTO still holds a reference: empty the window so
+            # the timer chain finds nothing live and stops re-arming
+            st.window.clear()
+            st.acked = st.next_k
+            del self._send[key]
+            self._conns.discard(key)
+        for key in [key for key in self._recv if key[0] == pid]:
+            del self._recv[key]
+
     # ----------------------------------------------------------------- wire
     def _ship(self, stream: str, dst: str, st: _SendState, k: int,
               payload: Any, size: Optional[int] = None) -> None:

@@ -96,6 +96,9 @@ class AppSpec:
     workload: Optional[Workload] = None
     budget: int = POOL_MEMORY_BUDGET   # per-pool Table 2 byte budget
     replica_cls: Any = None            # default: UbftReplica
+    #: pool placement policy: pin this app's register sharding to a pool
+    #: subset (indices / names / MemoryPool objects); None = every pool
+    pools: Any = None
 
 
 @dataclass
@@ -275,6 +278,8 @@ def build_deployment(spec: ScenarioSpec
         kw: Dict[str, Any] = {}
         if a.replica_cls is not None:
             kw["replica_cls"] = a.replica_cls
+        if a.pools is not None:
+            kw["pools"] = a.pools
         clusters[a.name] = Cluster.attach(substrate, a.app, name=a.name,
                                           cfg=a.cfg, budget=a.budget, **kw)
     return substrate, clusters
@@ -293,8 +298,8 @@ def run_scenario(spec: ScenarioSpec) -> ScenarioResult:
             else spec.faults
         if not isinstance(sched, FaultSchedule):
             sched = FaultSchedule(sched)
-        injector = FaultInjector(sim, substrate.net,
-                                 substrate.pools).install(sched)
+        injector = FaultInjector(sim, substrate.net, substrate.pools,
+                                 clusters=clusters).install(sched)
 
     runs: Dict[str, _WorkloadRun] = {}
     for a in spec.apps:

@@ -5,15 +5,17 @@ A :class:`FaultSchedule` is a sorted list of :class:`FaultEvent`\\ s; the
 virtual time, resolving targets against the live process table, the network
 model, and the memory pools:
 
-==============  =======================================  =====================
-action          target                                   effect
-==============  =======================================  =====================
-``crash``       process pid                              ``Process.crash()``
-``recover``     process pid                              ``Process.recover()``
-``partition``   ``(src, dst)`` pid pair                  drop both directions
-``heal``        ``(src, dst)`` pair or ``None`` (= all)  restore link(s)
-``reconfigure`` pool name / index / ``(pool, dead_pid)``  ``MemoryPool.reconfigure``
-==============  =======================================  =====================
+=================  =======================================  =====================
+action             target                                   effect
+=================  =======================================  =====================
+``crash``          process pid                              ``Process.crash()``
+``recover``        process pid                              ``Process.recover()``
+``partition``      ``(src, dst)`` pid pair                  drop both directions
+``heal``           ``(src, dst)`` pair or ``None`` (= all)  restore link(s)
+``reconfigure``    pool name / index / ``(pool, dead_pid)``  ``MemoryPool.reconfigure``
+``replace_replica`` replica pid (app resolved by prefix)    ``Cluster.replace_replica``
+``stale_serve``    memory-node pid or ``(pid, False)``      ``MemoryNode.set_stale_serve``
+=================  =======================================  =====================
 
 Everything is driven by one seeded RNG, so a schedule is exactly
 reproducible from ``(seed, horizon, targets)`` — the property the
@@ -30,7 +32,8 @@ from typing import Any, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-ACTIONS = ("crash", "recover", "partition", "heal", "reconfigure")
+ACTIONS = ("crash", "recover", "partition", "heal", "reconfigure",
+           "replace_replica", "stale_serve")
 
 
 @dataclass(frozen=True)
@@ -75,15 +78,20 @@ class FaultSchedule:
                partitions: Sequence[Tuple[str, str]] = (),
                n_memory_crashes: int = 1, n_replica_crashes: int = 0,
                n_partitions: int = 0, reconfigure: bool = False,
-               recover: bool = True) -> "FaultSchedule":
+               recover: bool = True, replace_replicas: bool = False,
+               stale_serve: Sequence[str] = ()) -> "FaultSchedule":
         """Generate a deterministic schedule inside ``(0.1, 0.8)·horizon``.
 
         ``memory`` lists crash-eligible memory-node pids (pass at most f_m
         per pool to stay within the fault budget); ``replicas`` likewise
         (at most f).  ``reconfigure`` replaces each crashed memory node via
         its pool (resolved by pid prefix) instead of recovering it.
+        ``replace_replicas`` follows each replica crash with a
+        ``replace_replica`` event (membership-epoch repair under load).
         ``partitions`` lists candidate pid pairs for ``n_partitions``
-        partition+heal episodes.
+        partition+heal episodes.  ``stale_serve`` lists memory-node pids
+        that turn into stale-serving Byzantine memory (enabled at a seeded
+        time, never disabled — keep it within f_m per pool).
         """
         rng = np.random.default_rng(seed)
         ev: List[FaultEvent] = []
@@ -102,13 +110,19 @@ class FaultSchedule:
             elif recover:
                 ev.append(FaultEvent(t0 + t(0.05, 0.15), "recover", str(pid)))
         for pid in list(rng.permutation(list(replicas)))[:n_replica_crashes]:
-            ev.append(FaultEvent(t(), "crash", str(pid)))
+            t0 = t()
+            ev.append(FaultEvent(t0, "crash", str(pid)))
+            if replace_replicas:
+                ev.append(FaultEvent(t0 + t(0.05, 0.15), "replace_replica",
+                                     str(pid)))
         pairs = list(partitions)
         for i in list(rng.permutation(len(pairs)))[:n_partitions]:
             a, b = pairs[int(i)]
             t0 = t()
             ev.append(FaultEvent(t0, "partition", (a, b)))
             ev.append(FaultEvent(t0 + t(0.05, 0.15), "heal", (a, b)))
+        for pid in stale_serve:
+            ev.append(FaultEvent(t(), "stale_serve", str(pid)))
         return cls(ev, seed=seed)
 
 
@@ -132,17 +146,22 @@ class FaultInjector:
     a fault that did not actually happen.
     """
 
-    def __init__(self, sim, net, pools: Sequence[Any] = ()):
+    def __init__(self, sim, net, pools: Sequence[Any] = (),
+                 clusters: Optional[dict] = None):
         self.sim = sim
         self.net = net
         self.pools = list(pools)
+        #: app name -> Cluster, for ``replace_replica`` targets (the pid's
+        #: ``app/`` prefix selects the cluster; "" is the unnamed app)
+        self.clusters = dict(clusters or {})
         self.log: List[Tuple[float, str, Any]] = []
         self.skipped: List[Tuple[float, str, Any]] = []
 
     @classmethod
     def for_cluster(cls, cluster, schedule: Optional[FaultSchedule] = None
                     ) -> "FaultInjector":
-        inj = cls(cluster.sim, cluster.net, getattr(cluster, "pools", ()))
+        inj = cls(cluster.sim, cluster.net, getattr(cluster, "pools", ()),
+                  clusters={getattr(cluster, "name", ""): cluster})
         if schedule is not None:
             inj.install(schedule)
         return inj
@@ -204,3 +223,37 @@ class FaultInjector:
             target, dead = target
         pool = self._resolve_pool(target, dead)
         return pool.reconfigure(dead)
+
+    def _do_replace_replica(self, target: Any) -> bool:
+        """Replace a replica: target is its pid (``A/r0`` resolves app
+        ``A``; bare ``r0`` the unnamed app), or ``(app, pid)``."""
+        if isinstance(target, tuple):
+            app, pid = target
+        else:
+            pid = target
+            app = pid.rsplit("/", 1)[0] if "/" in pid else ""
+        cluster = self.clusters.get(app)
+        if cluster is None:
+            raise KeyError(f"no cluster {app!r} for replace_replica target "
+                           f"{target!r}")
+        return cluster.replace_replica(pid) is not None
+
+    def _do_stale_serve(self, target: Any) -> bool:
+        """Byzantine memory-side adversary: the node starts serving stale
+        (old-but-well-formed) blobs.  ``(pid, False)`` switches it back."""
+        on = True
+        if isinstance(target, tuple):
+            target, on = target
+        node = self.sim.processes.get(target)
+        if node is None:
+            for p in self.pools:
+                node = getattr(p, "nodes", {}).get(target)
+                if node is not None:
+                    break
+        if node is None or not hasattr(node, "set_stale_serve"):
+            raise KeyError(f"stale_serve target {target!r} is not a "
+                           f"memory node")
+        if bool(node.stale_serve) == bool(on):
+            return False
+        node.set_stale_serve(on)
+        return True

@@ -200,12 +200,84 @@ def scenario_shared_substrate() -> dict:
     }
 
 
+def scenario_replica_replacement() -> dict:
+    """Membership epochs end to end: an open-loop app on the registers
+    slow path, one replica crashed mid-run and *replaced* (non-voting
+    install, xfer via the pools, permission rekey, agreed epoch bump),
+    with the Byzantine leader equivocating one slot in the same window —
+    gates the whole ISSUE 5 machinery with one digest."""
+    from repro.apps.kvstore import KVStoreApp, set_req
+    from repro.core.consensus import ConsensusConfig
+    from repro.scenario import AppSpec, ScenarioSpec, Workload, run_scenario
+    from repro.sim.faults import FaultSchedule
+
+    def cfg():
+        return ConsensusConfig(t=16, window=16, slow_mode="always",
+                               ctb_fast_enabled=False,
+                               view_timeout_us=20_000.0)
+
+    def equivocate(cluster):
+        """The leader sends conflicting PREPAREs for one slot to different
+        followers below CTBcast (and pushes one variant through the slow
+        path), stitched into its live stream position."""
+        leader = cluster.replicas[0]
+        v, s, k = leader.view, leader.next_slot, leader.my_ctb.next_k
+        m_a = ("PREPARE", v, s, (("evil", s), "", b""))
+        m_b = ("PREPARE", v, s, (("evil", s), "", b"\x01"))
+        stream = leader.my_ctb._s_lock
+        leader.tb.broadcast(stream, k, m_a, [leader.pid, "r1"])
+        leader.tb.broadcast(stream, k, m_b, ["r2"])
+        leader.my_ctb.buf[k] = m_a
+        leader.my_ctb.next_k = max(leader.my_ctb.next_k, k + 1)
+        leader.ctb_k = max(leader.ctb_k, k + 1)
+        leader.next_slot = s + 1
+        leader.my_ctb.escalate(k)
+
+    def faults(substrate):
+        sim = substrate.sim
+        cluster = substrate.clusters[""]
+        sim.at(600.0, lambda: equivocate(cluster))
+        sim.at(1800.0, lambda: cluster.replace_replica("r2"))
+        return FaultSchedule().add(900.0, "crash", "r2")
+
+    spec = ScenarioSpec(
+        n_pools=2, seed=17, faults=faults, drain_us=60_000.0,
+        apps=[AppSpec(name="", app=KVStoreApp, cfg=cfg(),
+                      workload=Workload(kind="open", rate_rps=5000.0,
+                                        duration_us=3000.0,
+                                        payload_fn=lambda i: set_req(
+                                            b"g%d" % (i % 4), b"w%d" % i),
+                                        seed=23,
+                                        timeout_us=120_000_000.0))])
+    res = run_scenario(spec)
+    cluster = res.clusters[""]
+    live = [r for r in cluster.replicas if not r.crashed]
+    assert all(r.membership.epoch == 1 and not r.joining for r in live)
+    switch_times = sorted(t for r in live for (t, _e, _o, _n)
+                          in r.epoch_switches)
+    rekeys = sum(len(p.rekeys) for p in res.substrate.pools)
+    lats = res.apps[""].latencies
+    return {
+        "digest": _digest(lats + switch_times,
+                          [res.msgs_sent, res.bytes_sent,
+                           res.apps[""].issued, rekeys,
+                           max(r.membership.epoch for r in live)]),
+        "n": len(lats),
+        "issued": res.apps[""].issued,
+        "epoch_switches": len(switch_times),
+        "rekeys": rekeys,
+        "msgs_sent": res.msgs_sent,
+        "bytes_sent": res.bytes_sent,
+    }
+
+
 SCENARIOS = {
     "throughput_mini": scenario_throughput_mini,
     "slow_path": scenario_slow_path,
     "mu_baseline": scenario_mu_baseline,
     "faults_reconfig": scenario_faults_reconfig,
     "shared_substrate": scenario_shared_substrate,
+    "replica_replacement": scenario_replica_replacement,
 }
 
 

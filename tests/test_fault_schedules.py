@@ -124,11 +124,13 @@ def test_partition_and_heal(pooled_cluster, fault_injector):
 
 @pytest.mark.slow
 @pytest.mark.parametrize("seed", [1, 2, 4])
-@pytest.mark.parametrize("scenario", ["combined", "auto_lease"])
+@pytest.mark.parametrize("scenario", ["combined", "auto_lease",
+                                      "stale_serve", "replace_replica"])
 def test_seeded_fault_matrix(pooled_cluster, fault_injector, seed, scenario):
     """Heavier seeded matrix: combined crash+reconfigure+partition
-    schedules, and lease-driven auto-reconfiguration underneath a live
-    workload."""
+    schedules, lease-driven auto-reconfiguration, a Byzantine stale-serving
+    memory node, and a mid-workload replica replacement — all underneath a
+    live workload."""
     if scenario == "combined":
         c = pooled_cluster(n_pools=2, seed=seed, cfg=_registers_cfg())
         sched = FaultSchedule.seeded(
@@ -136,6 +138,21 @@ def test_seeded_fault_matrix(pooled_cluster, fault_injector, seed, scenario):
             replicas=["r1"], partitions=[("r1", "r2")],
             n_memory_crashes=2, n_replica_crashes=1, n_partitions=1,
             reconfigure=True)
+        fault_injector(c, sched)
+    elif scenario == "stale_serve":
+        # one stale-serving node per pool (≤ f_m each): old-but-well-formed
+        # blobs cannot break regularity — READs take the highest valid
+        # timestamp over an f_m+1 quorum, and some fresh responder outbids
+        c = pooled_cluster(n_pools=2, seed=seed, cfg=_registers_cfg())
+        sched = FaultSchedule.seeded(
+            seed, horizon_us=5000.0, n_memory_crashes=0,
+            stale_serve=["m1", "p1m2"])
+        fault_injector(c, sched)
+    elif scenario == "replace_replica":
+        c = pooled_cluster(n_pools=2, seed=seed, cfg=_registers_cfg())
+        sched = FaultSchedule.seeded(
+            seed, horizon_us=5000.0, n_memory_crashes=0, pools=c.pools,
+            replicas=["r2"], n_replica_crashes=1, replace_replicas=True)
         fault_injector(c, sched)
     else:
         c = pooled_cluster(n_pools=2, seed=seed, cfg=_registers_cfg(),
@@ -147,6 +164,15 @@ def test_seeded_fault_matrix(pooled_cluster, fault_injector, seed, scenario):
     if scenario == "auto_lease":
         c.sim.run(until=c.sim.now + 5000)
         assert c.pools[0].reconfigurations, "lease never fired"
+    if scenario == "stale_serve":
+        stale = [n for p in c.pools for n in p.member_nodes()
+                 if n.stale_serve]
+        assert stale, "the stale-serve adversary never engaged"
+    if scenario == "replace_replica":
+        c.sim.run(until=c.sim.now + 100_000)
+        live = [r for r in c.replicas if not r.crashed]
+        assert len(live) == 3 and all(r.membership.epoch == 1 for r in live)
+        _assert_safe(c, acked)
 
 
 def test_schedules_are_deterministic():

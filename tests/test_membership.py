@@ -1,0 +1,289 @@
+"""Membership epochs: live replica replacement (ISSUE 5).
+
+Covers the tentpole end to end:
+
+* :class:`~repro.core.membership.MembershipEpoch` — slot-preserving
+  replacement, leader mapping, quorum arithmetic;
+* ``Cluster.replace_replica`` — non-voting install, state transfer via the
+  pools (``xfer/<epoch>`` registers + permission rekey), epoch bump agreed
+  through a consensus MEMBERSHIP slot, f+1 EPOCH activation;
+* stale-epoch rejection — SEAL_VIEW/NEW_VIEW from the wrong epoch are
+  dropped, retired replicas' streams are dead;
+* non-voting joiners cannot affect quorums before the epoch commits —
+  neither by casting votes nor by having votes counted;
+* the acceptance scenario: crash + replace under load with a Byzantine
+  (equivocating) leader in the same window, safety + liveness + < 1 MiB
+  per pool throughout the transfer.
+"""
+
+import pytest
+
+from repro.apps.kvstore import KVStoreApp, set_req
+from repro.core import crypto
+from repro.core.consensus import ConsensusConfig
+from repro.core.membership import MembershipEpoch
+from repro.core.registers import POOL_MEMORY_BUDGET
+from repro.core.smr import Cluster
+from repro.core.substrate import Substrate
+from repro.sim.faults import FaultInjector, FaultSchedule
+
+
+def _registers_cfg(**kw):
+    base = dict(t=16, window=16, slow_mode="always", ctb_fast_enabled=False,
+                view_timeout_us=20_000.0)
+    base.update(kw)
+    return ConsensusConfig(**base)
+
+
+def _cluster(seed=0, n_pools=2, cfg=None):
+    substrate = Substrate(n_pools=n_pools, seed=seed)
+    return Cluster.attach(substrate, KVStoreApp, name="",
+                          cfg=cfg or _registers_cfg())
+
+
+def _run_kv(cluster, client, lo, hi, acked, timeout=600_000_000):
+    for i in range(lo, hi):
+        k, v = b"k%d" % (i % 4), b"v%d" % i
+        r, _ = cluster.run_request(client, set_req(k, v), timeout=timeout)
+        assert r == b"OK"
+        acked[k] = v
+
+
+def _assert_converged(cluster, acked):
+    cluster.sim.run(until=cluster.sim.now + 100_000)
+    live = [r for r in cluster.replicas if not r.crashed]
+    for rep in live:
+        for k, v in acked.items():
+            assert rep.app.store.get(k) == v, (rep.pid, k, v)
+    for a, b in zip(live, live[1:]):
+        assert a.app.store == b.app.store
+
+
+# --------------------------------------------------------------------------
+# MembershipEpoch
+# --------------------------------------------------------------------------
+def test_membership_epoch_replace_preserves_slot():
+    m0 = MembershipEpoch(0, ("r0", "r1", "r2"))
+    assert (m0.n, m0.f, m0.quorum) == (3, 1, 2)
+    assert m0.leader(4) == "r1"
+    m1 = m0.replace("r1", "r3")
+    assert m1.epoch == 1
+    assert m1.replicas == ("r0", "r3", "r2")   # slot preserved
+    assert m1.leader(4) == "r3"                # only the replaced slot moves
+    assert "r1" not in m1 and "r3" in m1
+    with pytest.raises(ValueError):
+        m1.replace("r1", "r4")                 # r1 is no longer a member
+    with pytest.raises(ValueError):
+        m1.replace("r0", "r2")                 # r2 already a member
+    with pytest.raises(ValueError):
+        MembershipEpoch(0, ("r0", "r0", "r1"))
+
+
+# --------------------------------------------------------------------------
+# Replacement end to end
+# --------------------------------------------------------------------------
+def test_replace_crashed_replica_epoch_commits_and_joiner_converges():
+    c = _cluster(seed=5)
+    cl = c.new_client()
+    acked = {}
+    _run_kv(c, cl, 0, 6, acked)
+    c.replicas[2].crash()
+    joiner = c.replace_replica("r2")
+    assert joiner is not None and joiner.pid == "r3" and joiner.joining
+    c.sim.run(until=c.sim.now + 50_000)
+    # the epoch bump was agreed and applied everywhere, joiner included
+    for rep in c.replicas:
+        assert rep.membership.epoch == 1
+        assert tuple(rep.replicas) == ("r0", "r1", "r3")
+        assert not rep.joining
+    # register permissions were re-keyed on every pool
+    for p in c.pools:
+        assert p.rekeys and p.rekeys[0][1:] == ("r2", "r3")
+        for n in p.member_nodes():
+            assert "r2" in n.revoked
+            # no occupied cell remains under the revoked owner (reads may
+            # have re-created empty placeholder cells — zero occupancy)
+            assert not any(k[0] == "r2" and cell.blob
+                           for k, cell in n.cells.items())
+    _run_kv(c, cl, 6, 12, acked)
+    _assert_converged(c, acked)
+    # the joiner executed the full history (state transfer + catch-up)
+    assert joiner.app.store == c.replicas[0].app.store
+    assert c.replacements and c.replacements[0][1:] == ("r2", "r3")
+
+
+def test_replace_replica_fault_event_drives_replacement():
+    c = _cluster(seed=9)
+    sched = (FaultSchedule()
+             .add(500.0, "crash", "r1")
+             .add(1200.0, "replace_replica", "r1"))
+    inj = FaultInjector.for_cluster(c, sched)
+    cl = c.new_client()
+    acked = {}
+    _run_kv(c, cl, 0, 10, acked)
+    c.sim.run(until=c.sim.now + 60_000)
+    assert [a for (_t, a, _tgt) in inj.log] == ["crash", "replace_replica"]
+    for rep in c.replicas:
+        if not rep.crashed:
+            assert rep.membership.epoch == 1
+    _assert_converged(c, acked)
+
+
+def test_second_replacement_rejected_while_one_in_flight():
+    c = _cluster(seed=3)
+    c.replicas[2].crash()
+    assert c.replace_replica("r2") is not None
+    # in flight: survivors hold a pending bump → a second one is refused
+    assert c.replace_replica("r1") is None
+    c.sim.run(until=c.sim.now + 50_000)
+    # after the commit, a further replacement is possible again
+    c.replicas[1].crash()
+    j2 = c.replace_replica("r1")
+    assert j2 is not None and j2.pid == "r4"
+    c.sim.run(until=c.sim.now + 50_000)
+    assert all(r.membership.epoch == 2 for r in c.replicas if not r.crashed)
+
+
+# --------------------------------------------------------------------------
+# Stale-epoch rejection
+# --------------------------------------------------------------------------
+def test_stale_epoch_seal_view_and_new_view_are_dropped():
+    c = _cluster(seed=1)
+    rep = c.replicas[0]
+    peer = c.replicas[1].pid
+    # bump the local epoch as an agreed switch would
+    rep.pending_membership[1] = ("r2", "rX")
+    rep._ensure_participant("rX")
+    rep._apply_membership(1, "r2", "rX", slot=-1)
+    assert rep.membership.epoch == 1
+    st = rep.state[peer]
+    before = (st.view, st.seal_view)
+    # epoch-0 (stale) SEAL_VIEW: rejected like a stale view
+    rep._on_seal_view(peer, ("SEAL_VIEW", 3))
+    assert (st.view, st.seal_view) == before
+    # wrong-epoch NEW_VIEW: rejected as well
+    rep._on_new_view(peer, ("NEW_VIEW", {}, 7))
+    assert st.new_view is None
+    # current-epoch SEAL_VIEW is processed
+    rep._on_seal_view(peer, ("SEAL_VIEW", 3, 1))
+    assert st.view == 3
+
+
+def test_retired_replica_stream_is_dead():
+    c = _cluster(seed=2)
+    rep = c.replicas[0]
+    rep.pending_membership[1] = ("r2", "rX")
+    rep._ensure_participant("rX")
+    rep._apply_membership(1, "r2", "rX", slot=-1)
+    assert "r2" in rep.retired
+    fifo_before = rep.state["r2"].fifo_next
+    rep._ctb_deliver("r2", fifo_before, ("SEAL_VIEW", 1, 1))
+    assert rep.state["r2"].fifo_next == fifo_before  # nothing interpreted
+    # votes signed by the retired pid no longer count anywhere
+    rep._on_will_certify("r2", "cons/WILL_CERTIFY", 0, (0, 0))
+    assert not rep.will_certify.get((0, 0))
+
+
+# --------------------------------------------------------------------------
+# Non-voting joiner
+# --------------------------------------------------------------------------
+def test_joiner_votes_do_not_count_and_joiner_does_not_vote():
+    c = _cluster(seed=4)
+    rep = c.replicas[0]
+    # votes from a pid outside the current epoch are never counted
+    rep._on_will_certify("r9", "cons/WILL_CERTIFY", 0, (0, 0))
+    rep._on_will_commit("r9", "cons/WILL_COMMIT", 0, (0, 0))
+    assert not rep.will_certify.get((0, 0))
+    assert not rep.will_commit.get((0, 0))
+    # echoes from non-members do not count toward the echo quorum
+    rep._note_echo(("rid", 0), "r9")
+    assert ("rid", 0) not in rep.echoes
+
+    # a joiner itself never promises / certifies / seals
+    c.replicas[2].crash()
+    joiner = c.replace_replica("r2")
+    msgs_before = c.net.msgs_sent
+    joiner._endorse(0, 0)
+    joiner._do_certify(0, 0)
+    joiner.change_view()
+    assert joiner.my_will_certifies == set()
+    assert joiner.my_certified == set()
+    assert not joiner.changing_view and joiner.view == 0
+    assert c.net.msgs_sent == msgs_before  # cast no vote on the wire
+
+
+def test_joiner_cannot_complete_quorums_before_epoch_commit():
+    """A quorum of f+1 over {survivor, joiner} must NOT form: the joiner's
+    share is refused, so only current-epoch members can decide."""
+    c = _cluster(seed=6)
+    rep = c.replicas[0]
+    c.replicas[2].crash()
+    joiner = c.replace_replica("r2")
+    # before the epoch commit the joiner is not in anyone's member set
+    assert joiner.pid not in rep._member_set
+    rep._on_certify_summary(joiner.pid, (7, b"x", b"sig"))
+    assert joiner.pid not in rep.summary_sigs.get(7, {})
+    rep._on_crtfy_vc(joiner.pid, (1, "r0", b"d", b"s"))
+    assert (1, "r0") not in rep.vc_shares
+
+
+# --------------------------------------------------------------------------
+# Acceptance: replacement under load with a Byzantine leader in the window
+# --------------------------------------------------------------------------
+def _equivocate_leader(leader, f1, f2):
+    """The leader equivocates below CTBcast: conflicting PREPAREs for one
+    slot to different followers (the existing Byzantine-leader rig),
+    stitched into its live stream position so it happens mid-run."""
+    v, s, k = leader.view, leader.next_slot, leader.my_ctb.next_k
+    reqA = (("evil", s), "", b"")
+    reqB = (("evil", s), "", b"\x01")
+    mA = ("PREPARE", v, s, reqA)
+    mB = ("PREPARE", v, s, reqB)
+    stream = leader.my_ctb._s_lock
+    leader.tb.broadcast(stream, k, mA, [leader.pid, f1])
+    leader.tb.broadcast(stream, k, mB, [f2])
+    # keep the Byzantine stream position consistent for later broadcasts
+    leader.my_ctb.buf[k] = mA
+    leader.my_ctb.next_k = max(leader.my_ctb.next_k, k + 1)
+    leader.ctb_k = max(leader.ctb_k, k + 1)
+    leader.next_slot = s + 1
+    leader.my_ctb.escalate(k)   # push one variant through the slow path
+
+
+@pytest.mark.slow
+def test_replacement_under_load_with_byzantine_leader():
+    c = _cluster(seed=7)
+    sim = c.sim
+    cl = c.new_client()
+    acked = {}
+    _run_kv(c, cl, 0, 4, acked)
+
+    peak = {"bytes": 0}
+    handle = sim.periodic(50.0, lambda: peak.__setitem__(
+        "bytes", max(peak["bytes"],
+                     max(p.memory_bytes() for p in c.pools))))
+
+    sim.at(sim.now + 300.0, lambda: c.replicas[2].crash())
+    sim.at(sim.now + 600.0,
+           lambda: _equivocate_leader(c.replicas[0], "r1", "r2"))
+    sim.at(sim.now + 900.0, lambda: c.replace_replica("r2"))
+
+    _run_kv(c, cl, 4, 16, acked)
+    sim.run(until=sim.now + 120_000)
+    handle.cancel()
+
+    live = [r for r in c.replicas if not r.crashed]
+    assert len(live) == 3                       # joiner replaced the crash
+    assert all(r.membership.epoch == 1 for r in live)
+    # safety + liveness: every acked write on every current-epoch replica
+    _assert_converged(c, acked)
+    # the equivocated slot never decided two ways across live replicas
+    evil = {}
+    for r in live:
+        for s, batch in r.decided.items():
+            if any(isinstance(x[0], tuple) and x[0][:1] == ("evil",)
+                   for x in batch):
+                evil.setdefault(s, set()).add(crypto.encode(batch))
+    assert all(len(variants) == 1 for variants in evil.values())
+    # Table 2: < 1 MiB per pool *throughout* the transfer
+    assert peak["bytes"] < POOL_MEMORY_BUDGET

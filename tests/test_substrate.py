@@ -219,3 +219,49 @@ def test_attach_rejects_f_m_disagreeing_with_substrate():
     # omitting cfg inherits the substrate's budget
     c = Cluster.attach(substrate, FlipApp, name="B")
     assert c.replicas[0].regs.quorum == 3
+
+
+# --------------------------------------------------------------------------
+# Pool placement policies (ISSUE 5)
+# --------------------------------------------------------------------------
+def test_pool_placement_pins_apps_to_disjoint_subsets():
+    """attach(..., pools=subset) pins an app's register sharding to a pool
+    subset on top of the namespaced crc32 sharding: each app's cells land
+    only in its pinned pools, so a noisy neighbour cannot even share a
+    pool when the operator says so."""
+    substrate = Substrate(n_pools=4)
+    a = Cluster.attach(substrate, KVStoreApp, name="A", cfg=_slow_cfg(),
+                       pools=[0, 1])
+    b = Cluster.attach(substrate, KVStoreApp, name="B", cfg=_slow_cfg(),
+                       pools=["pool2", "pool3"])
+    assert [p.name for p in a.pools] == ["pool0", "pool1"]
+    assert [p.name for p in b.pools] == ["pool2", "pool3"]
+    for cluster in (a, b):
+        cl = cluster.new_client()
+        for i in range(6):
+            r, _ = cluster.run_request(cl, set_req(b"k%d" % i, b"v"))
+            assert r == b"OK"
+    usage = substrate.memory_by_app()
+    assert set(usage["A"]) <= {"pool0", "pool1"} and usage["A"]
+    assert set(usage["B"]) <= {"pool2", "pool3"} and usage["B"]
+    # the un-pinned default still spreads over every pool (same object)
+    c = Cluster.attach(substrate, KVStoreApp, name="C", cfg=_slow_cfg())
+    assert c.pools is substrate.pools
+
+
+def test_pool_placement_validation():
+    substrate = Substrate(n_pools=2)
+    with pytest.raises(ValueError, match="resolve pool"):
+        Cluster.attach(substrate, FlipApp, name="A", pools=["nope"])
+    with pytest.raises(ValueError, match="at least one"):
+        Cluster.attach(substrate, FlipApp, name="B", pools=[])
+    with pytest.raises(ValueError, match="resolve pool"):
+        Cluster.attach(substrate, FlipApp, name="B2", pools=[5])
+    with pytest.raises(ValueError, match="resolve pool"):
+        Cluster.attach(substrate, FlipApp, name="B3", pools=[-1])
+    with pytest.raises(ValueError, match="twice"):
+        Cluster.attach(substrate, FlipApp, name="B4", pools=[0, "pool0"])
+    other = Substrate(n_pools=1)
+    with pytest.raises(ValueError, match="not on this substrate"):
+        Cluster.attach(substrate, FlipApp, name="C",
+                       pools=[other.pools[0]])
