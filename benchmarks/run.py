@@ -14,7 +14,10 @@ the dry-run artifacts (artifacts/dryrun/*.json) when present.
   (when the ``shared`` figure is run);
 * ``BENCH_membership.json`` — reconfiguration-under-load tails (replica
   replacement × pool sync) from ``benchmarks/fig11_reconfig.py`` (when
-  the ``membership`` figure is run).
+  the ``membership`` figure is run);
+* ``BENCH_sharded.json`` — sharded-service scale-out (K×load×Zipf sweep:
+  uniform scaling curve, hot-shard p99 knee, cross-shard 2PC latency)
+  from ``benchmarks/sharded.py`` (when the ``sharded`` figure is run).
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--json] [figure ...]
 """
@@ -39,8 +42,8 @@ def _write_json(path: str, payload: dict) -> None:
 def main() -> None:
     from benchmarks import (engine_perf, fig7_app_latency, fig8_request_size,
                             fig9_breakdown, fig10_nonequivocation,
-                            fig11_reconfig, fig11_tail_latency, shared_pools,
-                            table2_memory, throughput, roofline)
+                            fig11_reconfig, fig11_tail_latency, sharded,
+                            shared_pools, table2_memory, throughput, roofline)
     mods = {
         "fig7": fig7_app_latency,
         "fig8": fig8_request_size,
@@ -51,6 +54,7 @@ def main() -> None:
         "table2": table2_memory,
         "throughput": throughput,
         "shared": shared_pools,
+        "sharded": sharded,
         "engine": engine_perf,
         "roofline": roofline,
     }
@@ -90,6 +94,8 @@ def main() -> None:
             _write_json("BENCH_shared.json", shared)
         if "membership" in results:
             _write_json("BENCH_membership.json", results["membership"])
+        if "sharded" in results:
+            _write_json("BENCH_sharded.json", results["sharded"])
         if "throughput" in results:
             tp = results["throughput"]
             protocol = {

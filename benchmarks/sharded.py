@@ -1,0 +1,176 @@
+"""Sharded-service scale-out: K uBFT groups over one shared substrate.
+
+One 2f+1 group saturates around 1 Mops (BENCH_protocol.json b8_p4), so the
+service plane scales *out*: ``repro.service.ShardedService`` hash-partitions
+the keyspace across K groups on ONE substrate.  Three sweeps:
+
+* **scaling** — uniform keys, fixed per-shard ConsensusConfig, closed-loop
+  load proportional to K: aggregate throughput must scale ≥3× from K=1 to
+  K=4 (each shard is an independent consensus instance; the shared
+  substrate adds only event-loop interleaving, not ordering coupling).
+* **zipf knee** — K=4 fixed, open-loop at a fixed aggregate rate the
+  uniform spread handles comfortably; sweeping Zipf θ concentrates the
+  keyspace onto a hot shard until it saturates — the p99 "knee" is the
+  cost of skew that partitioning alone cannot shed (split/merge, the
+  remaining ROADMAP work, is the answer; this sweep is its baseline).
+* **cross_shard** — 2PC MSETs spanning two shards: commit latency vs the
+  single-shard MSET fast path, plus the abort rate under key contention.
+
+Usage:  PYTHONPATH=src:. python benchmarks/sharded.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import emit, percentiles, tune_runtime
+from repro.core.consensus import ConsensusConfig
+from repro.scenario import ScenarioSpec, ServiceSpec, Workload, run_scenario
+
+N_POOLS = 2
+KEYSPACE = 128
+SCALE_SWEEP = (1, 2, 4)
+SMOKE_SCALE_SWEEP = (1, 4)
+THETAS = (0.0, 0.8, 1.2)
+SMOKE_THETAS = (0.0, 1.2)
+KNEE_K = 4
+DURATION_US = 4_000.0
+CLIENTS_PER_SHARD = 8
+ZIPF_RATE_RPS = 1_200_000.0    # aggregate; ~comfortable for 4 uniform shards
+
+
+def _cfg() -> ConsensusConfig:
+    # the *fixed per-shard config* of the scaling axis: batched+pipelined
+    # fast path, small window so checkpoints exercise the shared pools
+    return ConsensusConfig(t=16, window=32, max_batch=8, pipeline_depth=8,
+                           view_timeout_us=40_000.0)
+
+
+def _set_op(i: int, key: bytes):
+    return ("set", key, b"v%d" % i)
+
+
+def _scale_point(k: int) -> dict:
+    spec = ScenarioSpec(
+        apps=[], n_pools=N_POOLS, seed=0,
+        services=[ServiceSpec(
+            name="kv", n_shards=k, cfg=_cfg(),
+            workload=Workload(kind="closed", duration_us=DURATION_US,
+                              n_clients=CLIENTS_PER_SHARD * k,
+                              keyspace=KEYSPACE, zipf_theta=0.0, key_seed=7,
+                              payload_fn=_set_op))])
+    res = run_scenario(spec)
+    ar = res.apps["kv"]
+    pcts = percentiles(ar.latencies)
+    return {"n_shards": k, "completed": ar.completed,
+            "tput_kops": ar.completed / DURATION_US * 1e3,
+            "p50_us": pcts["p50"], "p99_us": pcts["p99"],
+            "events": res.events_processed}
+
+
+def _zipf_point(theta: float) -> dict:
+    spec = ScenarioSpec(
+        apps=[], n_pools=N_POOLS, seed=0,
+        services=[ServiceSpec(
+            name="kv", n_shards=KNEE_K, cfg=_cfg(),
+            workload=Workload(kind="open",
+                              rate_rps=ZIPF_RATE_RPS / KNEE_K,
+                              duration_us=DURATION_US, n_clients=KNEE_K,
+                              keyspace=KEYSPACE, zipf_theta=theta,
+                              key_seed=7, seed=40,
+                              payload_fn=_set_op,
+                              timeout_us=600_000_000.0))])
+    res = run_scenario(spec)
+    ar = res.apps["kv"]
+    pcts = percentiles(ar.latencies)
+    return {"theta": theta, "completed": ar.completed,
+            "p50_us": pcts["p50"], "p99_us": pcts["p99"]}
+
+
+def _cross_shard_point(n_tx: int = 200) -> dict:
+    """Commit latency of 2-shard MSETs vs single-shard, plus aborts under
+    contention (all transactions fight over one small key set)."""
+    from repro.core.substrate import Substrate
+    from repro.service import ShardedService
+
+    sub = Substrate(f_m=1, n_pools=N_POOLS, seed=3)
+    svc = ShardedService.attach(sub, n_shards=2, cfg=_cfg())
+    cl = svc.new_client()
+    keys = [b"x%03d" % i for i in range(64)]
+    s0 = [k for k in keys if svc.router.shard_of(k) == 0]
+    s1 = [k for k in keys if svc.router.shard_of(k) == 1]
+
+    single, cross, aborts = [], [], 0
+    for i in range(n_tx):
+        pairs_1 = [(s0[i % len(s0)], b"a%d" % i),
+                   (s0[(i + 1) % len(s0)], b"b%d" % i)]
+        r, lat = svc.run_op(cl, ("mset", pairs_1))
+        assert r == b"OK", r
+        single.append(lat)
+        pairs_2 = [(s0[i % 4], b"c%d" % i), (s1[i % 4], b"d%d" % i)]
+        r, lat = svc.run_op(cl, ("mset", pairs_2), timeout=2_000_000.0)
+        if r == b"ABORTED":
+            aborts += 1
+        else:
+            assert r == b"OK", r
+            cross.append(lat)
+    return {"n_tx": n_tx, "aborts": aborts,
+            "single_shard_p50_us": percentiles(single)["p50"],
+            "cross_shard_p50_us": percentiles(cross)["p50"],
+            "cross_shard_p99_us": percentiles(cross)["p99"]}
+
+
+def run(scale_sweep=SCALE_SWEEP, thetas=THETAS) -> dict:
+    tune_runtime()
+    out: dict = {"scaling": {}, "zipf": {}}
+
+    for k in scale_sweep:
+        row = _scale_point(k)
+        out["scaling"][str(k)] = row
+        emit(f"sharded.K{k}.tput_kops", row["tput_kops"],
+             f"p50={row['p50_us']:.1f}us_p99={row['p99_us']:.1f}us")
+    lo = out["scaling"].get("1")
+    hi = out["scaling"].get(str(max(scale_sweep)))
+    if lo and hi:
+        speedup = hi["tput_kops"] / max(lo["tput_kops"], 1e-9)
+        out["scaling_speedup"] = speedup
+        emit("sharded.scaling.speedup", speedup,
+             f"K=1:{lo['tput_kops']:.0f}kops_K={max(scale_sweep)}:"
+             f"{hi['tput_kops']:.0f}kops")
+        if max(scale_sweep) >= 4:
+            assert speedup >= 3.0, (
+                f"aggregate throughput scaled only {speedup:.2f}x from K=1 "
+                f"to K={max(scale_sweep)} at fixed per-shard config")
+
+    for theta in thetas:
+        row = _zipf_point(theta)
+        out["zipf"][f"{theta:.1f}"] = row
+        emit(f"sharded.zipf{theta:.1f}.p99_us", row["p99_us"],
+             f"p50={row['p50_us']:.1f}us")
+    base = out["zipf"].get("0.0")
+    worst = out["zipf"].get(f"{max(thetas):.1f}")
+    if base and worst:
+        knee = worst["p99_us"] / max(base["p99_us"], 1e-9)
+        out["zipf_knee_p99_ratio"] = knee
+        emit("sharded.zipf.knee_p99_ratio", knee,
+             f"uniform={base['p99_us']:.1f}us_theta{max(thetas):.1f}="
+             f"{worst['p99_us']:.1f}us")
+        # the knee must be *visible*: skew concentrates load on the hot
+        # shard and its queueing shows up in the tail
+        assert knee >= 2.0, (
+            f"no hot-shard knee: p99 grew only {knee:.2f}x under "
+            f"Zipf theta={max(thetas)}")
+
+    out["cross_shard"] = _cross_shard_point()
+    cs = out["cross_shard"]
+    emit("sharded.cross_shard.p50_us", cs["cross_shard_p50_us"],
+         f"single_shard={cs['single_shard_p50_us']:.1f}us_"
+         f"aborts={cs['aborts']}/{cs['n_tx']}")
+    return out
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    run(scale_sweep=SMOKE_SCALE_SWEEP if smoke else SCALE_SWEEP,
+        thetas=SMOKE_THETAS if smoke else THETAS)
+    print("sharded: scaling + knee + cross-shard checks passed")

@@ -5,13 +5,39 @@ Request wire format (binary, matching the paper's 16 B keys / 32 B values):
     b"S" + klen(1) + key + value -> SET
     b"M" + n(1) + n × (klen(1) + key + vlen(1) + value) -> MSET (multi-put)
 Responses: value bytes (b"" on miss) or b"OK".
+
+Every length field is one byte, so the encoders *raise* on anything that
+cannot be framed (``>255`` pairs, keys or values) instead of silently
+truncating, and :meth:`KVStoreApp.apply` answers a deterministic ``b"ERR"``
+on any payload whose declared lengths disagree with its actual bytes — a
+malformed request must never mis-parse into a different (but valid-looking)
+operation, because every honest replica must produce the *same* reply.
+
+:class:`ShardKVApp` extends the store with the participant/coordinator
+state of cross-shard two-phase commit (``repro/service/``): PREPARE locks
+keys and records a pending intent, DECIDE records the transaction outcome
+exactly once on the coordinator shard's log, FINISH applies-or-discards the
+intent.  Each of those is an ordinary consensus request — *each 2PC phase
+is itself a BFT-committed slot* (see DESIGN_SHARDING.md):
+
+    b"P" + txid(8) + deadline_us(<Q) + coord(<H) + n(1) + pairs -> TPREP
+    b"D" + txid(8) + outcome(1: C|A)                            -> TDECIDE
+    b"F" + txid(8) + outcome(1: C|A)                            -> TFINISH
+    b"O" + txid(8)                                              -> outcome?
 """
 
 from __future__ import annotations
 
+import struct
 from typing import Dict, List, Tuple
 
 from repro.core.consensus import App
+
+#: one-byte length fields frame every key/value/pair-count on the wire
+MAX_LEN = 255
+
+VOTE_OK = b"VOTE_OK"
+VOTE_CONFLICT = b"VOTE_CONFLICT"
 
 
 def get_req(key: bytes) -> bytes:
@@ -19,16 +45,57 @@ def get_req(key: bytes) -> bytes:
 
 
 def set_req(key: bytes, value: bytes) -> bytes:
+    if len(key) > MAX_LEN:
+        raise ValueError(f"key of {len(key)} B does not fit the 1-byte "
+                         f"length field (max {MAX_LEN})")
     return b"S" + bytes([len(key)]) + key + value
 
 
 def mset_req(pairs: List[Tuple[bytes, bytes]]) -> bytes:
     """One request carrying several puts — application-level batching that
     composes with the consensus layer's slot batching."""
-    out = b"M" + bytes([len(pairs)])
+    return b"M" + _encode_pairs(pairs)
+
+
+def _encode_pairs(pairs: List[Tuple[bytes, bytes]]) -> bytes:
+    if len(pairs) > MAX_LEN:
+        raise ValueError(f"{len(pairs)} pairs do not fit the 1-byte count "
+                         f"field (max {MAX_LEN})")
+    out = bytes([len(pairs)])
     for k, v in pairs:
+        if len(k) > MAX_LEN or len(v) > MAX_LEN:
+            raise ValueError(f"key/value of {len(k)}/{len(v)} B does not "
+                             f"fit the 1-byte length field (max {MAX_LEN})")
         out += bytes([len(k)]) + k + bytes([len(v)]) + v
     return out
+
+
+def _decode_pairs(req: bytes, off: int):
+    """Parse ``n(1) + n × (klen+key+vlen+value)`` fully before anything is
+    applied; returns ``None`` on any length mismatch (deterministic ERR at
+    the caller) so a truncated payload can never half-apply."""
+    if off >= len(req):
+        return None
+    n = req[off]
+    off += 1
+    pairs = []
+    for _ in range(n):
+        if off >= len(req):
+            return None
+        klen = req[off]
+        key = req[off + 1:off + 1 + klen]
+        off += 1 + klen
+        if len(key) != klen or off >= len(req):
+            return None
+        vlen = req[off]
+        value = req[off + 1:off + 1 + vlen]
+        off += 1 + vlen
+        if len(value) != vlen:
+            return None
+        pairs.append((key, value))
+    if off != len(req):
+        return None
+    return pairs
 
 
 class KVStoreApp(App):
@@ -40,34 +107,20 @@ class KVStoreApp(App):
         if op == b"G":
             return self.store.get(req[1:], b"")
         if op == b"S":
+            if len(req) < 2:
+                return b"ERR"
             klen = req[1]
             key = req[2:2 + klen]
+            if len(key) != klen:
+                return b"ERR"   # declared length overruns the payload
             value = req[2 + klen:]
             self.store[key] = value
             return b"OK"
         if op == b"M":
             # parse the whole payload before touching the store: a
             # malformed/truncated request is rejected atomically
-            if len(req) < 2:
-                return b"ERR"
-            n = req[1]
-            off = 2
-            pairs = []
-            for _ in range(n):
-                if off >= len(req):
-                    return b"ERR"
-                klen = req[off]
-                key = req[off + 1:off + 1 + klen]
-                off += 1 + klen
-                if len(key) != klen or off >= len(req):
-                    return b"ERR"
-                vlen = req[off]
-                value = req[off + 1:off + 1 + vlen]
-                off += 1 + vlen
-                if len(value) != vlen:
-                    return b"ERR"
-                pairs.append((key, value))
-            if off != len(req):
+            pairs = _decode_pairs(req, 1)
+            if pairs is None:
                 return b"ERR"
             for key, value in pairs:
                 self.store[key] = value
@@ -79,3 +132,185 @@ class KVStoreApp(App):
 
     def adopt(self, snap) -> None:
         self.store = dict(snap)
+
+
+# --------------------------------------------------------------------------
+# Sharded-service participant: 2PC state behind the same App interface
+# --------------------------------------------------------------------------
+_TPREP_HDR = struct.Struct("<QH")   # deadline_us, coordinator shard index
+
+
+def tprep_req(txid: bytes, deadline_us: float, coord_shard: int,
+              pairs: List[Tuple[bytes, bytes]]) -> bytes:
+    """PREPARE this shard's slice of a cross-shard transaction: lock the
+    keys, record the intent, vote.  ``deadline_us`` (absolute sim time) is
+    consumed by the *replica-layer* recovery timers, never by apply()."""
+    assert len(txid) == 8
+    return (b"P" + txid + _TPREP_HDR.pack(int(deadline_us), coord_shard) +
+            _encode_pairs(pairs))
+
+
+def tdecide_req(txid: bytes, outcome: bytes) -> bytes:
+    """Record the transaction outcome on the coordinator shard (exactly
+    once: the first DECIDE in its log wins; later ones read it back)."""
+    assert outcome in (b"C", b"A") and len(txid) == 8
+    return b"D" + txid + outcome
+
+
+def tfinish_req(txid: bytes, outcome: bytes) -> bytes:
+    """Apply (C) or discard (A) the pending intent and release its locks."""
+    assert outcome in (b"C", b"A") and len(txid) == 8
+    return b"F" + txid + outcome
+
+
+def toutcome_req(txid: bytes) -> bytes:
+    """Read the recorded outcome (b"OUT"+o, or b"NONE")."""
+    assert len(txid) == 8
+    return b"O" + txid
+
+
+def parse_tprep(req: bytes):
+    """(txid, deadline_us, coord_shard, pairs) of a TPREP, or None."""
+    if req[:1] != b"P" or len(req) < 9 + _TPREP_HDR.size:
+        return None
+    txid = req[1:9]
+    deadline, coord = _TPREP_HDR.unpack_from(req, 9)
+    pairs = _decode_pairs(req, 9 + _TPREP_HDR.size)
+    if pairs is None:
+        return None
+    return txid, float(deadline), coord, pairs
+
+
+class ShardKVApp(KVStoreApp):
+    """One shard of the partitioned keyspace: the plain kvstore plus the
+    replicated 2PC state of in-flight cross-shard transactions.
+
+    Everything here is deterministic state-machine logic — votes, outcome
+    records and lock transitions are all products of the shard's consensus
+    log, so 2f+1 replicas hold identical 2PC state at identical log
+    positions.  GETs return only *committed* values: a pending intent lives
+    outside ``store`` until its FINISH(C) executes.
+    """
+
+    def __init__(self) -> None:
+        super().__init__()
+        #: key -> txid holding its write lock
+        self.locks: Dict[bytes, bytes] = {}
+        #: txid -> (deadline_us, coord_shard, pairs) awaiting the outcome
+        self.pending: Dict[bytes, Tuple[float, int, tuple]] = {}
+        #: txid -> vote this shard committed (idempotent re-PREPARE)
+        self.votes: Dict[bytes, bytes] = {}
+        #: coordinator role: txid -> recorded outcome (b"C" | b"A")
+        self.outcomes: Dict[bytes, bytes] = {}
+        #: txid -> outcome applied at this shard (idempotent re-FINISH)
+        self.finished: Dict[bytes, bytes] = {}
+
+    # ------------------------------------------------------------- apply
+    def apply(self, req: bytes) -> bytes:
+        op = req[:1]
+        if op == b"P":
+            return self._tprep(req)
+        if op == b"D":
+            return self._tdecide(req)
+        if op == b"F":
+            return self._tfinish(req)
+        if op == b"O":
+            if len(req) != 9:
+                return b"ERR"
+            out = self.outcomes.get(req[1:9])
+            return b"NONE" if out is None else b"OUT" + out
+        if op == b"S" or op == b"M":
+            # single-shard writes respect transaction locks: a locked key
+            # bounces (deterministically) until the transaction finishes,
+            # so a cross-shard MSET cannot be half-overwritten mid-flight
+            return self._locked_write(req)
+        return super().apply(req)
+
+    def _locked_write(self, req: bytes) -> bytes:
+        if req[:1] == b"S":
+            if len(req) < 2:
+                return b"ERR"
+            klen = req[1]
+            key = req[2:2 + klen]
+            if len(key) != klen:
+                return b"ERR"
+            if key in self.locks:
+                return b"LOCKED"
+            return super().apply(req)
+        pairs = _decode_pairs(req, 1)
+        if pairs is None:
+            return b"ERR"
+        if any(k in self.locks for k, _v in pairs):
+            return b"LOCKED"
+        return super().apply(req)
+
+    def _tprep(self, req: bytes) -> bytes:
+        parsed = parse_tprep(req)
+        if parsed is None:
+            return b"ERR"
+        txid, deadline, coord, pairs = parsed
+        prior = self.votes.get(txid)
+        if prior is not None:
+            return prior                       # idempotent re-PREPARE
+        if self.finished.get(txid) is not None:
+            return VOTE_CONFLICT               # already finished (aborted)
+        if any(self.locks.get(k, txid) != txid for k, _v in pairs):
+            self.votes[txid] = VOTE_CONFLICT   # a losing vote never locks
+            return VOTE_CONFLICT
+        for k, _v in pairs:
+            self.locks[k] = txid
+        self.pending[txid] = (deadline, coord, tuple(pairs))
+        self.votes[txid] = VOTE_OK
+        return VOTE_OK
+
+    def _tdecide(self, req: bytes) -> bytes:
+        if len(req) != 10 or req[9:10] not in (b"C", b"A"):
+            return b"ERR"
+        txid, proposed = req[1:9], req[9:10]
+        out = self.outcomes.get(txid)
+        if out is None:
+            # first DECIDE in the coordinator shard's log wins — the log's
+            # total order is what makes the outcome unique and replicated
+            out = self.outcomes[txid] = proposed
+        return b"OUT" + out
+
+    def _tfinish(self, req: bytes) -> bytes:
+        if len(req) != 10 or req[9:10] not in (b"C", b"A"):
+            return b"ERR"
+        txid, outcome = req[1:9], req[9:10]
+        prior = self.finished.get(txid)
+        if prior is not None:
+            return b"OK" if prior == outcome else b"ERR"
+        entry = self.pending.pop(txid, None)
+        if entry is None:
+            # FINISH without a live intent: record the outcome so a late
+            # PREPARE replay cannot resurrect the transaction
+            self.finished[txid] = outcome
+            return b"OK"
+        _deadline, _coord, pairs = entry
+        if outcome == b"C":
+            for k, v in pairs:
+                self.store[k] = v
+        for k, _v in pairs:
+            if self.locks.get(k) == txid:
+                del self.locks[k]
+        self.finished[txid] = outcome
+        return b"OK"
+
+    # --------------------------------------------------------- snapshots
+    def snapshot(self):
+        return (tuple(sorted(self.store.items())),
+                tuple(sorted(self.locks.items())),
+                tuple(sorted(self.pending.items())),
+                tuple(sorted(self.votes.items())),
+                tuple(sorted(self.outcomes.items())),
+                tuple(sorted(self.finished.items())))
+
+    def adopt(self, snap) -> None:
+        store, locks, pending, votes, outcomes, finished = snap
+        self.store = dict(store)
+        self.locks = dict(locks)
+        self.pending = dict(pending)
+        self.votes = dict(votes)
+        self.outcomes = dict(outcomes)
+        self.finished = dict(finished)

@@ -357,6 +357,12 @@ class UbftReplica(Node):
 
         # decided callback hooks (runtime integration)
         self.on_decide_hooks: List[Callable[[int, tuple], None]] = []
+        # executed callback hooks (service integration): fired after the
+        # app applied a request, with ``(slot, rid, payload, result)`` —
+        # the sharded-service layer watches executed 2PC PREPAREs here to
+        # arm its presumed-abort recovery timers
+        self.on_execute_hooks: List[
+            Callable[[int, tuple, bytes, bytes], None]] = []
 
         self._progress_timer_armed = False
 
@@ -467,6 +473,36 @@ class UbftReplica(Node):
         self.proposed_rids.add(rid)
         self.propose_queue.append(req)
         self._drain_proposals()
+
+    # ------------------------------------------------------------------
+    # Service-level requests (no client, applied to the app, no reply)
+    # ------------------------------------------------------------------
+    def propose_internal(self, rid: tuple, payload: bytes) -> None:
+        """Route an internally-originated request into the consensus hot
+        path: ``rid`` must be a ``("svc", ...)`` tuple, deterministic
+        across replicas, so concurrent submissions from every replica
+        dedupe into one slot.  The decided request is applied to the app
+        like a client request (unlike the no-op ⊥/MEMBERSHIP class) but
+        sends no reply — the service layer built on top (cross-shard 2PC
+        recovery) observes execution via ``on_execute_hooks``.
+
+        Mirrors ``propose_membership``'s enqueue path: the request rides
+        the normal echo/propose machinery, trips the same progress timer
+        (a leader that refuses to propose it loses its view), and is
+        re-routed across view changes like any pending request."""
+        assert isinstance(rid, tuple) and rid and rid[0] == "svc", \
+            "service-level rids are ('svc', ...) tuples"
+        if self.joining:
+            return  # a non-voting joiner neither echoes nor proposes
+        if rid in self.decided_rids or rid in self.executed_rids:
+            return
+        if rid not in self.pending_req:
+            self.pending_req[rid] = (rid, "", payload)
+        if self.is_leader():
+            self._note_echo(rid, self.pid)
+        else:
+            self.send(self.leader(), "ECHO", (rid,))
+        self._arm_progress_timer()
 
     # ==================================================================
     # Propose (Alg. 2 lines 14-16) — batched + pipelined
@@ -658,6 +694,15 @@ class UbftReplica(Node):
         if len(batch) > 1 and total > self.cfg.max_batch_bytes:
             return None
         return batch
+
+    @staticmethod
+    def _needs_execution(r: tuple) -> bool:
+        """A request whose execution has effects worth re-proposing across
+        a view change: any client request, plus the service-level
+        ``("svc", ...)`` class (⊥ fillers and MEMBERSHIP markers are not —
+        MEMBERSHIP is re-announced by the control plane's survivors)."""
+        return r[1] != "" or (isinstance(r[0], tuple) and bool(r[0]) and
+                              r[0][0] == "svc")
 
     def _must_propose_ok(self, slot: int, req: Any, new_view: Any) -> bool:
         must = self._must_propose(slot, new_view)
@@ -889,6 +934,20 @@ class UbftReplica(Node):
                     # the epoch bump at the same point of its execution
                     # order — the switch is atomic across the group
                     self._apply_membership(rid[1], rid[2], rid[3], s)
+                if (client == "" and isinstance(rid, tuple) and rid and
+                        rid[0] == "svc" and rid not in self.executed_rids):
+                    # service-level request (cross-shard 2PC recovery):
+                    # applied to the app like a client request, but with no
+                    # reply — there is no client waiting, the effect IS the
+                    # point (e.g. a presumed-abort FINISH releasing locks)
+                    result = self.app.apply(payload)
+                    self.executed_rids.add(rid)
+                    results.append(result)
+                    self.pending_req.pop(rid, None)
+                    self.echoes.pop(rid, None)
+                    for hook in self.on_execute_hooks:
+                        hook(s, rid, payload, result)
+                    continue
                 if client == "" or rid in self.executed_rids:
                     # no-op / duplicate: does not touch the app and sends
                     # no reply (a duplicate's real reply came from the slot
@@ -905,6 +964,8 @@ class UbftReplica(Node):
                 self.echoes.pop(rid, None)
                 if client in self.sim.processes:
                     self.send(client, "REP", (rid, result))
+                for hook in self.on_execute_hooks:
+                    hook(s, rid, payload, result)
             self.results[s] = tuple(results)
             self.exec_upto = s
         self._maybe_checkpoint_round()
@@ -1529,7 +1590,8 @@ class UbftReplica(Node):
             if must is not None:
                 req = must
             elif (prior is not None and s > self.exec_upto and
-                  any(r[1] != "" and r[0] not in self.executed_rids
+                  any(self._needs_execution(r) and
+                      r[0] not in self.executed_rids
                       for r in prior[1])):
                 req = prior[1]              # re-propose the in-flight batch
             elif s <= max_committed or s <= self.exec_upto:

@@ -255,6 +255,17 @@ class Cluster:
         self.replacements.append((self.sim.now, old_pid, new_pid))
         return joiner
 
+    def submit_internal(self, rid: tuple, payload: bytes) -> None:
+        """Route a service-level request (``("svc", ...)`` rid, applied to
+        the app, no reply) into this group's consensus from the control
+        plane: every live replica proposes it, the deterministic rid
+        dedupes the submissions into one slot.  This is the cluster-side
+        hook behind ``repro.service``'s cross-shard 2PC recovery (a single
+        replica uses ``UbftReplica.propose_internal`` directly)."""
+        for r in self.replicas:
+            if not r.crashed and not r.joining:
+                r.propose_internal(rid, payload)
+
     def memory_by_pool(self) -> Dict[str, int]:
         """This app's occupied disaggregated memory per shared pool
         (Table 2, split per application)."""

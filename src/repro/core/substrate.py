@@ -75,6 +75,9 @@ class Substrate:
             for i in range(n_pools)
         ]
         self.apps: Dict[str, AppRecord] = {}
+        #: sharded services (``repro.service.ShardedService``) by name —
+        #: each is a *set* of attached apps (``<name>/s<i>``) plus routing
+        self.services: Dict[str, Any] = {}
         self._owner_app: Dict[str, str] = {}
         #: (sim time, app, pool name, occupied bytes, budget) per overrun —
         #: the per-app fault surface for Table 2 budget violations

@@ -55,16 +55,30 @@ from repro.sim.net import NetParams
 @dataclass
 class Workload:
     """One app's load: closed-loop (count- or duration-bounded) or
-    open-loop Poisson arrivals."""
+    open-loop Poisson arrivals.
+
+    Key popularity: with ``keyspace > 0`` every request draws a key from a
+    seeded sampler — uniform when ``zipf_theta == 0``, Zipf(θ) otherwise
+    (rank-r key has weight 1/r^θ; the YCSB-style skew knob, θ≈0.99 being
+    the classic "hot-key" setting).  ``payload_fn`` is then called as
+    ``payload_fn(i, key)`` and turns the drawn key into the request — so
+    skewed-traffic sweeps are declarative rather than hand-rolled per
+    benchmark.  Key draws come from a dedicated RNG (``key_seed``), never
+    the simulator's, and are indexed by request number: request ``i``
+    always sees the same key regardless of interleaving.
+    """
     kind: str = "closed"               # "closed" | "open"
     n_requests: int = 0                # closed: total requests to complete
     duration_us: float = 0.0           # closed: window; open: arrival window
     rate_rps: float = 0.0              # open: Poisson rate per client (req/s)
     payload: bytes = b"x" * 32
-    payload_fn: Optional[Callable[[int], bytes]] = None
+    payload_fn: Optional[Callable[..., Any]] = None
     n_clients: int = 1
     seed: int = 0                      # open: arrival-process stream
     timeout_us: float = 60_000_000.0   # drain bound after the window closes
+    keyspace: int = 0                  # >0: draw a key per request
+    zipf_theta: float = 0.0            # 0 = uniform; >0 = Zipf skew
+    key_seed: int = 0                  # key-popularity stream
 
     def __post_init__(self):
         if self.kind not in ("closed", "open"):
@@ -81,8 +95,32 @@ class Workload:
         if self.kind == "open" and not (self.rate_rps > 0 and
                                         self.duration_us > 0):
             raise ValueError("open workload needs rate_rps and duration_us")
+        if self.keyspace and self.payload_fn is None:
+            raise ValueError("a keyed workload (keyspace > 0) needs a "
+                             "payload_fn(i, key) to build requests")
+        self._keys: List[bytes] = []
+        self._key_rng: Any = None
+        self._key_cdf: Any = None
 
-    def payload_for(self, i: int) -> bytes:
+    def key_for(self, i: int) -> bytes:
+        """The i-th request's key — lazily drawn, cached, index-stable."""
+        if self._key_rng is None:
+            self._key_rng = np.random.default_rng(self.key_seed)
+            if self.zipf_theta > 0.0:
+                w = 1.0 / np.arange(1, self.keyspace + 1) ** self.zipf_theta
+                self._key_cdf = np.cumsum(w / w.sum())
+        rng = self._key_rng
+        while len(self._keys) <= i:
+            if self._key_cdf is None:
+                idx = int(rng.integers(self.keyspace))
+            else:
+                idx = int(np.searchsorted(self._key_cdf, rng.random()))
+            self._keys.append(b"k%07d" % idx)
+        return self._keys[i]
+
+    def payload_for(self, i: int) -> Any:
+        if self.keyspace:
+            return self.payload_fn(i, self.key_for(i))
         return self.payload_fn(i) if self.payload_fn is not None \
             else self.payload
 
@@ -102,9 +140,30 @@ class AppSpec:
 
 
 @dataclass
+class ServiceSpec:
+    """One sharded service on the substrate: K uBFT groups
+    (``<name>/s<i>``, each an independent 2f+1 deployment of ``app``)
+    behind a :class:`~repro.service.router.ShardRouter`, driven by one
+    workload whose ``payload_fn`` returns service *ops* (``("get", k)`` /
+    ``("set", k, v)`` / ``("mset", pairs)``) instead of wire bytes —
+    typically a keyed workload (``keyspace``/``zipf_theta``) so the hot
+    shard emerges from the key distribution, not from hand-routing."""
+    name: str
+    n_shards: int
+    cfg: Optional[ConsensusConfig] = None
+    workload: Optional[Workload] = None
+    #: app factory per shard; None = repro.apps.kvstore.ShardKVApp
+    app: Optional[Callable[[], App]] = None
+    budget: int = POOL_MEMORY_BUDGET
+    tx_timeout_us: float = 20_000.0
+    pools: Any = None
+
+
+@dataclass
 class ScenarioSpec:
     """Topology + apps + workloads + faults, declaratively."""
     apps: List[AppSpec]
+    services: List[ServiceSpec] = field(default_factory=list)
     f_m: int = 1
     n_pools: int = 1
     seed: int = 0
@@ -282,6 +341,20 @@ def build_deployment(spec: ScenarioSpec
             kw["pools"] = a.pools
         clusters[a.name] = Cluster.attach(substrate, a.app, name=a.name,
                                           cfg=a.cfg, budget=a.budget, **kw)
+    for s in spec.services:
+        from repro.service import ShardedService  # avoid a static cycle
+        app = s.app
+        if app is None:
+            from repro.apps.kvstore import ShardKVApp
+            app = ShardKVApp
+        svc = ShardedService.attach(substrate, s.n_shards, name=s.name,
+                                    cfg=s.cfg, app=app, budget=s.budget,
+                                    tx_timeout_us=s.tx_timeout_us,
+                                    pools=s.pools)
+        # shard groups are ordinary attached apps: expose them under their
+        # full names so FaultInjector events can target "<svc>/s<i>/r<j>"
+        for i, shard in enumerate(svc.shards):
+            clusters[shard.name] = shard
     return substrate, clusters
 
 
@@ -305,6 +378,12 @@ def run_scenario(spec: ScenarioSpec) -> ScenarioResult:
     for a in spec.apps:
         if a.workload is not None:
             runs[a.name] = _WorkloadRun(clusters[a.name], a.workload)
+    for s in spec.services:
+        if s.workload is not None:
+            # a ShardedService quacks like a cluster to the driver (.sim,
+            # .new_client, client.request) — ops route through the shards
+            runs[s.name] = _WorkloadRun(substrate.services[s.name],
+                                        s.workload)
 
     # Phase 1: run out the longest load window (duration-bounded apps keep
     # injecting/refiring until their own t_end inside this window).
@@ -330,19 +409,30 @@ def run_scenario(spec: ScenarioSpec) -> ScenarioResult:
 
     usage = substrate.memory_by_app()
     overruns = substrate.audit_budgets(usage)
+
+    def mem_of(name: str) -> Dict[str, int]:
+        # a service's occupancy is the sum of its shard apps' (each shard
+        # is its own app "<svc>/s<i>" in the substrate's accounting)
+        svc = substrate.services.get(name)
+        if svc is None:
+            return dict(usage.get(name, {}))
+        agg: Dict[str, int] = {}
+        for shard in svc.shards:
+            for pool, nbytes in usage.get(shard.name, {}).items():
+                agg[pool] = agg.get(pool, 0) + nbytes
+        return agg
+
     apps = {
         name: AppResult(name=name, latencies=r.lats, issued=r.issued,
-                        completed=r.completed,
-                        memory_by_pool=dict(usage.get(name, {})))
+                        completed=r.completed, memory_by_pool=mem_of(name))
         for name, r in runs.items()
     }
-    # apps without a workload still get their memory accounting
-    for a in spec.apps:
-        if a.name not in apps:
-            apps[a.name] = AppResult(name=a.name, latencies=[], issued=0,
-                                     completed=0,
-                                     memory_by_pool=dict(
-                                         usage.get(a.name, {})))
+    # apps/services without a workload still get their memory accounting
+    for name in ([a.name for a in spec.apps] +
+                 [s.name for s in spec.services]):
+        if name not in apps:
+            apps[name] = AppResult(name=name, latencies=[], issued=0,
+                                   completed=0, memory_by_pool=mem_of(name))
     return ScenarioResult(substrate=substrate, clusters=clusters, apps=apps,
                           injector=injector, budget_overruns=overruns,
                           msgs_sent=substrate.net.msgs_sent,

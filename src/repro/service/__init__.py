@@ -1,0 +1,13 @@
+"""Sharded service plane: a fleet of uBFT groups over one substrate.
+
+:class:`~repro.service.router.ShardRouter` hash-partitions the keyspace,
+:class:`~repro.service.sharded.ShardedService` attaches K independent 2f+1
+groups to a shared :class:`~repro.core.substrate.Substrate` and runs
+cross-shard multi-key operations as two-phase commit where *each phase is
+itself a BFT-committed slot* (DESIGN_SHARDING.md).
+"""
+
+from repro.service.router import ShardRouter
+from repro.service.sharded import ServiceClient, ShardedService
+
+__all__ = ["ShardRouter", "ServiceClient", "ShardedService"]

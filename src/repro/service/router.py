@@ -1,0 +1,43 @@
+"""Deterministic key→shard routing for the sharded service plane.
+
+The routing function is ``crc32(key) % n_shards`` — a pure function of the
+key bytes and the shard count, so every client (and every replica running
+2PC recovery) maps a key to the same shard with no coordination and no
+routing table to replicate.
+
+Epoch-awareness: the router maps keys to *shard indices*, never to replica
+pids.  Replica pids are resolved live from each shard's
+:attr:`~repro.core.smr.Cluster.replica_pids` at send time, and clients
+created via :meth:`Cluster.new_client` have their destination list updated
+in place by :meth:`Cluster.replace_replica` — so a PR 5 membership epoch
+switch on any shard re-routes in-flight and future traffic without the
+router changing at all.  (Shard *split/merge* — changing ``n_shards`` live —
+is the remaining ROADMAP work and is out of scope here.)
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Dict, List, Tuple
+
+
+class ShardRouter:
+    """Stateless hash partitioner over ``n_shards`` uBFT groups."""
+
+    def __init__(self, n_shards: int):
+        if n_shards < 1:
+            raise ValueError("a service needs at least one shard")
+        self.n_shards = n_shards
+
+    def shard_of(self, key: bytes) -> int:
+        return zlib.crc32(key) % self.n_shards
+
+    def split(self, pairs: List[Tuple[bytes, bytes]]
+              ) -> Dict[int, List[Tuple[bytes, bytes]]]:
+        """Partition an MSET's pairs by destination shard (insertion order
+        within each shard preserved — last write per key wins, as in the
+        unsharded app)."""
+        by_shard: Dict[int, List[Tuple[bytes, bytes]]] = {}
+        for k, v in pairs:
+            by_shard.setdefault(self.shard_of(k), []).append((k, v))
+        return by_shard

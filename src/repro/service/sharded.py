@@ -1,0 +1,320 @@
+"""ShardedService: K independent uBFT groups as one partitioned kvstore.
+
+Scale-out for the service plane: one 2f+1 group caps out around 1 Mops, so
+the keyspace is hash-partitioned (:class:`~repro.service.router.ShardRouter`)
+across K groups attached to *one* shared substrate (``<name>/s0..s<K-1>``) —
+group count is a free variable on fixed infrastructure, exactly what the
+PR 4 substrate was built for.
+
+Cross-shard MSET runs as two-phase commit where **each phase is itself a
+BFT-committed slot** (DESIGN_SHARDING.md):
+
+* PREPARE — an ordinary consensus request per participant shard
+  (:func:`~repro.apps.kvstore.tprep_req`): the shard's replicated state
+  machine locks the keys, records the intent, and votes.  The vote is a
+  product of the shard's log, so all 2f+1 replicas agree on it.
+* DECIDE — one consensus request on the **coordinator shard** (the lowest
+  participating shard index): the first DECIDE in its totally-ordered log
+  fixes the outcome; every later DECIDE — including a recovery probe
+  proposing abort — reads that record back.  The outcome is therefore
+  unique and replicated *without any separate BFT coordinator group*.
+* FINISH — a consensus request per participant shard applying or
+  discarding the intent and releasing its locks.
+
+The *client* driving the phases is untrusted for safety (a client lying
+about the outcome could only tear its own transaction, which is
+indistinguishable from it issuing legal single-key SETs) but is relied on
+for progress — so every replica arms a **presumed-abort recovery timer**
+when it executes a PREPARE (:class:`_TxRecovery`): if the intent is still
+pending past its deadline, the replica itself sends DECIDE(abort) to the
+coordinator shard, collects f+1 matching replies (so the answer comes from
+the replicated record, not from any single — possibly Byzantine — replica),
+and routes the resulting FINISH into its own shard as a deterministic
+``("svc", ...)`` slot that all replicas' concurrent submissions dedupe
+into.  A transaction whose client vanished after a committed DECIDE is
+thus *finished forward*; one abandoned before DECIDE is aborted.
+"""
+
+from __future__ import annotations
+
+import struct
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.apps.kvstore import (VOTE_OK, ShardKVApp, get_req, mset_req,
+                                parse_tprep, set_req, tdecide_req,
+                                tfinish_req, tprep_req)
+from repro.core import crypto
+from repro.core.consensus import App, ConsensusConfig, UbftReplica
+from repro.core.registers import POOL_MEMORY_BUDGET
+from repro.core.smr import Cluster
+from repro.core.substrate import Substrate
+from repro.service.router import ShardRouter
+
+
+class ServiceClient:
+    """Routes operations to shards; runs cross-shard MSETs as 2PC.
+
+    Operations are structured tuples (the router needs the key *before*
+    the wire encoding picks a shard):
+
+    * ``("get", key)`` / ``("set", key, value)`` — routed to one shard
+    * ``("mset", pairs)`` — single-shard: one plain MSET slot;
+      cross-shard: PREPARE / DECIDE / FINISH as described in the module
+      docstring.  Completes ``cb(b"OK" | b"ABORTED", latency)``.
+
+    One underlying uBFT :class:`~repro.core.smr.Client` per shard, created
+    via ``Cluster.new_client`` — so a membership epoch switch on any shard
+    (``replace_replica``) updates this client's destination pids in place
+    and nothing here ever caches a replica address.
+    """
+
+    #: test knobs simulating a coordinator-client crash mid-2PC: drop the
+    #: protocol on the floor after PREPARE (before DECIDE) / after DECIDE
+    #: (before FINISH) — recovery must then abort / finish-forward
+    drop_decide = False
+    drop_finish = False
+
+    def __init__(self, service: "ShardedService", pid: str):
+        self.service = service
+        self.pid = pid
+        self.sim = service.sim
+        self.router = service.router
+        self.shard_clients = [c.new_client() for c in service.shards]
+        self._txseq = 0
+        self._tx_salt = zlib.crc32(pid.encode())
+        self.latencies: List[float] = []
+
+    # ------------------------------------------------------------ routing
+    def request(self, op: tuple,
+                cb: Optional[Callable[[bytes, float], None]] = None) -> None:
+        kind = op[0]
+        if kind == "get":
+            return self._one(self.router.shard_of(op[1]), get_req(op[1]), cb)
+        if kind == "set":
+            return self._one(self.router.shard_of(op[1]),
+                             set_req(op[1], op[2]), cb)
+        if kind == "mset":
+            by_shard = self.router.split(list(op[1]))
+            if len(by_shard) == 1:
+                ((s, pairs),) = by_shard.items()
+                return self._one(s, mset_req(pairs), cb)
+            return self._mset_2pc(by_shard, cb)
+        raise ValueError(f"unknown service op {kind!r}")
+
+    def _one(self, shard: int, payload: bytes,
+             cb: Optional[Callable[[bytes, float], None]]) -> None:
+        def done(result: bytes, lat: float) -> None:
+            self.latencies.append(lat)
+            if cb is not None:
+                cb(result, lat)
+        self.shard_clients[shard].request(payload, done)
+
+    # -------------------------------------------------------- 2PC phases
+    def _mset_2pc(self, by_shard: Dict[int, list],
+                  cb: Optional[Callable[[bytes, float], None]]) -> None:
+        t0 = self.sim.now
+        txid = struct.pack("<II", self._tx_salt, self._txseq)
+        self._txseq += 1
+        shards = sorted(by_shard)
+        coord = shards[0]
+        deadline = t0 + self.service.tx_timeout_us
+        votes: Dict[int, bytes] = {}
+
+        def vote(s: int):
+            def done(result: bytes, _lat: float) -> None:
+                votes[s] = result
+                if len(votes) == len(shards):
+                    self._decide(txid, shards, coord, votes, cb, t0)
+            return done
+
+        for s in shards:
+            self.shard_clients[s].request(
+                tprep_req(txid, deadline, coord, by_shard[s]), vote(s))
+
+    def _decide(self, txid: bytes, shards: List[int], coord: int,
+                votes: Dict[int, bytes],
+                cb: Optional[Callable[[bytes, float], None]],
+                t0: float) -> None:
+        if self.drop_decide:
+            return      # "crashed" between PREPARE and DECIDE
+        proposed = b"C" if all(v == VOTE_OK for v in votes.values()) else b"A"
+
+        def decided(result: bytes, _lat: float) -> None:
+            # the reply's recorded outcome is authoritative — a recovery
+            # timer may have beaten a slow commit DECIDE to the log
+            outcome = result[-1:] if result[:3] == b"OUT" else b"A"
+            self._finish(txid, shards, outcome, cb, t0)
+
+        self.shard_clients[coord].request(tdecide_req(txid, proposed),
+                                          decided)
+
+    def _finish(self, txid: bytes, shards: List[int], outcome: bytes,
+                cb: Optional[Callable[[bytes, float], None]],
+                t0: float) -> None:
+        if self.drop_finish:
+            return      # "crashed" between DECIDE and FINISH
+        left = {"n": len(shards)}
+
+        def done(_result: bytes, _lat: float) -> None:
+            left["n"] -= 1
+            if left["n"] == 0:
+                lat = self.sim.now - t0
+                self.latencies.append(lat)
+                if cb is not None:
+                    cb(b"OK" if outcome == b"C" else b"ABORTED", lat)
+
+        for s in shards:
+            self.shard_clients[s].request(tfinish_req(txid, outcome), done)
+
+
+class _TxRecovery:
+    """Per-replica presumed-abort recovery for abandoned transactions.
+
+    Watches the replica's own execution stream (``on_execute_hooks``): a
+    PREPARE that voted OK arms a timer at the transaction deadline (plus a
+    per-replica stagger so recoverers probe in sequence rather than in a
+    thundering herd).  If the intent is still pending when the timer fires,
+    the replica acts as a client of the coordinator shard: it sends
+    DECIDE(abort) — which the coordinator's log either adopts (first
+    DECIDE wins → abort) or answers with the already-recorded outcome
+    (→ finish forward) — waits for f+1 matching replies, then proposes
+    FINISH into its own shard under the deterministic rid
+    ``("svc", "tfin", txid, outcome)`` so concurrent recoverers collapse
+    into one slot.  Probes re-arm until the intent resolves, so a
+    coordinator-shard view change mid-probe only delays recovery.
+    """
+
+    def __init__(self, service: "ShardedService", shard_idx: int,
+                 replica: UbftReplica, stagger_us: float):
+        self.service = service
+        self.shard_idx = shard_idx
+        self.replica = replica
+        self.stagger_us = stagger_us
+        self._seq = 0
+        self._outstanding: Dict[tuple, dict] = {}
+        replica.on_execute_hooks.append(self._on_execute)
+        replica.handle("REP", self._on_rep)   # replicas never receive REP
+
+    def _on_execute(self, _slot: int, _rid: tuple, payload: bytes,
+                    result: bytes) -> None:
+        if payload[:1] != b"P" or result != VOTE_OK:
+            return
+        parsed = parse_tprep(payload)
+        if parsed is None:
+            return
+        txid, deadline, coord, _pairs = parsed
+        delay = max(deadline - self.replica.sim.now, 0.0) + self.stagger_us
+        self.replica.timer(delay, lambda: self._probe(txid, coord))
+
+    def _probe(self, txid: bytes, coord: int) -> None:
+        r = self.replica
+        if r.crashed or r.joining or txid not in r.app.pending:
+            return
+        if not 0 <= coord < len(self.service.shards):
+            return      # malformed coordinator index: nothing to consult
+        rid = (r.pid, "tx", self._seq)
+        self._seq += 1
+        coord_cluster = self.service.shards[coord]
+        self._outstanding[rid] = {
+            "txid": txid, "replies": {},
+            "need": coord_cluster.replicas[0].f + 1, "done": False,
+        }
+        body = (rid, tdecide_req(txid, b"A"))
+        size = crypto.wire_size_shallow(body) + 19
+        for pid in coord_cluster.replica_pids:   # resolved live: epoch-aware
+            r.send(pid, "REQ", body, size=size)
+        # re-probe until resolved (coordinator shard may be mid-view-change)
+        r.timer(self.service.tx_timeout_us, lambda: self._probe(txid, coord))
+
+    def _on_rep(self, src: str, body: Any) -> None:
+        rid, result = body
+        st = self._outstanding.get(rid)
+        if st is None or st["done"]:
+            return
+        who = st["replies"].setdefault(bytes(result), set())
+        who.add(src)
+        if len(who) < st["need"]:
+            return
+        st["done"] = True
+        del self._outstanding[rid]
+        if result[:3] != b"OUT":
+            return      # coordinator shard answered ERR: leave to re-probe
+        outcome, txid = result[-1:], st["txid"]
+        self.replica.propose_internal(("svc", "tfin", txid, outcome),
+                                      tfinish_req(txid, outcome))
+
+
+class ShardedService:
+    """K uBFT groups over one substrate, presented as one keyspace."""
+
+    def __init__(self, substrate: Substrate, name: str,
+                 shards: List[Cluster], router: ShardRouter,
+                 tx_timeout_us: float):
+        self.substrate = substrate
+        self.name = name
+        self.shards = shards
+        self.router = router
+        self.tx_timeout_us = tx_timeout_us
+        self.clients: List[ServiceClient] = []
+
+    @classmethod
+    def attach(cls, substrate: Substrate, n_shards: int, name: str = "kv",
+               cfg: Optional[Any] = None,
+               app: Callable[[], App] = ShardKVApp,
+               budget: int = POOL_MEMORY_BUDGET,
+               tx_timeout_us: float = 20_000.0,
+               pools: Optional[Any] = None) -> "ShardedService":
+        """Attach ``n_shards`` groups (``<name>/s<i>``) to the substrate.
+
+        ``cfg`` is one :class:`ConsensusConfig` shared by every shard
+        (fixed per-shard config — the benchmark's scaling axis) or a
+        callable ``cfg(i)`` for heterogeneous shards.  ``app`` must build
+        a 2PC-capable store (:class:`~repro.apps.kvstore.ShardKVApp` or a
+        subclass) when cross-shard MSETs will be issued.
+        """
+        if name in substrate.services:
+            raise ValueError(f"service {name!r} already attached")
+        router = ShardRouter(n_shards)
+        shards: List[Cluster] = []
+        for i in range(n_shards):
+            kw: Dict[str, Any] = {}
+            if pools is not None:
+                kw["pools"] = pools
+            shards.append(Cluster.attach(
+                substrate, app, name=f"{name}/s{i}",
+                cfg=(cfg(i) if callable(cfg) else cfg), budget=budget, **kw))
+        svc = cls(substrate, name, shards, router, tx_timeout_us)
+        for i, cluster in enumerate(shards):
+            for idx, r in enumerate(cluster.replicas):
+                _TxRecovery(svc, i, r, stagger_us=200.0 + 150.0 * idx)
+        substrate.services[name] = svc
+        return svc
+
+    # --------------------------------------------- Cluster-like interface
+    @property
+    def sim(self):
+        return self.substrate.sim
+
+    def new_client(self, pid: Optional[str] = None) -> ServiceClient:
+        if pid is None:
+            pid = f"{self.name}/c{len(self.clients)}"
+        c = ServiceClient(self, pid)
+        self.clients.append(c)
+        return c
+
+    def run_op(self, client: ServiceClient, op: tuple,
+               timeout: float = 1_000_000.0) -> Tuple[bytes, float]:
+        """Issue one operation and run the simulation to completion."""
+        box: dict = {}
+
+        def done(result: bytes, lat: float) -> None:
+            box["result"] = result
+            box["lat"] = lat
+
+        client.request(op, done)
+        ok = self.sim.run_until(lambda: "result" in box, timeout=timeout)
+        if not ok:
+            raise TimeoutError(f"service op {op[0]!r} did not complete "
+                               f"within {timeout} µs (t={self.sim.now})")
+        return box["result"], box["lat"]

@@ -271,6 +271,56 @@ def scenario_replica_replacement() -> dict:
     }
 
 
+def scenario_sharded_service() -> dict:
+    """Sharded service plane (ISSUE 6): two uBFT groups behind the
+    ShardRouter on one substrate, a Zipf-keyed workload mixing single-key
+    SETs with cross-shard 2PC MSETs, and a participant replica crashed and
+    recovered mid-run — gates the routing, the PREPARE/DECIDE/FINISH slot
+    protocol, the presumed-abort recovery timers, and the keyed-workload
+    sampler with one digest."""
+    import zlib
+
+    from repro.core.consensus import ConsensusConfig
+    from repro.scenario import (ScenarioSpec, ServiceSpec, Workload,
+                                run_scenario)
+    from repro.sim.faults import FaultSchedule
+
+    cfg = ConsensusConfig(t=16, window=16, slow_mode="always",
+                          ctb_fast_enabled=False, view_timeout_us=20_000.0)
+
+    def op(i, key):
+        if i % 3 == 2:
+            return ("mset", [(key, b"m%d" % i), (key + b"~", b"m%d" % i)])
+        return ("set", key, b"v%d" % i)
+
+    sched = (FaultSchedule()
+             .add(800.0, "crash", "kv/s1/r1")
+             .add(8_000.0, "recover", "kv/s1/r1"))
+    spec = ScenarioSpec(
+        apps=[], n_pools=2, seed=31, faults=sched, drain_us=50_000.0,
+        services=[ServiceSpec(
+            name="kv", n_shards=2, cfg=cfg, tx_timeout_us=40_000.0,
+            workload=Workload(kind="closed", n_requests=21, n_clients=2,
+                              keyspace=24, zipf_theta=0.9, key_seed=37,
+                              payload_fn=op, timeout_us=120_000_000.0))])
+    res = run_scenario(spec)
+    svc = res.substrate.services["kv"]
+    # per-shard committed-state fingerprint: the 2PC outcomes are part of
+    # the digest, not just the traffic shape
+    stores = [zlib.crc32(b"|".join(k + b"=" + v for k, v in
+                                   sorted(s.replicas[0].app.store.items())))
+              for s in svc.shards]
+    lats = res.apps["kv"].latencies
+    return {
+        "digest": _digest(lats, [res.msgs_sent, res.bytes_sent,
+                                 res.apps["kv"].issued] + stores),
+        "n": len(lats),
+        "store_crc": stores,
+        "msgs_sent": res.msgs_sent,
+        "bytes_sent": res.bytes_sent,
+    }
+
+
 SCENARIOS = {
     "throughput_mini": scenario_throughput_mini,
     "slow_path": scenario_slow_path,
@@ -278,6 +328,7 @@ SCENARIOS = {
     "faults_reconfig": scenario_faults_reconfig,
     "shared_substrate": scenario_shared_substrate,
     "replica_replacement": scenario_replica_replacement,
+    "sharded_service": scenario_sharded_service,
 }
 
 

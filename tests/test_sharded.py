@@ -1,0 +1,369 @@
+"""Sharded service plane: routing, wire-format hardening, Zipf workloads,
+and cross-shard 2PC atomicity — including under seeded faults.
+
+The atomicity invariant used throughout: each cross-shard MSET ``i`` writes
+the same value ``v_i`` to a *dedicated* pair of keys living on different
+shards.  After the run drains, a pair must be either fully absent (the
+transaction aborted before FINISH(C) — PREPARE never touches the store) or
+fully present with equal values.  One-sided presence is a torn transaction
+and is asserted against under every fault schedule.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.apps.kvstore import (VOTE_CONFLICT, VOTE_OK, KVStoreApp,
+                                ShardKVApp, mset_req, parse_tprep, set_req,
+                                tdecide_req, tfinish_req, tprep_req)
+from repro.core.consensus import ConsensusConfig
+from repro.core.substrate import Substrate
+from repro.scenario import ScenarioSpec, ServiceSpec, Workload, run_scenario
+from repro.service import ShardRouter, ShardedService
+from repro.sim.faults import FaultSchedule
+
+
+def _slow_cfg() -> ConsensusConfig:
+    return ConsensusConfig(t=16, window=16, slow_mode="always",
+                           ctb_fast_enabled=False, view_timeout_us=20_000.0)
+
+
+def _service(n_shards=2, seed=7, n_pools=1, cfg=None, **kw):
+    sub = Substrate(f_m=1, n_pools=n_pools, seed=seed)
+    svc = ShardedService.attach(sub, n_shards=n_shards,
+                                cfg=cfg or ConsensusConfig(f=1, f_m=1), **kw)
+    return sub, svc
+
+
+def _cross_pair(svc, tag: int):
+    """A (shard0-key, shard1-key) pair dedicated to transaction ``tag``."""
+    k0 = next(b"a%d.%d" % (tag, j) for j in range(64)
+              if svc.router.shard_of(b"a%d.%d" % (tag, j)) == 0)
+    k1 = next(b"b%d.%d" % (tag, j) for j in range(64)
+              if svc.router.shard_of(b"b%d.%d" % (tag, j)) == 1)
+    return k0, k1
+
+
+def _assert_not_torn(svc, cl, pairs_by_tag):
+    committed = 0
+    for tag, (k0, k1) in pairs_by_tag.items():
+        v0, _ = svc.run_op(cl, ("get", k0), timeout=5_000_000.0)
+        v1, _ = svc.run_op(cl, ("get", k1), timeout=5_000_000.0)
+        assert (v0, v1) in ((b"", b""), (b"t%d" % tag, b"t%d" % tag)), (
+            f"torn transaction {tag}: {v0!r} vs {v1!r}")
+        committed += v0 != b""
+    return committed
+
+
+def _assert_shard_agreement(svc):
+    """All live replicas of each shard converged to one app state."""
+    for shard in svc.shards:
+        snaps = {r.app.snapshot() for r in shard.replicas
+                 if not r.crashed and not r.joining}
+        assert len(snaps) == 1, f"{shard.name}: divergent replica state"
+
+
+# --------------------------------------------------------------------------
+# Router + wire format
+# --------------------------------------------------------------------------
+def test_router_is_deterministic_and_total():
+    r = ShardRouter(4)
+    keys = [b"k%d" % i for i in range(200)]
+    assert [r.shard_of(k) for k in keys] == [r.shard_of(k) for k in keys]
+    hit = {r.shard_of(k) for k in keys}
+    assert hit == {0, 1, 2, 3}
+    by_shard = r.split([(k, b"v") for k in keys])
+    assert sorted(k for ks in by_shard.values() for k, _ in ks) == sorted(keys)
+    with pytest.raises(ValueError):
+        ShardRouter(0)
+
+
+def test_wire_encoders_raise_instead_of_truncating():
+    with pytest.raises(ValueError):
+        set_req(b"k" * 256, b"v")
+    with pytest.raises(ValueError):
+        mset_req([(b"k%d" % i, b"v") for i in range(256)])
+    with pytest.raises(ValueError):
+        mset_req([(b"k", b"v" * 256)])
+    with pytest.raises(ValueError):
+        mset_req([(b"k" * 256, b"v")])
+    # the boundary itself is fine
+    assert set_req(b"k" * 255, b"v")[1] == 255
+    assert mset_req([(b"k", b"v")] * 255)[1] == 255
+
+
+def test_apply_rejects_malformed_lengths_deterministically():
+    app = KVStoreApp()
+    app.apply(set_req(b"good", b"val"))
+    # SET whose declared klen overruns the payload
+    assert app.apply(b"S" + bytes([40]) + b"short") == b"ERR"
+    # MSET truncated mid-pair, count overrun, and trailing garbage
+    good = mset_req([(b"m1", b"x"), (b"m2", b"y")])
+    assert app.apply(good[:-1]) == b"ERR"
+    assert app.apply(b"M" + bytes([3]) + good[2:]) == b"ERR"
+    assert app.apply(good + b"junk") == b"ERR"
+    # a rejected MSET must not have half-applied
+    assert app.apply(b"G" + b"m1") == b""
+    assert app.apply(b"G" + b"good") == b"val"
+    assert app.apply(b"") == b"ERR"
+
+
+def test_shard_app_2pc_state_machine():
+    app = ShardKVApp()
+    tx1, tx2 = b"T" * 8, b"U" * 8
+    p = tprep_req(tx1, 1000.0, 0, [(b"k", b"v")])
+    assert parse_tprep(p) == (tx1, 1000.0, 0, [(b"k", b"v")])
+    assert app.apply(p) == VOTE_OK
+    assert app.apply(p) == VOTE_OK            # idempotent re-PREPARE
+    # conflicting transaction on the locked key loses, and never locks
+    assert app.apply(tprep_req(tx2, 1000.0, 0, [(b"k", b"w")])) \
+        == VOTE_CONFLICT
+    # single-key writes bounce off the lock (no torn overwrite mid-2PC)
+    assert app.apply(set_req(b"k", b"z")) == b"LOCKED"
+    assert app.apply(mset_req([(b"k", b"z")])) == b"LOCKED"
+    # GET still serves the committed (absent) value while pending
+    assert app.apply(b"G" + b"k") == b""
+    # coordinator record: first DECIDE wins, later ones read it back
+    assert app.apply(tdecide_req(tx1, b"C")) == b"OUTC"
+    assert app.apply(tdecide_req(tx1, b"A")) == b"OUTC"
+    assert app.apply(tfinish_req(tx1, b"C")) == b"OK"
+    assert app.apply(b"G" + b"k") == b"v"
+    assert app.apply(set_req(b"k", b"z")) == b"OK"   # lock released
+    # FINISH for the aborted loser is a recorded no-op
+    assert app.apply(tfinish_req(tx2, b"A")) == b"OK"
+    assert app.apply(tprep_req(tx2, 9000.0, 0, [(b"k", b"w")])) \
+        == VOTE_CONFLICT                      # no resurrection after FINISH
+    # snapshot/adopt round-trips all six state components
+    clone = ShardKVApp()
+    clone.adopt(app.snapshot())
+    assert clone.snapshot() == app.snapshot()
+
+
+def test_zipf_workload_keys_are_seeded_and_skewed():
+    mk = lambda theta: Workload(kind="closed", n_requests=1, keyspace=40,
+                                zipf_theta=theta, key_seed=5,
+                                payload_fn=lambda i, k: ("get", k))
+    w1, w2 = mk(1.2), mk(1.2)
+    keys = [w1.key_for(i) for i in range(600)]
+    assert keys == [w2.key_for(i) for i in range(600)]       # seeded
+    assert keys[:10] == [w1.key_for(i) for i in range(10)]   # index-stable
+    top = max(set(keys), key=keys.count)
+    assert keys.count(top) / len(keys) > 3.0 / 40            # skewed
+    uni = mk(0.0)
+    ukeys = [uni.key_for(i) for i in range(600)]
+    assert len(set(ukeys)) > 30                              # spread out
+    assert max(ukeys.count(k) for k in set(ukeys)) < 60
+    with pytest.raises(ValueError):
+        Workload(kind="closed", n_requests=1, keyspace=10)   # no payload_fn
+
+
+# --------------------------------------------------------------------------
+# Service happy path
+# --------------------------------------------------------------------------
+def test_cross_shard_mset_commits_atomically():
+    sub, svc = _service()
+    cl = svc.new_client()
+    k0, k1 = _cross_pair(svc, 0)
+    res, _ = svc.run_op(cl, ("mset", [(k0, b"t0"), (k1, b"t0")]))
+    assert res == b"OK"
+    assert _assert_not_torn(svc, cl, {0: (k0, k1)}) == 1
+    # single-shard mset takes the plain fast path (no 2PC slots)
+    res, _ = svc.run_op(cl, ("mset", [(k0, b"x"), (k0 + b"2", b"y")]))
+    assert res == b"OK"
+    assert svc.run_op(cl, ("get", k0))[0] == b"x"
+    sub.sim.run(until=sub.sim.now + 50_000.0)
+    _assert_shard_agreement(svc)
+
+
+def test_conflicting_transactions_serialize_via_locks():
+    sub, svc = _service()
+    cl_a, cl_b = svc.new_client(), svc.new_client()
+    k0, k1 = _cross_pair(svc, 1)
+    out = {}
+    cl_a.request(("mset", [(k0, b"A"), (k1, b"A")]),
+                 lambda r, _l: out.setdefault("a", r))
+    cl_b.request(("mset", [(k0, b"B"), (k1, b"B")]),
+                 lambda r, _l: out.setdefault("b", r))
+    assert sub.sim.run_until(lambda: len(out) == 2, timeout=1_000_000.0)
+    assert sorted(out.values()) == [b"ABORTED", b"OK"]
+    winner = b"A" if out["a"] == b"OK" else b"B"
+    assert svc.run_op(cl_a, ("get", k0))[0] == winner
+    assert svc.run_op(cl_a, ("get", k1))[0] == winner
+
+
+def test_abandoned_transaction_is_presumed_aborted():
+    sub, svc = _service(tx_timeout_us=5_000.0)
+    cl = svc.new_client()
+    k0, k1 = _cross_pair(svc, 2)
+    cl.drop_decide = True           # client "crashes" between PREP and DECIDE
+    cl.request(("mset", [(k0, b"t2"), (k1, b"t2")]))
+    sub.sim.run(until=sub.sim.now + 40_000.0)
+    cl.drop_decide = False
+    assert _assert_not_torn(svc, cl, {2: (k0, k1)}) == 0
+    # locks were released by the recovery FINISH: fresh writes go through
+    assert svc.run_op(cl, ("set", k0, b"after"))[0] == b"OK"
+    assert svc.run_op(cl, ("set", k1, b"after"))[0] == b"OK"
+    _assert_shard_agreement(svc)
+
+
+def test_committed_transaction_is_finished_forward():
+    sub, svc = _service(tx_timeout_us=5_000.0)
+    cl = svc.new_client()
+    k0, k1 = _cross_pair(svc, 3)
+    cl.drop_finish = True           # client "crashes" after DECIDE(commit)
+    cl.request(("mset", [(k0, b"t3"), (k1, b"t3")]))
+    sub.sim.run(until=sub.sim.now + 40_000.0)
+    cl.drop_finish = False
+    # the recorded commit outcome wins: recovery applies, never aborts
+    assert _assert_not_torn(svc, cl, {3: (k0, k1)}) == 1
+    _assert_shard_agreement(svc)
+
+
+# --------------------------------------------------------------------------
+# Atomicity under seeded faults
+# --------------------------------------------------------------------------
+def _drive_txs(sub, svc, cl, n_tx, mid_run=None, mid_at=None,
+               timeout=5_000_000.0):
+    """Issue ``n_tx`` sequential cross-shard MSETs; optionally fire
+    ``mid_run()`` at simulated time ``mid_at``.  Returns the key pairs."""
+    pairs = {i: _cross_pair(svc, i) for i in range(n_tx)}
+    if mid_run is not None:
+        sub.sim.at(mid_at, mid_run)
+    done = {"n": 0}
+
+    def fire(i):
+        if i >= n_tx:
+            return
+        k0, k1 = pairs[i]
+
+        def cb(_res, _lat):
+            done["n"] += 1
+            fire(i + 1)
+
+        cl.request(("mset", [(k0, b"t%d" % i), (k1, b"t%d" % i)]), cb)
+
+    fire(0)
+    assert sub.sim.run_until(lambda: done["n"] >= n_tx, timeout=timeout), \
+        f"2PC stream stalled at {done['n']}/{n_tx}"
+    return pairs
+
+
+def test_participant_leader_crash_mid_2pc():
+    """Crash the non-coordinator shard's leader in the middle of the 2PC
+    stream: its view change must re-route in-flight PREPARE/FINISH slots;
+    no transaction may tear and the stream must finish."""
+    sub, svc = _service(cfg=_slow_cfg(), seed=13, n_pools=2,
+                        tx_timeout_us=40_000.0)
+    cl = svc.new_client()
+    leader = svc.shards[1].replicas[0]
+    pairs = _drive_txs(sub, svc, cl, n_tx=8,
+                       mid_run=leader.crash, mid_at=400.0,
+                       timeout=10_000_000.0)
+    sub.sim.run(until=sub.sim.now + 200_000.0)
+    committed = _assert_not_torn(svc, cl, pairs)
+    assert committed == len(pairs)   # crash-faulty leader can't abort them
+    leader.recover()
+    sub.sim.run(until=sub.sim.now + 200_000.0)
+    _assert_shard_agreement(svc)
+
+
+def test_equivocating_coordinator_leader_mid_2pc():
+    """The coordinator shard's Byzantine leader equivocates one slot below
+    CTBcast while cross-shard transactions are in flight: non-equivocation
+    must hold (one variant survives everywhere) and no transaction tears."""
+    sub, svc = _service(cfg=_slow_cfg(), seed=17, n_pools=2,
+                        tx_timeout_us=40_000.0)
+    cl = svc.new_client()
+    leader = svc.shards[0].replicas[0]
+
+    def equivocate():
+        v, s, k = leader.view, leader.next_slot, leader.my_ctb.next_k
+        m_a = ("PREPARE", v, s, (("evil", s), "", b""))
+        m_b = ("PREPARE", v, s, (("evil", s), "", b"\x01"))
+        stream = leader.my_ctb._s_lock
+        leader.tb.broadcast(stream, k, m_a,
+                            [leader.pid, svc.shards[0].replicas[1].pid])
+        leader.tb.broadcast(stream, k, m_b,
+                            [svc.shards[0].replicas[2].pid])
+        leader.my_ctb.buf[k] = m_a
+        leader.my_ctb.next_k = max(leader.my_ctb.next_k, k + 1)
+        leader.ctb_k = max(leader.ctb_k, k + 1)
+        leader.next_slot = s + 1
+        leader.my_ctb.escalate(k)
+
+    pairs = _drive_txs(sub, svc, cl, n_tx=6,
+                       mid_run=equivocate, mid_at=300.0,
+                       timeout=10_000_000.0)
+    sub.sim.run(until=sub.sim.now + 200_000.0)
+    committed = _assert_not_torn(svc, cl, pairs)
+    assert committed == len(pairs)
+    _assert_shard_agreement(svc)
+
+
+def test_pool_reconfiguration_during_prepare():
+    """A memory node under the shared slow-path registers dies and its pool
+    reconfigures while PREPAREs are in flight: the register quorums shift
+    under the 2PC stream without tearing anything."""
+    sub, svc = _service(cfg=_slow_cfg(), seed=19, n_pools=2,
+                        tx_timeout_us=40_000.0)
+    cl = svc.new_client()
+
+    def kill_and_reconfigure():
+        sub.sim.processes["m1"].crash()
+        sub.sim.after(1_000.0, lambda: sub.pools[0].reconfigure("m1"))
+
+    pairs = _drive_txs(sub, svc, cl, n_tx=8,
+                       mid_run=kill_and_reconfigure, mid_at=350.0,
+                       timeout=10_000_000.0)
+    sub.sim.run(until=sub.sim.now + 200_000.0)
+    assert len(sub.pools[0].reconfigurations) >= 1
+    committed = _assert_not_torn(svc, cl, pairs)
+    assert committed == len(pairs)
+    _assert_shard_agreement(svc)
+
+
+def test_scenario_spec_with_seeded_fault_schedule():
+    """Declarative end-to-end: a 2-shard ServiceSpec under a Zipf-keyed
+    MSET workload with a seeded participant-replica crash+recover, driven
+    through run_scenario — the full ISSUE 6 stack in one spec."""
+    def op(i, key):
+        if i % 3 == 2:
+            return ("mset", [(key, b"m%d" % i), (key + b"~", b"m%d" % i)])
+        return ("set", key, b"v%d" % i)
+
+    sched = (FaultSchedule()
+             .add(600.0, "crash", "kv/s1/r1")
+             .add(9_000.0, "recover", "kv/s1/r1"))
+    spec = ScenarioSpec(
+        apps=[], n_pools=2, seed=23, faults=sched, drain_us=120_000.0,
+        services=[ServiceSpec(
+            name="kv", n_shards=2, cfg=_slow_cfg(), tx_timeout_us=40_000.0,
+            workload=Workload(kind="closed", n_requests=24, n_clients=2,
+                              keyspace=32, zipf_theta=0.9, key_seed=29,
+                              payload_fn=op, timeout_us=120_000_000.0))])
+    res = run_scenario(spec)
+    ar = res.apps["kv"]
+    assert ar.completed == 24
+    assert not res.budget_overruns
+    svc = res.substrate.services["kv"]
+    # every key must agree with its MSET twin (same tag or both absent)
+    cl = svc.new_client()
+    store_keys = set()
+    for shard in svc.shards:
+        store_keys |= set(shard.replicas[0].app.store)
+    for k in store_keys:
+        if k.endswith(b"~"):
+            base = k[:-1]
+            v0, _ = svc.run_op(cl, ("get", base), timeout=5_000_000.0)
+            v1, _ = svc.run_op(cl, ("get", k), timeout=5_000_000.0)
+            # the twin is only ever written by the MSET that wrote base —
+            # but base may be overwritten later by a plain SET
+            assert v1 != b"" and (v0 == v1 or v0.startswith(b"v")), (base, v0, v1)
+    # push both shards past a checkpoint boundary so the recovered replica
+    # adopts the post-crash state, then require *strict* convergence
+    k0, k1 = _cross_pair(svc, 99)
+    for j in range(2 * _slow_cfg().window + 4):
+        svc.run_op(cl, ("set", k0 if j % 2 else k1, b"c%d" % j),
+                   timeout=5_000_000.0)
+    res.substrate.sim.run(until=res.substrate.sim.now + 100_000.0)
+    _assert_shard_agreement(svc)
