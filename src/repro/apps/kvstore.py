@@ -20,14 +20,31 @@ exactly once on the coordinator shard's log, FINISH applies-or-discards the
 intent.  Each of those is an ordinary consensus request — *each 2PC phase
 is itself a BFT-committed slot* (see DESIGN_SHARDING.md):
 
-    b"P" + txid(8) + deadline_us(<Q) + coord(<H) + n(1) + pairs -> TPREP
-    b"D" + txid(8) + outcome(1: C|A)                            -> TDECIDE
-    b"F" + txid(8) + outcome(1: C|A)                            -> TFINISH
-    b"O" + txid(8)                                              -> outcome?
+    b"P" + txid(20) + deadline_us(<Q) + coord(<H) + n(1) + pairs -> TPREP
+    b"D" + txid(20) + outcome(1: C|A)                            -> TDECIDE
+    b"F" + txid(20) + outcome(1: C|A)                            -> TFINISH
+    b"R" + txid(20) + outcome(1) + n(1) + n × (plen(1)+pid+sig(64))
+                                             -> recovery TFINISH + outcome
+                                                certificate (f+1 coordinator
+                                                replica signatures; verified
+                                                at the consensus layer's svc
+                                                endorsement gate, not here)
+    b"O" + txid(20)                                              -> outcome?
+
+A txid is ``owner_tag(8) || seq(<I) || nonce(<Q)``: the tag binds the
+transaction to the submitting client (sha256 of its pid — collision-free
+where the old crc32 salt was not), the seq separates one client's
+transactions, and the nonce makes the txid unguessable to other clients.
+The coordinator's DECIDE record enforces the binding: a commit outcome is
+only ever recorded when proposed by the txid's owner (authenticated caller
+via :meth:`~repro.core.consensus.App.apply_from`); abort stays open to
+anyone so replica recovery probes can presume-abort abandoned
+transactions.
 """
 
 from __future__ import annotations
 
+import hashlib
 import struct
 from typing import Dict, List, Tuple
 
@@ -36,8 +53,27 @@ from repro.core.consensus import App
 #: one-byte length fields frame every key/value/pair-count on the wire
 MAX_LEN = 255
 
+#: owner tag (8) + per-client seq (4) + unguessable nonce (8)
+TXID_LEN = 20
+
 VOTE_OK = b"VOTE_OK"
 VOTE_CONFLICT = b"VOTE_CONFLICT"
+
+
+def tx_owner_tag(pid: str) -> bytes:
+    """The 8-byte owner component of a txid: a collision-resistant digest
+    of the submitting client's pid.  Forging a commit-DECIDE for another
+    client's transaction would need a second preimage of its tag under an
+    authenticated caller identity — out of the model's reach."""
+    return hashlib.sha256(pid.encode()).digest()[:8]
+
+
+def make_txid(pid: str, seq: int, nonce: int) -> bytes:
+    """``owner_tag || seq || nonce``.  ``nonce`` models a draw from the
+    client's CSPRNG: unpredictable to every other client, so in-flight
+    transactions cannot even be *named* (let alone decided) by a
+    Byzantine client that merely guesses txids."""
+    return tx_owner_tag(pid) + struct.pack("<IQ", seq & 0xFFFFFFFF, nonce)
 
 
 def get_req(key: bytes) -> bytes:
@@ -145,7 +181,7 @@ def tprep_req(txid: bytes, deadline_us: float, coord_shard: int,
     """PREPARE this shard's slice of a cross-shard transaction: lock the
     keys, record the intent, vote.  ``deadline_us`` (absolute sim time) is
     consumed by the *replica-layer* recovery timers, never by apply()."""
-    assert len(txid) == 8
+    assert len(txid) == TXID_LEN
     return (b"P" + txid + _TPREP_HDR.pack(int(deadline_us), coord_shard) +
             _encode_pairs(pairs))
 
@@ -153,29 +189,80 @@ def tprep_req(txid: bytes, deadline_us: float, coord_shard: int,
 def tdecide_req(txid: bytes, outcome: bytes) -> bytes:
     """Record the transaction outcome on the coordinator shard (exactly
     once: the first DECIDE in its log wins; later ones read it back)."""
-    assert outcome in (b"C", b"A") and len(txid) == 8
+    assert outcome in (b"C", b"A") and len(txid) == TXID_LEN
     return b"D" + txid + outcome
 
 
 def tfinish_req(txid: bytes, outcome: bytes) -> bytes:
     """Apply (C) or discard (A) the pending intent and release its locks."""
-    assert outcome in (b"C", b"A") and len(txid) == 8
+    assert outcome in (b"C", b"A") and len(txid) == TXID_LEN
     return b"F" + txid + outcome
 
 
 def toutcome_req(txid: bytes) -> bytes:
     """Read the recorded outcome (b"OUT"+o, or b"NONE")."""
-    assert len(txid) == 8
+    assert len(txid) == TXID_LEN
     return b"O" + txid
+
+
+#: wire size of one signature in an outcome certificate (Ed25519)
+SIG_LEN = 64
+
+
+def rfinish_req(txid: bytes, outcome: bytes,
+                cert: Tuple[Tuple[str, bytes], ...]) -> bytes:
+    """A *recovery* FINISH: semantically TFINISH, but carrying the f+1
+    coordinator-shard signatures over ``("txout", txid, outcome)`` that
+    prove the outcome against the coordinator's replicated record.  The
+    certificate is what lets every honest replica endorse the slot
+    immediately (no local probe state needed) while refusing a Byzantine
+    leader's forged outcome."""
+    assert outcome in (b"C", b"A") and len(txid) == TXID_LEN
+    assert len(cert) <= MAX_LEN
+    blob = bytes([len(cert)])
+    for pid, sig in cert:
+        p = pid.encode()
+        assert len(p) <= MAX_LEN and len(sig) == SIG_LEN
+        blob += bytes([len(p)]) + p + sig
+    return b"R" + txid + outcome + blob
+
+
+def parse_rfinish(req: bytes):
+    """(txid, outcome, ((pid, sig), ...)) of a recovery FINISH, or None."""
+    if req[:1] != b"R" or len(req) < 3 + TXID_LEN:
+        return None
+    txid, outcome = req[1:1 + TXID_LEN], req[1 + TXID_LEN:2 + TXID_LEN]
+    if outcome not in (b"C", b"A"):
+        return None
+    off = 2 + TXID_LEN
+    n = req[off]
+    off += 1
+    cert = []
+    for _ in range(n):
+        if off >= len(req):
+            return None
+        plen = req[off]
+        pid = req[off + 1:off + 1 + plen]
+        off += 1 + plen
+        if len(pid) != plen:
+            return None
+        sig = req[off:off + SIG_LEN]
+        off += SIG_LEN
+        if len(sig) != SIG_LEN:
+            return None
+        cert.append((pid.decode(), sig))
+    if off != len(req):
+        return None
+    return txid, outcome, tuple(cert)
 
 
 def parse_tprep(req: bytes):
     """(txid, deadline_us, coord_shard, pairs) of a TPREP, or None."""
-    if req[:1] != b"P" or len(req) < 9 + _TPREP_HDR.size:
+    if req[:1] != b"P" or len(req) < 1 + TXID_LEN + _TPREP_HDR.size:
         return None
-    txid = req[1:9]
-    deadline, coord = _TPREP_HDR.unpack_from(req, 9)
-    pairs = _decode_pairs(req, 9 + _TPREP_HDR.size)
+    txid = req[1:1 + TXID_LEN]
+    deadline, coord = _TPREP_HDR.unpack_from(req, 1 + TXID_LEN)
+    pairs = _decode_pairs(req, 1 + TXID_LEN + _TPREP_HDR.size)
     if pairs is None:
         return None
     return txid, float(deadline), coord, pairs
@@ -194,6 +281,11 @@ class ShardKVApp(KVStoreApp):
 
     def __init__(self) -> None:
         super().__init__()
+        #: authenticated pid of the client whose request is being applied
+        #: ("" for internal/service slots) — set by apply_from for the
+        #: duration of one apply; part of the agreed batch, so identical
+        #: on every honest replica (determinism preserved)
+        self._caller = ""
         #: key -> txid holding its write lock
         self.locks: Dict[bytes, bytes] = {}
         #: txid -> (deadline_us, coord_shard, pairs) awaiting the outcome
@@ -206,6 +298,13 @@ class ShardKVApp(KVStoreApp):
         self.finished: Dict[bytes, bytes] = {}
 
     # ------------------------------------------------------------- apply
+    def apply_from(self, caller: str, req: bytes) -> bytes:
+        self._caller = caller
+        try:
+            return self.apply(req)
+        finally:
+            self._caller = ""
+
     def apply(self, req: bytes) -> bytes:
         op = req[:1]
         if op == b"P":
@@ -214,10 +313,19 @@ class ShardKVApp(KVStoreApp):
             return self._tdecide(req)
         if op == b"F":
             return self._tfinish(req)
-        if op == b"O":
-            if len(req) != 9:
+        if op == b"R":
+            # recovery FINISH: the outcome certificate was verified by the
+            # consensus layer before this slot could be certified; here it
+            # only needs to frame correctly
+            parsed = parse_rfinish(req)
+            if parsed is None:
                 return b"ERR"
-            out = self.outcomes.get(req[1:9])
+            txid, outcome, _cert = parsed
+            return self._finish_tx(txid, outcome)
+        if op == b"O":
+            if len(req) != 1 + TXID_LEN:
+                return b"ERR"
+            out = self.outcomes.get(req[1:1 + TXID_LEN])
             return b"NONE" if out is None else b"OUT" + out
         if op == b"S" or op == b"M":
             # single-shard writes respect transaction locks: a locked key
@@ -264,20 +372,31 @@ class ShardKVApp(KVStoreApp):
         return VOTE_OK
 
     def _tdecide(self, req: bytes) -> bytes:
-        if len(req) != 10 or req[9:10] not in (b"C", b"A"):
+        if len(req) != 2 + TXID_LEN or req[-1:] not in (b"C", b"A"):
             return b"ERR"
-        txid, proposed = req[1:9], req[9:10]
+        txid, proposed = req[1:1 + TXID_LEN], req[-1:]
         out = self.outcomes.get(txid)
         if out is None:
+            if proposed == b"C" and tx_owner_tag(self._caller) != txid[:8]:
+                # only the transaction's owner may record a *commit*: an
+                # honest owner proposes C only after collecting all-OK
+                # votes, so a recorded C implies every participant locked
+                # and will apply — no torn transaction.  Anyone (recovery
+                # probes included) may still record an abort: aborting is
+                # always atomic under presumed-abort, so the worst a
+                # non-owner can do is deny progress, never tear.
+                return b"ERR_NOT_OWNER"
             # first DECIDE in the coordinator shard's log wins — the log's
             # total order is what makes the outcome unique and replicated
             out = self.outcomes[txid] = proposed
         return b"OUT" + out
 
     def _tfinish(self, req: bytes) -> bytes:
-        if len(req) != 10 or req[9:10] not in (b"C", b"A"):
+        if len(req) != 2 + TXID_LEN or req[-1:] not in (b"C", b"A"):
             return b"ERR"
-        txid, outcome = req[1:9], req[9:10]
+        return self._finish_tx(req[1:1 + TXID_LEN], req[-1:])
+
+    def _finish_tx(self, txid: bytes, outcome: bytes) -> bytes:
         prior = self.finished.get(txid)
         if prior is not None:
             return b"OK" if prior == outcome else b"ERR"

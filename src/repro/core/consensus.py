@@ -86,6 +86,17 @@ class App:
     def apply(self, req: bytes) -> bytes:  # pragma: no cover - interface
         raise NotImplementedError
 
+    def apply_from(self, caller: str, req: bytes) -> bytes:
+        """Caller-aware apply.  ``caller`` is the authenticated pid of the
+        submitting client — it is part of the agreed batch (and checked
+        against the network sender at REQ ingress), so every honest
+        replica hands the same caller to the same request and determinism
+        is preserved.  ``""`` marks internally-originated requests
+        (service-level ``("svc", ...)`` slots).  The default ignores the
+        caller; apps enforcing caller-bound operations (e.g. the 2PC
+        coordinator's owner-only commit-DECIDE) override this."""
+        return self.apply(req)
+
     def snapshot(self) -> Any:
         return None
 
@@ -284,6 +295,9 @@ class UbftReplica(Node):
         self.my_prepared: Dict[int, Tuple[int, tuple]] = {}   # slot -> (view, req)
         self.certify_sigs: Dict[Tuple[int, int, bytes], Dict[str, bytes]] = {}
         self.my_commits: Dict[int, Any] = {}        # slot -> commit cert I broadcast
+        #: slot -> sender -> cert: decided-slot certificates attached to a
+        #: JOIN_SYNC (vouched by the sender, never on its stream)
+        self.vouched_commits: Dict[int, Dict[str, Any]] = {}
         self.cp_sigs: Dict[tuple, Dict[str, bytes]] = {}
 
         # RPC / client handling
@@ -363,6 +377,23 @@ class UbftReplica(Node):
         # arm its presumed-abort recovery timers
         self.on_execute_hooks: List[
             Callable[[int, tuple, bytes, bytes], None]] = []
+        # fired when a joiner becomes a voting member (``joining`` flips
+        # False) — the service layer re-arms recovery timers here for
+        # pending 2PC intents adopted via the state-transfer snapshot,
+        # which never pass through this replica's own execution stream
+        self.on_activate_hooks: List[Callable[[], None]] = []
+        # service-level endorsement validators, keyed by the svc request
+        # kind (``("svc", kind, ...)`` rids): before this replica endorses
+        # or signs a certificate over a slot containing such a request it
+        # asks the registered validator whether the request is locally
+        # justified (e.g. a 2PC FINISH matching a verified outcome).  A
+        # blocked slot is re-checked periodically — a Byzantine leader
+        # proposing an unjustifiable svc request never collects an honest
+        # certificate quorum and eventually loses its view.  Kinds with no
+        # registered validator are endorsed freely (legacy behaviour for
+        # deployments without a service layer).
+        self.svc_validators: Dict[str, Callable[[tuple, bytes], bool]] = {}
+        self._svc_wait: Set[Tuple[int, int]] = set()
 
         self._progress_timer_armed = False
 
@@ -397,6 +428,13 @@ class UbftReplica(Node):
     # ==================================================================
     def _on_client_request(self, src: str, body: Any) -> None:
         rid, payload = body
+        if not (isinstance(rid, tuple) and rid and rid[0] == src):
+            # the rid's first element is the submitting pid, checked here
+            # against the network-authenticated sender: a client cannot
+            # submit requests under another client's identity, so the
+            # ``client`` field of every decided request (and the caller
+            # identity handed to ``App.apply_from``) is trustworthy
+            return
         if len(payload) > self.cfg.max_request_bytes:
             # Oversized requests never enter the proposal path: an honest
             # leader proposing one would fail Algorithm 5's size check at
@@ -498,6 +536,12 @@ class UbftReplica(Node):
             return
         if rid not in self.pending_req:
             self.pending_req[rid] = (rid, "", payload)
+        # a slot held back by the svc endorsement gate may now be
+        # justified by this very proposal (the validator matches it
+        # against pending_req) — re-check immediately instead of waiting
+        # for the periodic recheck timer
+        for (v, s) in list(self._svc_wait):
+            self._svc_recheck(v, s)
         if self.is_leader():
             self._note_echo(rid, self.pid)
         else:
@@ -682,6 +726,13 @@ class UbftReplica(Node):
             if not (isinstance(r, tuple) and len(r) == 3 and
                     isinstance(r[1], str) and isinstance(r[2], bytes)):
                 return None
+            if r[1] != "" and not (isinstance(r[0], tuple) and r[0] and
+                                   r[0][0] == r[1]):
+                # a client request's rid leads with the client pid (checked
+                # against the network sender at REQ ingress); a batch whose
+                # ``client`` field disagrees is a leader forging the caller
+                # identity that ``App.apply_from`` will be handed
+                return None
             try:
                 rids.add(r[0])  # rids key sets/dicts everywhere downstream
             except TypeError:
@@ -738,6 +789,21 @@ class UbftReplica(Node):
         self.state[p].prepares[s] = (v, batch)
         if v != self.view or s not in self.checkpoint.open_slots:
             return
+        for r in batch:
+            if (r[1] != "" and r[0] in self.pending_req and
+                    self.pending_req[r[0]] != r):
+                # the leader's copy contradicts the client's direct copy
+                # (§5.4): never adopt or endorse a rewritten request
+                return
+        if not self._svc_certifiable(raw):
+            # an unjustifiable service request is not even *stored*: were it
+            # kept in my_prepared, an honest replica leading the next view
+            # would faithfully re-propose it (_repropose) and a Byzantine
+            # leader's forgery could wedge the slot across view changes.
+            # Certification stays gated separately (_endorse/_do_certify)
+            # for requests whose justification arrives later.
+            self._arm_svc_recheck(v, s)
+            return
         self.my_prepared[s] = (v, batch)
         missing = {r[0] for r in batch
                    if r[1] != "" and r[0] not in self.pending_req and
@@ -757,10 +823,70 @@ class UbftReplica(Node):
             self.timer(self.cfg.slow_after_us,
                        lambda: self._slow_path_kick(v, s))
 
+    # ------------------------------------------------------------------
+    # Service-slot endorsement gating
+    # ------------------------------------------------------------------
+    def _svc_certifiable(self, raw: Any) -> bool:
+        """May this replica vouch (WILL_CERTIFY / CERTIFY signature) for a
+        slot containing this batch?  Client requests always qualify —
+        their authenticity is carried by the rid/client binding.  A
+        ``("svc", kind, ...)`` request is checked against the service
+        layer's registered validator: only locally-justified service
+        actions get this replica's vote."""
+        if not self.svc_validators:
+            return True
+        for r in as_batch(raw):
+            rid = r[0]
+            if (r[1] == "" and isinstance(rid, tuple) and len(rid) >= 2 and
+                    rid[0] == "svc" and rid not in self.decided_rids and
+                    rid not in self.executed_rids):
+                val = self.svc_validators.get(rid[1])
+                if val is not None and not val(rid, r[2]):
+                    return False
+        return True
+
+    def _arm_svc_recheck(self, v: int, s: int) -> None:
+        if (v, s) in self._svc_wait:
+            return
+        self._svc_wait.add((v, s))
+        self.timer(self.cfg.echo_timeout_us,
+                   lambda: self._svc_recheck(v, s))
+        # a held-back slot stalls execution even when every rid is decided:
+        # keep view-change pressure on so a leader proposing unjustifiable
+        # svc requests loses its view instead of wedging the log
+        self._arm_progress_timer()
+
+    def _svc_recheck(self, v: int, s: int) -> None:
+        """A slot was held back because a svc request in it was not yet
+        locally justified; re-test (the local recovery probe may have
+        verified the outcome and proposed the identical rid, or the
+        transaction may have resolved meanwhile) and vote if now safe."""
+        self._svc_wait.discard((v, s))
+        if (v != self.view or s in self.decided or
+                s not in self.checkpoint.open_slots):
+            return
+        pr = self.my_prepared.get(s)
+        if pr is None or pr[0] != v:
+            # the prepare was refused storage outright: keep the pressure
+            # on (view-change timer) until the slot decides elsewhere or
+            # the view moves on
+            self._arm_svc_recheck(v, s)
+            return
+        if not self._svc_certifiable(pr[1]):
+            self._arm_svc_recheck(v, s)
+            return
+        if (v, s) not in self.my_will_certifies:
+            self._endorse(v, s)
+        self._do_certify(v, s)
+
     def _endorse(self, v: int, s: int) -> None:
         if self.joining:
             return  # non-voting: observe, never promise
         if v != self.view or s not in self.checkpoint.open_slots:
+            return
+        pr = self.my_prepared.get(s)
+        if pr is not None and pr[0] == v and not self._svc_certifiable(pr[1]):
+            self._arm_svc_recheck(v, s)
             return
         if self.cfg.fast_enabled:
             self.my_will_certifies.add((v, s))
@@ -781,6 +907,12 @@ class UbftReplica(Node):
             return
         pr = self.my_prepared.get(s)
         if pr is None or pr[0] != v:
+            return
+        if not self._svc_certifiable(pr[1]):
+            # the slow path reaches here without passing _endorse, so the
+            # service-slot gate must sit on the signature itself: no
+            # honest certificate for an unjustified svc request
+            self._arm_svc_recheck(v, s)
             return
         self.my_certified.add((v, s))
         req = pr[1]
@@ -818,7 +950,7 @@ class UbftReplica(Node):
             self._ctb_broadcast(("COMMIT", cert))              # line 36
 
     # --- COMMIT (lines 38-41) ---
-    def _on_commit(self, p: str, m: tuple) -> None:
+    def _on_commit(self, p: str, m: tuple, vouch_only: bool = False) -> None:
         cert = m[1]
         v, s, fp, req = cert["view"], cert["slot"], cert["fp"], cert["req"]
         if crypto.fingerprint_cached(req) != fp:
@@ -827,20 +959,35 @@ class UbftReplica(Node):
         if len({pid for pid, _, _ in items}) < self.quorum:
             return
         self.async_verify_many(items, lambda oks: self._commit_verified(
-            oks, p, cert))
+            oks, p, cert, vouch_only))
 
-    def _commit_verified(self, oks: List[bool], p: str, cert: dict) -> None:
+    def _commit_verified(self, oks: List[bool], p: str, cert: dict,
+                         vouch_only: bool = False) -> None:
         if not all(oks):
             return
         s = cert["slot"]
-        st = self.state[p]
-        prev = st.commits.get(s)
-        if prev is None or prev["view"] <= cert["view"]:
-            st.commits[s] = cert
-        # f+1 COMMITs with a matching PREPARE → decide (line 40)
-        matching = [q for q in self.replicas
-                    if (c := self.state[q].commits.get(s)) is not None
-                    and c["fp"] == cert["fp"] and c["view"] == cert["view"]]
+        if vouch_only:
+            # a JOIN_SYNC-attached certificate: the sender vouches it
+            # decided s, but the cert was never carried on its CTBcast
+            # stream — recording it in st.commits would make my snapshot
+            # of that stream diverge from every other replica's (and from
+            # the sender's own), wedging view-change certificates forever
+            self.vouched_commits.setdefault(s, {})[p] = cert
+        else:
+            st = self.state[p]
+            prev = st.commits.get(s)
+            if prev is None or prev["view"] <= cert["view"]:
+                st.commits[s] = cert
+        # f+1 members vouching (a COMMIT on their stream, or an attached
+        # cert) with a matching PREPARE → decide (line 40)
+        matching = set()
+        for q in self.replicas:
+            c = self.state[q].commits.get(s)
+            if c is None:
+                c = self.vouched_commits.get(s, {}).get(q)
+            if (c is not None and c["fp"] == cert["fp"] and
+                    c["view"] == cert["view"]):
+                matching.add(q)
         if len(matching) >= self.quorum:
             self._decide(s, cert["req"])
 
@@ -940,7 +1087,7 @@ class UbftReplica(Node):
                     # applied to the app like a client request, but with no
                     # reply — there is no client waiting, the effect IS the
                     # point (e.g. a presumed-abort FINISH releasing locks)
-                    result = self.app.apply(payload)
+                    result = self.app.apply_from("", payload)
                     self.executed_rids.add(rid)
                     results.append(result)
                     self.pending_req.pop(rid, None)
@@ -957,7 +1104,7 @@ class UbftReplica(Node):
                     self.pending_req.pop(rid, None)
                     self.echoes.pop(rid, None)
                     continue
-                result = self.app.apply(payload)
+                result = self.app.apply_from(client, payload)
                 self.executed_rids.add(rid)
                 results.append(result)
                 self.pending_req.pop(rid, None)
@@ -1041,7 +1188,7 @@ class UbftReplica(Node):
         self.my_certified = {k for k in self.my_certified
                              if k[1] in cp.open_slots}
         for d2 in (self.my_prepared, self.my_commits, self.decided,
-                   self.results):
+                   self.results, self.vouched_commits):
             for s in [s for s in d2 if s < cp.start]:
                 del d2[s]
         for key in [k for k in self.certify_sigs if k[1] < cp.start]:
@@ -1232,8 +1379,32 @@ class UbftReplica(Node):
             # EPOCH confirmation follows so the replay lands while the
             # joiner is still in its observer-only phase
             history = tuple(sorted(self.my_ctb.buf.items()))
-            if history:
-                self.send(new, "JOIN_SYNC", (history,), extra_bytes=64)
+            # a member that itself joined recently decided open slots from
+            # *replayed* certificates without ever broadcasting COMMIT for
+            # them — its own stream cannot vouch for those decisions, and
+            # a second-generation joiner counting f+1 vouching members
+            # would come up short once the originals are gone.  Attach the
+            # stored certificates explicitly: the receiver re-verifies the
+            # f+1 certify signatures and counts this sender as one of the
+            # vouching members.  Members whose stream already carries every
+            # COMMIT (the common case) attach nothing, bit-identically.
+            have = {m[1]["slot"] for _k, m in history
+                    if isinstance(m, tuple) and m and m[0] == "COMMIT"}
+            extra = []
+            for s in sorted(self.decided):
+                if s in have or s not in self.checkpoint.open_slots:
+                    continue
+                cert = self.my_commits.get(s)
+                if cert is None:
+                    for q in self.replicas:
+                        cert = self.state[q].commits.get(s)
+                        if cert is not None:
+                            break
+                if cert is not None:
+                    extra.append(cert)
+            body = (history, tuple(extra)) if extra else (history,)
+            if history or extra:
+                self.send(new, "JOIN_SYNC", body, extra_bytes=64)
             self.send(new, "EPOCH",
                       (e, tuple(self.replicas), slot, self.view))
         elif self.joining:
@@ -1241,6 +1412,8 @@ class UbftReplica(Node):
             # replays can carry it): it just activated along with everyone
             self.joining = False
             self._after_view_entered()
+            for hook in self.on_activate_hooks:
+                hook()
 
     # ----------------------------------------------------- joiner side
     def begin_join(self, new_epoch: int, survivors: List[str],
@@ -1336,11 +1509,33 @@ class UbftReplica(Node):
         st = self.state.get(src)
         if st is None or st.blocked or src in self.retired:
             return
-        (history,) = body
+        history = body[0]
+        certs = body[1] if len(body) > 1 else ()
+        for cert in certs:
+            # explicitly attached decided-slot certificates (the sender's
+            # own stream never carried a COMMIT for them): re-verified and
+            # attributed to the sender as one vouching member
+            self._on_commit(src, ("COMMIT", cert), vouch_only=True)
         if not self.joining:
-            for _kk, m in history:
+            # salvage the self-authenticating part.  When the sender
+            # attached certificates it is itself a recent joiner whose
+            # short stream cannot be vouched for by anyone else — also
+            # *consume* the replayed FIFO keys then: without advancing
+            # fifo_next, every later live broadcast from it would wait
+            # forever on pre-join keys that are never resent, leaving a
+            # second-generation joiner permanently deaf to the only other
+            # surviving member.  The skipped messages are not interpreted
+            # (a replay racing the activation must not complete any live
+            # quorum).  For long-lived senders the FIFO is left alone:
+            # their streams stay recoverable through the quorum.
+            for kk, m in history:
+                if certs and kk >= st.fifo_next:
+                    st.fifo_next = kk + 1
+                    st.recent[kk] = m
                 if isinstance(m, tuple) and m and m[0] == "COMMIT":
                     self._on_commit(src, m)
+            if certs:
+                self._fifo_drain(src)
             return
         for kk, m in history:
             if kk >= st.fifo_next:
@@ -1375,6 +1570,8 @@ class UbftReplica(Node):
             self._catch_up_view(target)
         else:
             self._after_view_entered()
+        for hook in self.on_activate_hooks:
+            hook()
 
     # ==================================================================
     # View change (Algorithm 3)
@@ -1405,7 +1602,8 @@ class UbftReplica(Node):
 
     def _has_pending(self) -> bool:
         undecided = any(rid not in self.decided_rids for rid in self.pending_req)
-        return undecided or bool(self.waiting_prepare)
+        return (undecided or bool(self.waiting_prepare)
+                or bool(self._svc_wait))
 
     def change_view(self) -> None:
         if self.changing_view or self.joining:

@@ -98,6 +98,12 @@ class Cluster:
     retired_replicas: List[UbftReplica] = field(default_factory=list)
     #: (sim time, old_pid, new_pid) per initiated replacement
     replacements: List[Tuple[float, str, str]] = field(default_factory=list)
+    #: called with ``(old_replica, joiner)`` at the end of every
+    #: ``replace_replica`` — the service layer attaches its per-replica
+    #: machinery (e.g. 2PC recovery timers) to the joiner here, so an
+    #: epoch switch never silently shrinks the recovery fleet
+    replace_hooks: List[Callable[[UbftReplica, UbftReplica], None]] = \
+        field(default_factory=list)
 
     @classmethod
     def attach(cls, substrate: Substrate, app_factory: Callable[[], App],
@@ -253,6 +259,8 @@ class Cluster:
         if self.substrate is not None:
             self.substrate.add_owner(self.name, new_pid)
         self.replacements.append((self.sim.now, old_pid, new_pid))
+        for hook in self.replace_hooks:
+            hook(old, joiner)
         return joiner
 
     def submit_internal(self, rid: tuple, payload: bytes) -> None:

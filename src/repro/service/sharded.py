@@ -18,6 +18,14 @@ BFT-committed slot** (DESIGN_SHARDING.md):
   fixes the outcome; every later DECIDE — including a recovery probe
   proposing abort — reads that record back.  The outcome is therefore
   unique and replicated *without any separate BFT coordinator group*.
+  A *commit* outcome is additionally **owner-bound**: the txid embeds a
+  collision-resistant tag of the submitting client's pid
+  (:func:`~repro.apps.kvstore.make_txid`) and the state machine only
+  records ``C`` when the authenticated caller of the DECIDE slot matches
+  that tag — a Byzantine client can neither pre-commit nor (thanks to the
+  txid's unguessable nonce) even name another client's transaction, so
+  it cannot tear an honest MSET.  Abort stays open to anyone: recovery
+  probes must be able to presume-abort, and an abort is always atomic.
 * FINISH — a consensus request per participant shard applying or
   discarding the intent and releasing its locks.
 
@@ -26,24 +34,35 @@ about the outcome could only tear its own transaction, which is
 indistinguishable from it issuing legal single-key SETs) but is relied on
 for progress — so every replica arms a **presumed-abort recovery timer**
 when it executes a PREPARE (:class:`_TxRecovery`): if the intent is still
-pending past its deadline, the replica itself sends DECIDE(abort) to the
-coordinator shard, collects f+1 matching replies (so the answer comes from
-the replicated record, not from any single — possibly Byzantine — replica),
-and routes the resulting FINISH into its own shard as a deterministic
-``("svc", ...)`` slot that all replicas' concurrent submissions dedupe
-into.  A transaction whose client vanished after a committed DECIDE is
-thus *finished forward*; one abandoned before DECIDE is aborted.
+pending past its deadline, the replica itself probes the coordinator
+shard, which records DECIDE(abort) if nothing was decided yet and answers
+with *signed outcome statements*; f+1 matching signatures (so the answer
+comes from the replicated record, not from any single — possibly
+Byzantine — replica, and at least one signer is honest) form an outcome
+certificate that rides the resulting recovery FINISH into this replica's
+own shard as a deterministic ``("svc", ...)`` slot all replicas'
+concurrent submissions dedupe into.  A transaction whose client vanished
+after a committed DECIDE is thus *finished forward*; one abandoned before
+DECIDE is aborted.
+
+The recovery fleet survives membership epoch switches: every
+``Cluster.replace_replica`` fires the cluster's ``replace_hooks``, which
+attach a fresh :class:`_TxRecovery` to the joiner, and the joiner arms
+probes for every pending intent it adopted via snapshot once it activates
+(``on_activate_hooks``) — so locks are released even when every replica
+that originally executed the PREPARE has been replaced.
 """
 
 from __future__ import annotations
 
-import struct
-import zlib
+import hashlib
+import random
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from repro.apps.kvstore import (VOTE_OK, ShardKVApp, get_req, mset_req,
-                                parse_tprep, set_req, tdecide_req,
-                                tfinish_req, tprep_req)
+from repro.apps.kvstore import (TXID_LEN, VOTE_OK, ShardKVApp, get_req,
+                                make_txid, mset_req, parse_rfinish,
+                                parse_tprep, rfinish_req, set_req,
+                                tdecide_req, tfinish_req, tprep_req)
 from repro.core import crypto
 from repro.core.consensus import App, ConsensusConfig, UbftReplica
 from repro.core.registers import POOL_MEMORY_BUDGET
@@ -82,7 +101,14 @@ class ServiceClient:
         self.router = service.router
         self.shard_clients = [c.new_client() for c in service.shards]
         self._txseq = 0
-        self._tx_salt = zlib.crc32(pid.encode())
+        # per-client nonce stream for txids.  Models a CSPRNG: the seed is
+        # derived from the service-wide tx_secret + pid so runs stay
+        # reproducible, while within the model no other client can predict
+        # the draws (a real deployment would use os.urandom)
+        self._tx_rng = random.Random(int.from_bytes(
+            hashlib.sha256(
+                f"{service.tx_secret}|{pid}".encode()).digest()[:8],
+            "little"))
         self.latencies: List[float] = []
 
     # ------------------------------------------------------------ routing
@@ -114,10 +140,15 @@ class ServiceClient:
     def _mset_2pc(self, by_shard: Dict[int, list],
                   cb: Optional[Callable[[bytes, float], None]]) -> None:
         t0 = self.sim.now
-        txid = struct.pack("<II", self._tx_salt, self._txseq)
-        self._txseq += 1
         shards = sorted(by_shard)
         coord = shards[0]
+        # the txid's owner tag names the principal that submits the DECIDE:
+        # this client's per-coordinator-shard uBFT client.  The consensus
+        # layer authenticates that pid on every request (rid/client/sender
+        # binding), so only *this* client can ever record a commit
+        owner = self.shard_clients[coord].pid
+        txid = make_txid(owner, self._txseq, self._tx_rng.getrandbits(64))
+        self._txseq += 1
         deadline = t0 + self.service.tx_timeout_us
         votes: Dict[int, bytes] = {}
 
@@ -175,14 +206,39 @@ class _TxRecovery:
     PREPARE that voted OK arms a timer at the transaction deadline (plus a
     per-replica stagger so recoverers probe in sequence rather than in a
     thundering herd).  If the intent is still pending when the timer fires,
-    the replica acts as a client of the coordinator shard: it sends
-    DECIDE(abort) — which the coordinator's log either adopts (first
-    DECIDE wins → abort) or answers with the already-recorded outcome
-    (→ finish forward) — waits for f+1 matching replies, then proposes
-    FINISH into its own shard under the deterministic rid
-    ``("svc", "tfin", txid, outcome)`` so concurrent recoverers collapse
-    into one slot.  Probes re-arm until the intent resolves, so a
-    coordinator-shard view change mid-probe only delays recovery.
+    the replica **probes** the coordinator shard with a TXDEC message.
+    Each coordinator replica answers with a *signed outcome statement*
+    ``("txout", txid, outcome)``: if no outcome is recorded yet it first
+    routes DECIDE(abort) through its own shard's consensus as the
+    deterministic slot ``("svc", "tdec", txid)`` — presumed abort — and
+    signs once the record exists.  (The owner-binding in
+    :meth:`~repro.apps.kvstore.ShardKVApp` guarantees an internal DECIDE
+    can only ever record ``A``, so these slots need no cross-shard
+    verification.)
+
+    f+1 matching statements form an **outcome certificate**; the recoverer
+    then proposes a recovery FINISH carrying that certificate
+    (:func:`~repro.apps.kvstore.rfinish_req`) into its own shard under the
+    deterministic rid ``("svc", "tfin", txid, outcome)`` — concurrent
+    recoverers collapse into one slot.  The certificate is the crux: a
+    ``("svc", "tfin", ...)`` slot is only endorsed/certified
+    (:attr:`~repro.core.consensus.UbftReplica.svc_validators`) when its
+    payload's certificate verifies against the coordinator shard's
+    membership, so *any* honest replica can vote for a legitimate recovery
+    FINISH immediately — no local probe state needed, hence no circular
+    wait between slot execution and probe completion — while a Byzantine
+    leader's forged FINISH (no valid certificate) never collects an honest
+    quorum and merely costs that leader its view.
+
+    Probes re-arm until the intent resolves (a coordinator-shard view
+    change mid-probe only delays recovery) and each re-probe replaces the
+    previous one's reply bookkeeping, keyed by txid — the table stays
+    bounded by the number of live abandoned transactions.
+
+    Instances attach at service-attach time *and* — via
+    ``Cluster.replace_hooks`` — to every joiner a membership epoch switch
+    installs; a joiner arms probes for the pending intents it adopted via
+    snapshot as soon as it activates (``on_activate_hooks``).
     """
 
     def __init__(self, service: "ShardedService", shard_idx: int,
@@ -191,58 +247,191 @@ class _TxRecovery:
         self.shard_idx = shard_idx
         self.replica = replica
         self.stagger_us = stagger_us
-        self._seq = 0
-        self._outstanding: Dict[tuple, dict] = {}
+        #: recoverer role: txid -> signature collection for the live probe
+        #: (re-probes replace their predecessor's entry: bounded by the
+        #: number of still-pending abandoned transactions)
+        self._sigwait: Dict[bytes, dict] = {}
+        #: coordinator role: txid -> requester pids awaiting the outcome
+        self._want_outcome: Dict[bytes, set] = {}
+        #: txids with a live timer chain (dedupe execute- vs adopt-arming)
+        self._armed: set = set()
         replica.on_execute_hooks.append(self._on_execute)
-        replica.handle("REP", self._on_rep)   # replicas never receive REP
+        replica.on_activate_hooks.append(self._arm_adopted)
+        replica.svc_validators["tfin"] = self._tfin_certifiable
+        replica.svc_validators["tdec"] = self._tdec_certifiable
+        replica.handle("TXDEC", self._on_txdec)
+        replica.handle("TXOUT", self._on_txout)
 
     def _on_execute(self, _slot: int, _rid: tuple, payload: bytes,
                     result: bytes) -> None:
+        if payload[:1] == b"D" and result[:3] == b"OUT":
+            # coordinator role: an outcome just became part of the record —
+            # answer every probe that was waiting for it
+            self._answer_outcome(payload[1:1 + TXID_LEN], result[-1:])
         if payload[:1] != b"P" or result != VOTE_OK:
             return
         parsed = parse_tprep(payload)
         if parsed is None:
             return
         txid, deadline, coord, _pairs = parsed
+        self._arm(txid, deadline, coord)
+
+    def _arm_adopted(self) -> None:
+        """Joiner activation: the snapshot may carry pending intents whose
+        PREPAREs executed before this replica existed — arm their timers
+        now, or a shard whose original replicas are all gone would hold
+        those locks forever."""
+        for txid, (deadline, coord, _pairs) in \
+                list(self.replica.app.pending.items()):
+            self._arm(txid, deadline, coord)
+
+    def _arm(self, txid: bytes, deadline: float, coord: int) -> None:
+        if txid in self._armed:
+            return
+        self._armed.add(txid)
         delay = max(deadline - self.replica.sim.now, 0.0) + self.stagger_us
         self.replica.timer(delay, lambda: self._probe(txid, coord))
 
     def _probe(self, txid: bytes, coord: int) -> None:
         r = self.replica
-        if r.crashed or r.joining or txid not in r.app.pending:
+        # a re-probe supersedes the previous one — drop its bookkeeping so
+        # probes that never reached quorum cannot accumulate
+        self._sigwait.pop(txid, None)
+        if r.crashed:
+            return
+        if r.joining:
+            # not yet a voting member: keep the timer chain alive and try
+            # again once activated (activation also arms adopted intents)
+            r.timer(self.service.tx_timeout_us,
+                    lambda: self._probe(txid, coord))
+            return
+        if txid not in r.app.pending:
+            self._armed.discard(txid)
             return
         if not 0 <= coord < len(self.service.shards):
             return      # malformed coordinator index: nothing to consult
-        rid = (r.pid, "tx", self._seq)
-        self._seq += 1
         coord_cluster = self.service.shards[coord]
-        self._outstanding[rid] = {
-            "txid": txid, "replies": {},
-            "need": coord_cluster.replicas[0].f + 1, "done": False,
+        self._sigwait[txid] = {
+            "coord": coord, "by_outcome": {},
+            "need": coord_cluster.replicas[0].f + 1,
         }
-        body = (rid, tdecide_req(txid, b"A"))
+        body = (txid,)
         size = crypto.wire_size_shallow(body) + 19
         for pid in coord_cluster.replica_pids:   # resolved live: epoch-aware
-            r.send(pid, "REQ", body, size=size)
+            r.send(pid, "TXDEC", body, size=size)
         # re-probe until resolved (coordinator shard may be mid-view-change)
         r.timer(self.service.tx_timeout_us, lambda: self._probe(txid, coord))
 
-    def _on_rep(self, src: str, body: Any) -> None:
-        rid, result = body
-        st = self._outstanding.get(rid)
-        if st is None or st["done"]:
+    # --------------------------------------- coordinator role: TXDEC/TXOUT
+    def _on_txdec(self, src: str, body: Any) -> None:
+        """A recoverer asks this coordinator-shard replica for a signed
+        outcome statement.  Recorded outcome → sign and answer.  None yet →
+        route DECIDE(abort) through this shard's consensus (presumed abort)
+        and answer once the record exists (``_on_execute``)."""
+        r = self.replica
+        if r.crashed or r.joining:
             return
-        who = st["replies"].setdefault(bytes(result), set())
-        who.add(src)
-        if len(who) < st["need"]:
+        (txid,) = body
+        if not (isinstance(txid, bytes) and len(txid) == TXID_LEN):
             return
-        st["done"] = True
-        del self._outstanding[rid]
-        if result[:3] != b"OUT":
-            return      # coordinator shard answered ERR: leave to re-probe
-        outcome, txid = result[-1:], st["txid"]
-        self.replica.propose_internal(("svc", "tfin", txid, outcome),
-                                      tfinish_req(txid, outcome))
+        out = r.app.outcomes.get(txid)
+        if out is not None:
+            self._send_txout({src}, txid, out)
+            return
+        self._want_outcome.setdefault(txid, set()).add(src)
+        r.propose_internal(("svc", "tdec", txid), tdecide_req(txid, b"A"))
+
+    def _answer_outcome(self, txid: bytes, outcome: bytes) -> None:
+        waiting = self._want_outcome.pop(txid, None)
+        if waiting:
+            self._send_txout(waiting, txid, outcome)
+
+    def _send_txout(self, requesters: set, txid: bytes,
+                    outcome: bytes) -> None:
+        r = self.replica
+
+        def signed(sig: bytes) -> None:
+            body = (txid, outcome, sig)
+            size = crypto.wire_size_shallow(body) + 19
+            for pid in requesters:
+                r.send(pid, "TXOUT", body, size=size)
+
+        r.async_sign(("txout", txid, outcome), signed)
+
+    # ------------------------------------------ recoverer role: collection
+    def _on_txout(self, src: str, body: Any) -> None:
+        txid, outcome, sig = body
+        st = self._sigwait.get(txid)
+        if st is None or outcome not in (b"C", b"A"):
+            return
+
+        def verified(ok: bool) -> None:
+            cur = self._sigwait.get(txid)
+            if not ok or cur is not st:
+                return      # forged statement, or probe superseded meanwhile
+            by = st["by_outcome"].setdefault(outcome, {})
+            by[src] = sig
+            if len(by) < st["need"]:
+                return
+            del self._sigwait[txid]
+            cert = tuple(sorted(by.items()))
+            self.replica.propose_internal(
+                ("svc", "tfin", txid, outcome),
+                rfinish_req(txid, outcome, cert))
+
+        self.replica.async_verify(src, ("txout", txid, outcome), sig,
+                                  verified)
+
+    # ------------------------------------------------- svc slot validation
+    def _tdec_certifiable(self, rid: tuple, payload: bytes) -> bool:
+        """An internal DECIDE slot is endorsable iff it is exactly a
+        well-formed presumed-abort proposal: the state machine's
+        owner-binding already makes any internal commit unrecordable, so
+        abort-only framing is the whole check."""
+        if len(rid) != 3:
+            return False
+        txid = rid[2]
+        return (isinstance(txid, bytes) and len(txid) == TXID_LEN
+                and payload == tdecide_req(txid, b"A"))
+
+    def _tfin_certifiable(self, rid: tuple, payload: bytes) -> bool:
+        """May this replica endorse/certify a ``("svc","tfin",...)`` slot?
+
+        Malformed FINISH slots are never certified.  A FINISH for a
+        transaction this shard no longer holds pending is harmless
+        (``_finish_tx`` just records the outcome) and must be endorsed, or
+        a replica whose intent already resolved would block the slot.  For
+        a *still-pending* intent the outcome matters — C applies the
+        pairs — so the payload must carry an outcome certificate: f+1
+        signatures over ``("txout", txid, outcome)`` from current members
+        of the transaction's coordinator shard.  f+1 guarantees at least
+        one honest signer, and an honest coordinator replica only signs
+        its shard's replicated outcome record.
+        """
+        if len(rid) != 4:
+            return False
+        _svc, _kind, txid, outcome = rid
+        if not (isinstance(txid, bytes) and len(txid) == TXID_LEN
+                and outcome in (b"C", b"A")):
+            return False
+        if not isinstance(payload, bytes):
+            return False
+        parsed = parse_rfinish(payload)
+        if parsed is None or parsed[0] != txid or parsed[1] != outcome:
+            return False
+        entry = self.replica.app.pending.get(txid)
+        if entry is None:
+            return True
+        coord = entry[1]
+        if not 0 <= coord < len(self.service.shards):
+            return False
+        coord_cluster = self.service.shards[coord]
+        members = set(coord_cluster.replica_pids)
+        need = coord_cluster.replicas[0].f + 1
+        good = {pid for pid, sig in parsed[2]
+                if pid in members and self.replica.registry.verify(
+                    pid, ("txout", txid, outcome), sig)}
+        return len(good) >= need
 
 
 class ShardedService:
@@ -250,13 +439,19 @@ class ShardedService:
 
     def __init__(self, substrate: Substrate, name: str,
                  shards: List[Cluster], router: ShardRouter,
-                 tx_timeout_us: float):
+                 tx_timeout_us: float, tx_secret: int = 0):
         self.substrate = substrate
         self.name = name
         self.shards = shards
         self.router = router
         self.tx_timeout_us = tx_timeout_us
+        #: seeds each client's txid-nonce stream (stands in for per-client
+        #: CSPRNG state; vary it to vary the nonces across runs)
+        self.tx_secret = tx_secret
         self.clients: List[ServiceClient] = []
+        #: every live recovery instance (originals + joiners), for
+        #: observability and bounded-state assertions in tests
+        self.recoveries: List[_TxRecovery] = []
 
     @classmethod
     def attach(cls, substrate: Substrate, n_shards: int, name: str = "kv",
@@ -264,6 +459,7 @@ class ShardedService:
                app: Callable[[], App] = ShardKVApp,
                budget: int = POOL_MEMORY_BUDGET,
                tx_timeout_us: float = 20_000.0,
+               tx_secret: int = 0,
                pools: Optional[Any] = None) -> "ShardedService":
         """Attach ``n_shards`` groups (``<name>/s<i>``) to the substrate.
 
@@ -284,10 +480,20 @@ class ShardedService:
             shards.append(Cluster.attach(
                 substrate, app, name=f"{name}/s{i}",
                 cfg=(cfg(i) if callable(cfg) else cfg), budget=budget, **kw))
-        svc = cls(substrate, name, shards, router, tx_timeout_us)
+        svc = cls(substrate, name, shards, router, tx_timeout_us,
+                  tx_secret=tx_secret)
         for i, cluster in enumerate(shards):
             for idx, r in enumerate(cluster.replicas):
-                _TxRecovery(svc, i, r, stagger_us=200.0 + 150.0 * idx)
+                svc.recoveries.append(
+                    _TxRecovery(svc, i, r, stagger_us=200.0 + 150.0 * idx))
+            # membership epoch switches must not shrink the recovery
+            # fleet: every joiner gets its own recovery instance, which
+            # arms probes for snapshot-adopted intents on activation
+            cluster.replace_hooks.append(
+                lambda _old, joiner, _i=i, _c=cluster:
+                svc.recoveries.append(_TxRecovery(
+                    svc, _i, joiner,
+                    stagger_us=200.0 + 150.0 * _c.replicas.index(joiner))))
         substrate.services[name] = svc
         return svc
 

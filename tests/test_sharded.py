@@ -13,9 +13,10 @@ from __future__ import annotations
 
 import pytest
 
-from repro.apps.kvstore import (VOTE_CONFLICT, VOTE_OK, KVStoreApp,
-                                ShardKVApp, mset_req, parse_tprep, set_req,
-                                tdecide_req, tfinish_req, tprep_req)
+from repro.apps.kvstore import (TXID_LEN, VOTE_CONFLICT, VOTE_OK, KVStoreApp,
+                                ShardKVApp, make_txid, mset_req, parse_tprep,
+                                rfinish_req, set_req, tdecide_req,
+                                tfinish_req, tprep_req, tx_owner_tag)
 from repro.core.consensus import ConsensusConfig
 from repro.core.substrate import Substrate
 from repro.scenario import ScenarioSpec, ServiceSpec, Workload, run_scenario
@@ -110,7 +111,8 @@ def test_apply_rejects_malformed_lengths_deterministically():
 
 def test_shard_app_2pc_state_machine():
     app = ShardKVApp()
-    tx1, tx2 = b"T" * 8, b"U" * 8
+    tx1, tx2 = make_txid("cli/1", 0, 42), make_txid("cli/2", 0, 777)
+    assert len(tx1) == TXID_LEN and tx1 != tx2
     p = tprep_req(tx1, 1000.0, 0, [(b"k", b"v")])
     assert parse_tprep(p) == (tx1, 1000.0, 0, [(b"k", b"v")])
     assert app.apply(p) == VOTE_OK
@@ -123,12 +125,21 @@ def test_shard_app_2pc_state_machine():
     assert app.apply(mset_req([(b"k", b"z")])) == b"LOCKED"
     # GET still serves the committed (absent) value while pending
     assert app.apply(b"G" + b"k") == b""
-    # coordinator record: first DECIDE wins, later ones read it back
-    assert app.apply(tdecide_req(tx1, b"C")) == b"OUTC"
+    # commit-DECIDE is owner-bound: a non-owner caller (another client, an
+    # internal slot, anyone) is refused and records nothing
+    assert app.apply(tdecide_req(tx1, b"C")) == b"ERR_NOT_OWNER"
+    assert app.apply_from("cli/2", tdecide_req(tx1, b"C")) == b"ERR_NOT_OWNER"
+    assert app.apply(b"O" + tx1) == b"NONE"   # refusal left no outcome
+    # ...while the owner's commit is recorded; first DECIDE then wins and
+    # later ones (any caller) read it back
+    assert app.apply_from("cli/1", tdecide_req(tx1, b"C")) == b"OUTC"
     assert app.apply(tdecide_req(tx1, b"A")) == b"OUTC"
     assert app.apply(tfinish_req(tx1, b"C")) == b"OK"
     assert app.apply(b"G" + b"k") == b"v"
     assert app.apply(set_req(b"k", b"z")) == b"OK"   # lock released
+    # abort-DECIDE stays open to any caller (recovery probes presume-abort)
+    tx3 = make_txid("cli/3", 0, 5)
+    assert app.apply(tdecide_req(tx3, b"A")) == b"OUTA"
     # FINISH for the aborted loser is a recorded no-op
     assert app.apply(tfinish_req(tx2, b"A")) == b"OK"
     assert app.apply(tprep_req(tx2, 9000.0, 0, [(b"k", b"w")])) \
@@ -204,6 +215,12 @@ def test_abandoned_transaction_is_presumed_aborted():
     assert svc.run_op(cl, ("set", k0, b"after"))[0] == b"OK"
     assert svc.run_op(cl, ("set", k1, b"after"))[0] == b"OK"
     _assert_shard_agreement(svc)
+    # once the transaction resolved, every recoverer's probe bookkeeping
+    # drained — no per-probe state may outlive the probe it served
+    assert all(not rec._sigwait and not rec._want_outcome
+               for rec in svc.recoveries)
+    assert all(not r.app.pending and not r.app.locks
+               for shard in svc.shards for r in shard.replicas)
 
 
 def test_committed_transaction_is_finished_forward():
@@ -320,6 +337,146 @@ def test_pool_reconfiguration_during_prepare():
     committed = _assert_not_torn(svc, cl, pairs)
     assert committed == len(pairs)
     _assert_shard_agreement(svc)
+
+
+# --------------------------------------------------------------------------
+# Byzantine clients / replicas against the 2PC plane (REVIEW hardening)
+# --------------------------------------------------------------------------
+def test_txids_are_owner_tagged_and_client_separated():
+    assert tx_owner_tag("kv/c0") != tx_owner_tag("kv/c1")
+    t = make_txid("kv/c0", 3, 99)
+    assert len(t) == TXID_LEN and t[:8] == tx_owner_tag("kv/c0")
+    assert make_txid("kv/c0", 3, 99) != make_txid("kv/c0", 3, 100)
+    # distinct service clients draw from distinct nonce streams
+    _sub, svc = _service()
+    a, b = svc.new_client(), svc.new_client()
+    assert a._tx_rng.getrandbits(64) != b._tx_rng.getrandbits(64)
+
+
+def test_request_rid_must_match_sender():
+    """REQ ingress authentication: a client cannot submit a request under
+    another client's rid — the basis of the DECIDE owner-binding."""
+    sub, svc = _service()
+    shard = svc.shards[0]
+    c1, c2 = shard.new_client(), shard.new_client()
+    r0 = shard.replicas[0]
+    forged = ((c1.pid, 77), set_req(b"zz", b"evil"))
+    for pid in shard.replica_pids:
+        c2.send(pid, "REQ", forged)
+    sub.sim.run(until=sub.sim.now + 30_000.0)
+    assert (c1.pid, 77) not in r0.pending_req
+    assert all(r.app.store.get(b"zz") is None for r in shard.replicas)
+    # the same rid from its real owner is served normally
+    box = {}
+    c1.request(set_req(b"zz", b"mine"), lambda res, _l: box.update(r=res))
+    assert sub.sim.run_until(lambda: "r" in box, timeout=1_000_000.0)
+    assert box["r"] == b"OK"
+
+
+def test_forged_commit_decide_cannot_tear_honest_transaction():
+    """The REVIEW's headline attack: a Byzantine client pre-sends
+    DECIDE(commit) for an honest client's upcoming txid (worst case: the
+    adversary somehow knows the txid, nonce included), then a participant
+    votes CONFLICT.  The commit must be refused — the honest client's
+    DECIDE(abort) finds no recorded outcome, records the abort, and
+    nothing tears."""
+    import random as _random
+
+    sub, svc = _service(tx_timeout_us=10_000.0)
+    cl, rogue, blocker = svc.new_client(), svc.new_client(), svc.new_client()
+    k0, k1 = _cross_pair(svc, 0)
+    # the adversary predicts the honest client's next txid exactly
+    peek = _random.Random()
+    peek.setstate(cl._tx_rng.getstate())
+    txid = make_txid(cl.shard_clients[0].pid, 0, peek.getrandbits(64))
+    # pre-send DECIDE(C) to the coordinator shard: refused, nothing recorded
+    box = {}
+    rogue.shard_clients[0].request(tdecide_req(txid, b"C"),
+                                   lambda res, _l: box.update(r=res))
+    assert sub.sim.run_until(lambda: "r" in box, timeout=1_000_000.0)
+    assert box["r"] == b"ERR_NOT_OWNER"
+    assert all(txid not in r.app.outcomes for r in svc.shards[0].replicas)
+    # force a CONFLICT vote on shard 1: blocker holds k1's lock mid-2PC
+    kb, _ = _cross_pair(svc, 9)
+    blocker.drop_decide = True
+    blocker.request(("mset", [(k1, b"B"), (kb, b"B")]))
+    sub.sim.run(until=sub.sim.now + 2_000.0)
+    # the honest MSET must abort cleanly — never read back the forged C
+    out = {}
+    cl.request(("mset", [(k0, b"t0"), (k1, b"t0")]),
+               lambda res, _l: out.update(r=res))
+    assert sub.sim.run_until(lambda: "r" in out, timeout=1_000_000.0)
+    assert out["r"] == b"ABORTED"
+    assert svc.shards[0].replicas[0].app.outcomes.get(txid) == b"A"
+    assert _assert_not_torn(svc, cl, {0: (k0, k1)}) == 0
+    sub.sim.run(until=sub.sim.now + 50_000.0)   # blocker tx presumed-aborted
+    _assert_shard_agreement(svc)
+
+
+def test_byzantine_leader_cannot_forge_recovery_finish():
+    """A Byzantine participant-shard leader proposes a recovery FINISH(C)
+    with a garbage outcome certificate while the real outcome is still
+    undecided.  Honest replicas must refuse to certify the slot (the
+    certificate does not verify), the leader loses its view, and recovery
+    aborts the transaction — no partial commit."""
+    sub, svc = _service(cfg=_slow_cfg(), seed=37, n_pools=2,
+                        tx_timeout_us=40_000.0)
+    cl = svc.new_client()
+    k0, k1 = _cross_pair(svc, 6)
+    cl.drop_decide = True           # outcome never decided by the client
+    cl.request(("mset", [(k0, b"t6"), (k1, b"t6")]))
+    shard = svc.shards[1]
+    lead = shard.replicas[0]
+    assert sub.sim.run_until(lambda: bool(lead.app.pending),
+                             timeout=1_000_000.0)
+    txid = next(iter(lead.app.pending))
+    fake_cert = tuple((pid, b"\x00" * 64)
+                      for pid in svc.shards[0].replica_pids[:2])
+    lead._enqueue_proposal((("svc", "tfin", txid, b"C"), "",
+                            rfinish_req(txid, b"C", fake_cert)))
+    sub.sim.run(until=sub.sim.now + 250_000.0)
+    cl.drop_decide = False
+    # the forged commit never executed anywhere; presumed-abort won
+    assert all(r.app.finished.get(txid) == b"A" for r in shard.replicas)
+    assert svc.shards[0].replicas[0].app.outcomes.get(txid) == b"A"
+    assert _assert_not_torn(svc, cl, {6: (k0, k1)}) == 0
+    assert svc.run_op(cl, ("set", k1, b"after"))[0] == b"OK"
+    _assert_shard_agreement(svc)
+
+
+def test_recovery_survives_replacing_prepared_replicas():
+    """REVIEW medium: after a PREPARE locks keys, every replica that
+    executed it is replaced or crashed.  The joiners — armed from their
+    adopted snapshots via the replace/activation hooks — must still run
+    presumed-abort recovery and release the locks."""
+    sub, svc = _service(cfg=_slow_cfg(), seed=41, n_pools=2,
+                        tx_timeout_us=60_000.0)
+    cl = svc.new_client()
+    k0, k1 = _cross_pair(svc, 7)
+    cl.drop_decide = True
+    cl.request(("mset", [(k0, b"t7"), (k1, b"t7")]))
+    shard = svc.shards[1]
+    assert sub.sim.run_until(
+        lambda: sum(1 for r in shard.replicas if r.app.pending) == 3,
+        timeout=1_000_000.0)
+    # replace two replicas in sequence (one replacement in flight at a time)
+    shard.replicas[1].crash()
+    j1 = shard.replace_replica(shard.replicas[1].pid)
+    assert j1 is not None
+    assert sub.sim.run_until(lambda: not j1.joining, timeout=3_000_000.0)
+    shard.replicas[2].crash()
+    j2 = shard.replace_replica(shard.replicas[2].pid)
+    assert j2 is not None
+    assert sub.sim.run_until(lambda: not j2.joining, timeout=3_000_000.0)
+    # the last original executor of the PREPARE dies: only the joiners'
+    # snapshot-adopted recovery timers can release the locks now
+    shard.replicas[0].crash()
+    sub.sim.run(until=sub.sim.now + 400_000.0)
+    cl.drop_decide = False
+    assert _assert_not_torn(svc, cl, {7: (k0, k1)}) == 0
+    assert all(not r.app.pending and not r.app.locks
+               for r in shard.replicas if not r.crashed)
+    assert svc.run_op(cl, ("set", k1, b"after"))[0] == b"OK"
 
 
 def test_scenario_spec_with_seeded_fault_schedule():
