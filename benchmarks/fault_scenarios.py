@@ -9,6 +9,10 @@ the 1 MiB Table 2 budget).  Every run also re-checks the safety
 invariants: all acknowledged writes present on every live replica, no
 divergence between replica stores.
 
+A final *chatter gate* replays a replica crash+recover episode and then
+measures network-wide idle message counts: retransmission towards the
+recovered replica must quiesce (ISSUE 7), not ping at the rto forever.
+
 Usage:  PYTHONPATH=src:. python benchmarks/fault_scenarios.py [--smoke]
 """
 
@@ -81,6 +85,54 @@ def _check_safety(cluster, acked):
         assert p.memory_bytes() < POOL_BUDGET, p.name
 
 
+def _chatter_point(seed: int = 9, n_reqs: int = 12) -> dict:
+    """Regression gate for ISSUE 7's quiesce bug: after a replica
+    crash+recover episode the cluster must go *quiet* — TBcast
+    retransmission towards the recovered replica has to drain once it
+    re-acks, instead of pinging every rto forever.  Measures the
+    network-wide message count over two idle windows long after the
+    workload completes; the second window must not exceed the first
+    (steady-state background only) and must stay under an absolute lid.
+    """
+    cfg = ConsensusConfig(t=16, window=16, slow_mode="always",
+                          ctb_fast_enabled=False,
+                          view_timeout_us=20_000.0)
+    acked = {}
+
+    def payload(i):
+        k, v = b"k%d" % (i % 8), b"v%d" % i
+        acked[k] = v
+        return set_req(k, v)
+
+    res = run_scenario(ScenarioSpec(
+        n_pools=2, seed=seed,
+        faults=lambda substrate: (FaultSchedule()
+                                  .add(800.0, "crash", "r2")
+                                  .add(2000.0, "recover", "r2")),
+        apps=[AppSpec(name="", app=KVStoreApp, cfg=cfg,
+                      workload=Workload(kind="closed", n_requests=n_reqs,
+                                        payload_fn=payload,
+                                        timeout_us=600_000_000))]))
+    cluster = res.clusters[""]
+    _check_safety(cluster, acked)
+    sim, net = cluster.sim, cluster.net
+    sim.run(until=sim.now + 200_000.0)       # settle past any backoff tail
+    windows = []
+    for _ in range(2):
+        before = net.msgs_sent
+        sim.run(until=sim.now + 100_000.0)
+        windows.append(net.msgs_sent - before)
+    w1, w2 = windows
+    emit("faults.chatter.idle_msgs_per_100ms", w2, f"w1={w1}")
+    assert w2 <= max(w1, 8), (
+        f"idle chatter still growing after crash+recover: "
+        f"window1={w1} window2={w2} msgs/100ms")
+    assert w2 <= 50, (
+        f"idle chatter too high after crash+recover: {w2} msgs/100ms — "
+        f"retransmission towards the recovered replica did not quiesce")
+    return {"idle_window1_msgs": w1, "idle_window2_msgs": w2}
+
+
 def run(seeds=(0, 1, 2), n_reqs=40) -> dict:
     out = {}
     for name, make in SCENARIOS.items():
@@ -114,6 +166,7 @@ def run(seeds=(0, 1, 2), n_reqs=40) -> dict:
             emit(f"faults.{name}.s{seed}.p50", pcts["p50"],
                  f"p99={pcts['p99']:.1f} faults={len(res.injector.log)} "
                  f"reconf={reconf} pool={pool / 1024:.1f}KiB")
+    out[("chatter", 9)] = _chatter_point()
     return out
 
 

@@ -15,6 +15,13 @@ the keyspace across K groups on ONE substrate.  Three sweeps:
   remaining ROADMAP work, is the answer; this sweep is its baseline).
 * **cross_shard** — 2PC MSETs spanning two shards: commit latency vs the
   single-shard MSET fast path, plus the abort rate under key contention.
+* **split** — the knee's answer (ISSUE 7): the same Zipf skew under an
+  open-loop rate that *ramps* (a rush), and mid-run the hot shard is
+  *split* into a freshly attached group while it is still healthy.  Two
+  byte-identical arrival schedules, static K vs live split: the static
+  hot shard is carried past its saturation cliff by the ramp; the split
+  run sheds the range first.  The hot-shard population's late-window
+  p99 must improve ≥3×.
 
 Usage:  PYTHONPATH=src:. python benchmarks/sharded.py [--smoke]
 """
@@ -22,6 +29,8 @@ Usage:  PYTHONPATH=src:. python benchmarks/sharded.py [--smoke]
 from __future__ import annotations
 
 import sys
+
+import numpy as np
 
 from benchmarks.common import emit, percentiles, tune_runtime
 from repro.core.consensus import ConsensusConfig
@@ -37,6 +46,19 @@ KNEE_K = 4
 DURATION_US = 4_000.0
 CLIENTS_PER_SHARD = 8
 ZIPF_RATE_RPS = 1_200_000.0    # aggregate; ~comfortable for 4 uniform shards
+
+SPLIT_THETA = 1.2
+SPLIT_DURATION_US = 8_000.0
+SPLIT_AT_US = 1_500.0          # act while the hot shard is still healthy
+SPLIT_LATE_US = 5_500.0        # tail measured once the rush has arrived
+#: the offered load ramps linearly (a "rush"): the static hot shard is
+#: pushed past its saturation cliff mid-run, the split run sheds the
+#: range before the rush peaks
+SPLIT_RATE0_RPS = 800_000.0
+SPLIT_RATE1_RPS = 1_400_000.0
+SMOKE_SPLIT_DURATION_US = 5_000.0
+SMOKE_SPLIT_AT_US = 1_000.0
+SMOKE_SPLIT_LATE_US = 3_500.0
 
 
 def _cfg() -> ConsensusConfig:
@@ -120,7 +142,95 @@ def _cross_shard_point(n_tx: int = 200) -> dict:
             "cross_shard_p99_us": percentiles(cross)["p99"]}
 
 
-def run(scale_sweep=SCALE_SWEEP, thetas=THETAS) -> dict:
+def _split_run(do_split: bool, duration_us: float, late_us: float,
+               split_at_us: float, seed: int = 5) -> dict:
+    """One open-loop Zipf run under a ramping rate; optionally split the
+    hot shard mid-run.
+
+    The arrival schedule (times, keys, client assignment) is generated
+    up-front from a fixed RNG, so the static and split runs see a
+    byte-identical offered load — the only difference is the reshard.
+    The rate ramps linearly from ``SPLIT_RATE0_RPS`` to ``SPLIT_RATE1_RPS``
+    over the run (an inhomogeneous Poisson process, drawn by inverting
+    the cumulative intensity): the split fires while the hot shard is
+    still healthy, and the static arm is carried past its saturation
+    cliff by the rush.
+    """
+    from repro.core.substrate import Substrate
+    from repro.service import ShardedService
+
+    sub = Substrate(f_m=1, n_pools=N_POOLS, seed=seed)
+    svc = ShardedService.attach(sub, n_shards=KNEE_K, cfg=_cfg())
+
+    rng = np.random.default_rng(11)
+    r0 = SPLIT_RATE0_RPS / 1e6          # ops per µs at t=0
+    r1 = SPLIT_RATE1_RPS / 1e6
+    slope = (r1 - r0) / duration_us
+    lam_total = (r0 + r1) / 2.0 * duration_us
+    lam = np.cumsum(rng.exponential(1.0, size=int(lam_total * 1.1) + 100))
+    lam = lam[lam <= lam_total]
+    # invert Λ(t) = r0·t + slope·t²/2 for each arrival
+    times = (np.sqrt(r0 * r0 + 2.0 * slope * lam) - r0) / slope
+    n_ops = len(times)
+    p = np.arange(1, KEYSPACE + 1, dtype=float) ** -SPLIT_THETA
+    key_idx = rng.choice(KEYSPACE, size=n_ops, p=p / p.sum())
+    keys = [b"k%03d" % i for i in key_idx]
+    home = {k: svc.router.shard_of(k) for k in set(keys)}
+    by_shard: dict = {}
+    for k in keys:
+        by_shard[home[k]] = by_shard.get(home[k], 0) + 1
+    hot = max(by_shard, key=by_shard.get)
+
+    clients = [svc.new_client() for _ in range(CLIENTS_PER_SHARD)]
+    samples: list = []          # (issue_time, initial_shard, latency)
+
+    def issue(i: int, t: float, k: bytes) -> None:
+        def done(result: bytes, lat: float) -> None:
+            samples.append((t, home[k], lat))
+        clients[i % len(clients)].request(("set", k, b"v%d" % i), done)
+
+    for i, (t, k) in enumerate(zip(times, keys)):
+        sub.sim.at(float(t), lambda i=i, t=float(t), k=k: issue(i, t, k))
+    split_done: dict = {}
+    if do_split:
+        sub.sim.at(split_at_us, lambda: svc.split_shard(
+            hot, when_done=lambda: split_done.setdefault("t", sub.sim.now)))
+    ok = sub.sim.run_until(lambda: len(samples) == n_ops,
+                           timeout=duration_us + 2_000_000.0)
+    assert ok, f"only {len(samples)}/{n_ops} ops completed"
+    if do_split:
+        assert split_done and split_done["t"] < late_us, \
+            f"split not settled before the late window: {split_done}"
+        assert svc.router.n_shards == KNEE_K + 1
+
+    late_hot = [lat for (t, s, lat) in samples if t >= late_us and s == hot]
+    assert late_hot, "no late-window hot-shard samples"
+    pcts = percentiles(late_hot)
+    return {"hot_shard": hot, "hot_share": by_shard[hot] / n_ops,
+            "n_ops": n_ops, "split_done_us": split_done.get("t"),
+            "late_hot_p50_us": pcts["p50"], "late_hot_p99_us": pcts["p99"]}
+
+
+def _split_point(duration_us: float = SPLIT_DURATION_US,
+                 late_us: float = SPLIT_LATE_US,
+                 split_at_us: float = SPLIT_AT_US, min_gain: float = 3.0
+                 ) -> dict:
+    static = _split_run(False, duration_us, late_us, split_at_us)
+    live = _split_run(True, duration_us, late_us, split_at_us)
+    gain = static["late_hot_p99_us"] / max(live["late_hot_p99_us"], 1e-9)
+    out = {"static": static, "split": live, "hot_p99_gain": gain}
+    emit("sharded.split.hot_p99_gain", gain,
+         f"static={static['late_hot_p99_us']:.1f}us_"
+         f"split={live['late_hot_p99_us']:.1f}us_"
+         f"done_at={live['split_done_us']:.0f}us")
+    assert gain >= min_gain, (
+        f"mid-run hot-shard split improved late-window p99 only "
+        f"{gain:.2f}x (static {static['late_hot_p99_us']:.1f}us vs "
+        f"split {live['late_hot_p99_us']:.1f}us)")
+    return out
+
+
+def run(scale_sweep=SCALE_SWEEP, thetas=THETAS, smoke: bool = False) -> dict:
     tune_runtime()
     out: dict = {"scaling": {}, "zipf": {}}
 
@@ -166,11 +276,19 @@ def run(scale_sweep=SCALE_SWEEP, thetas=THETAS) -> dict:
     emit("sharded.cross_shard.p50_us", cs["cross_shard_p50_us"],
          f"single_shard={cs['single_shard_p50_us']:.1f}us_"
          f"aborts={cs['aborts']}/{cs['n_tx']}")
+
+    if smoke:
+        out["split"] = _split_point(duration_us=SMOKE_SPLIT_DURATION_US,
+                                    late_us=SMOKE_SPLIT_LATE_US,
+                                    split_at_us=SMOKE_SPLIT_AT_US,
+                                    min_gain=1.5)
+    else:
+        out["split"] = _split_point()
     return out
 
 
 if __name__ == "__main__":
     smoke = "--smoke" in sys.argv
     run(scale_sweep=SMOKE_SCALE_SWEEP if smoke else SCALE_SWEEP,
-        thetas=SMOKE_THETAS if smoke else THETAS)
-    print("sharded: scaling + knee + cross-shard checks passed")
+        thetas=SMOKE_THETAS if smoke else THETAS, smoke=smoke)
+    print("sharded: scaling + knee + cross-shard + split checks passed")

@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import hashlib
 import struct
+import zlib
 from typing import Dict, List, Tuple
 
 from repro.core.consensus import App
@@ -268,6 +269,168 @@ def parse_tprep(req: bytes):
     return txid, float(deadline), coord, pairs
 
 
+# --------------------------------------------------------------------------
+# Keyrange handoff (shard split/merge) — ISSUE 7
+# --------------------------------------------------------------------------
+#: range header: modulus(4) + residue(4) + target shard(2) + router epoch(4)
+_RANGE_HDR = struct.Struct("<IIHI")
+_RANGE_KEY = struct.Struct("<II")      # modulus + residue
+_RB_LEN = struct.Struct("<H")          # 2-byte framing for range blobs
+
+
+def key_in_range(key: bytes, mod: int, res: int) -> bool:
+    """Does ``key`` fall in the (modulus, residue) crc32 range?  The same
+    function the router's table lookup applies — replicas and routers must
+    agree bit-for-bit on range membership."""
+    return zlib.crc32(key) % mod == res
+
+
+def freeze_req(mod: int, res: int, target: int, repoch: int) -> bytes:
+    """FREEZE a key range ahead of its handoff: from this slot on, writes
+    and new PREPAREs touching the range bounce deterministically
+    (``b"FROZEN"`` / VOTE_CONFLICT) while reads keep being served — the
+    range's data has not moved yet."""
+    return b"B" + _RANGE_HDR.pack(mod, res, target, repoch)
+
+
+def capture_req(mod: int, res: int) -> bytes:
+    """CAPTURE a frozen, drained range: record the range's store pairs as
+    an outbound snapshot at this exact log position (identical on every
+    replica — it feeds the transfer fingerprint)."""
+    return b"T" + _RANGE_KEY.pack(mod, res)
+
+
+def _encode_cert(cert: Tuple[Tuple[str, bytes], ...]) -> bytes:
+    """(pid, sig) entries, 1-byte-count framed — the certificate format
+    shared by recovery FINISH, range ADOPT and range CUT slots."""
+    assert len(cert) <= MAX_LEN
+    out = bytes([len(cert)])
+    for pid, sig in cert:
+        p = pid.encode()
+        assert len(p) <= MAX_LEN and len(sig) == SIG_LEN
+        out += bytes([len(p)]) + p + sig
+    return out
+
+
+def _parse_cert(req: bytes, off: int):
+    """(((pid, sig), ...), next_off) or None on any length mismatch."""
+    if off >= len(req):
+        return None
+    n = req[off]
+    off += 1
+    cert = []
+    for _ in range(n):
+        if off >= len(req):
+            return None
+        plen = req[off]
+        pid = req[off + 1:off + 1 + plen]
+        off += 1 + plen
+        if len(pid) != plen:
+            return None
+        sig = req[off:off + SIG_LEN]
+        off += SIG_LEN
+        if len(sig) != SIG_LEN:
+            return None
+        cert.append((pid.decode(), sig))
+    return tuple(cert), off
+
+
+def cut_req(mod: int, res: int, target: int, repoch: int,
+            cert: Tuple[Tuple[str, bytes], ...] = ()) -> bytes:
+    """CUT a transferred range: drop its keys from the store, record the
+    handoff (subsequent ops answer ``b"MOVED"+target``), and commit the
+    router epoch bump into this shard's log.  ``cert`` carries f+1
+    target-shard signatures over ``("adopted", mod, res, repoch)`` —
+    checked at the svc endorsement gate, so a Byzantine leader cannot
+    delete a range that no shard has adopted."""
+    return b"X" + _RANGE_HDR.pack(mod, res, target, repoch) + \
+        _encode_cert(cert)
+
+
+def parse_cut(req: bytes):
+    """(mod, res, target, repoch, cert) of a CUT, or None."""
+    if req[:1] != b"X" or len(req) < 1 + _RANGE_HDR.size:
+        return None
+    mod, res, target, repoch = _RANGE_HDR.unpack_from(req, 1)
+    parsed = _parse_cert(req, 1 + _RANGE_HDR.size)
+    if parsed is None or parsed[1] != len(req):
+        return None
+    return mod, res, target, repoch, parsed[0]
+
+
+def _range_blob(pairs: List[Tuple[bytes, bytes]]) -> bytes:
+    """2-byte-framed pair encoding for range transfer (a captured range
+    may exceed the 1-byte MSET framing limits)."""
+    out = _RB_LEN.pack(len(pairs))
+    for k, v in pairs:
+        out += _RB_LEN.pack(len(k)) + k + _RB_LEN.pack(len(v)) + v
+    return out
+
+
+def _parse_range_blob(req: bytes, off: int):
+    """((pairs...), next_off) or None on any length mismatch."""
+    if off + _RB_LEN.size > len(req):
+        return None
+    (n,) = _RB_LEN.unpack_from(req, off)
+    off += _RB_LEN.size
+    pairs = []
+    for _ in range(n):
+        if off + _RB_LEN.size > len(req):
+            return None
+        (klen,) = _RB_LEN.unpack_from(req, off)
+        off += _RB_LEN.size
+        key = req[off:off + klen]
+        off += klen
+        if len(key) != klen or off + _RB_LEN.size > len(req):
+            return None
+        (vlen,) = _RB_LEN.unpack_from(req, off)
+        off += _RB_LEN.size
+        value = req[off:off + vlen]
+        off += vlen
+        if len(value) != vlen:
+            return None
+        pairs.append((key, value))
+    return tuple(pairs), off
+
+
+def range_fp(mod: int, res: int, repoch: int,
+             pairs: Tuple[Tuple[bytes, bytes], ...]) -> bytes:
+    """Fingerprint of a captured range — what the source replicas sign
+    (``("resh", mod, res, repoch, fp)``) and the adopt slot's certificate
+    attests to."""
+    h = hashlib.sha256(_RANGE_KEY.pack(mod, res) + struct.pack("<I", repoch))
+    for k, v in pairs:
+        h.update(_RB_LEN.pack(len(k)) + k + _RB_LEN.pack(len(v)) + v)
+    return h.digest()
+
+
+def adopt_req(mod: int, res: int, src_shard: int, repoch: int,
+              pairs: Tuple[Tuple[bytes, bytes], ...],
+              cert: Tuple[Tuple[str, bytes], ...]) -> bytes:
+    """ADOPT a transferred range at the target shard: install the pairs.
+    Carries the f+1 source-shard signatures over the range fingerprint —
+    verified at the consensus layer's svc endorsement gate (like a
+    recovery FINISH's outcome certificate), so a Byzantine leader cannot
+    plant forged keys via a fabricated adopt slot."""
+    return (b"J" + _RANGE_HDR.pack(mod, res, src_shard, repoch) +
+            _range_blob(list(pairs)) + _encode_cert(cert))
+
+
+def parse_adopt(req: bytes):
+    """(mod, res, src_shard, repoch, pairs, cert) of an ADOPT, or None."""
+    if req[:1] != b"J" or len(req) < 1 + _RANGE_HDR.size:
+        return None
+    mod, res, src_shard, repoch = _RANGE_HDR.unpack_from(req, 1)
+    parsed = _parse_range_blob(req, 1 + _RANGE_HDR.size)
+    if parsed is None:
+        return None
+    pairs, off = parsed
+    certp = _parse_cert(req, off)
+    if certp is None or certp[1] != len(req):
+        return None
+    return mod, res, src_shard, repoch, pairs, certp[0]
+
+
 class ShardKVApp(KVStoreApp):
     """One shard of the partitioned keyspace: the plain kvstore plus the
     replicated 2PC state of in-flight cross-shard transactions.
@@ -296,6 +459,17 @@ class ShardKVApp(KVStoreApp):
         self.outcomes: Dict[bytes, bytes] = {}
         #: txid -> outcome applied at this shard (idempotent re-FINISH)
         self.finished: Dict[bytes, bytes] = {}
+        # ---- keyrange handoff state (shard split/merge, ISSUE 7) ----
+        #: frozen ranges awaiting handoff: (mod, res) -> (target, repoch)
+        self.moving: Dict[Tuple[int, int], Tuple[int, int]] = {}
+        #: captured outbound snapshots: (mod, res) -> ((key, value), ...)
+        self.outbound: Dict[Tuple[int, int], tuple] = {}
+        #: completed handoffs: (mod, res) -> target shard (MOVED bounces)
+        self.handoff: Dict[Tuple[int, int], int] = {}
+        #: ranges this shard adopted: (mod, res) -> router epoch
+        self.adopted: Dict[Tuple[int, int], int] = {}
+        #: highest router epoch committed into this shard's log
+        self.router_epoch = 0
 
     # ------------------------------------------------------------- apply
     def apply_from(self, caller: str, req: bytes) -> bytes:
@@ -313,6 +487,21 @@ class ShardKVApp(KVStoreApp):
             return self._tdecide(req)
         if op == b"F":
             return self._tfinish(req)
+        if op == b"B":
+            return self._freeze(req)
+        if op == b"T":
+            return self._capture(req)
+        if op == b"X":
+            return self._cut(req)
+        if op == b"J":
+            return self._adopt_range(req)
+        if op == b"G":
+            state = self._range_state(req[1:])
+            if state is not None and state[0] == "moved":
+                # a GET for a handed-off key must *redirect*, never serve a
+                # stale miss — the key may exist at the target
+                return b"MOVED" + struct.pack("<H", state[1])
+            return super().apply(req)
         if op == b"R":
             # recovery FINISH: the outcome certificate was verified by the
             # consensus layer before this slot could be certified; here it
@@ -334,6 +523,111 @@ class ShardKVApp(KVStoreApp):
             return self._locked_write(req)
         return super().apply(req)
 
+    # ----------------------------------------------------- range handoff
+    def _range_state(self, key: bytes):
+        """("moved", target) / ("frozen", target) / None for ``key``.
+        A product of this shard's log (freeze/cut slots), so identical on
+        every replica at the same log position."""
+        if self.handoff:
+            h = zlib.crc32(key)
+            for (m, r), tgt in self.handoff.items():
+                if h % m == r:
+                    return ("moved", tgt)
+        if self.moving:
+            h = zlib.crc32(key)
+            for (m, r), (tgt, _e) in self.moving.items():
+                if h % m == r:
+                    return ("frozen", tgt)
+        return None
+
+    def _write_bounce(self, keys) -> bytes:
+        """The deterministic bounce for a write touching a frozen or
+        handed-off range (b"" = no bounce).  Writes are refused during the
+        whole freeze window — unlike reads, which this shard keeps serving
+        until the cut — so the captured snapshot can never miss a write."""
+        for k in keys:
+            state = self._range_state(k)
+            if state is None:
+                continue
+            if state[0] == "moved":
+                return b"MOVED" + struct.pack("<H", state[1])
+            return b"FROZEN"
+        return b""
+
+    def _freeze(self, req: bytes) -> bytes:
+        if len(req) != 1 + _RANGE_HDR.size:
+            return b"ERR"
+        mod, res, target, repoch = _RANGE_HDR.unpack_from(req, 1)
+        if mod < 1:
+            return b"ERR"
+        key = (mod, res)
+        if key in self.handoff or key in self.moving:
+            return b"OK"    # idempotent replay
+        self.moving[key] = (target, repoch)
+        return b"OK"
+
+    def _capture(self, req: bytes) -> bytes:
+        if len(req) != 1 + _RANGE_KEY.size:
+            return b"ERR"
+        mod, res = _RANGE_KEY.unpack_from(req, 1)
+        key = (mod, res)
+        if key in self.outbound:
+            return b"OK"    # idempotent replay: keep the first capture
+        if key not in self.moving:
+            return b"ERR"   # capture without a freeze is never legal
+        if any(key_in_range(k, mod, res) for k in self.locks):
+            # an in-flight transaction prepared under the old epoch still
+            # holds in-range locks: it must finish at *this* shard before
+            # the range snapshot is fixed (the control plane drains and
+            # retries — this guard keeps the invariant deterministic)
+            return b"BUSY"
+        self.outbound[key] = tuple(sorted(
+            (k, v) for k, v in self.store.items()
+            if key_in_range(k, mod, res)))
+        return b"OK"
+
+    def _cut(self, req: bytes) -> bytes:
+        parsed = parse_cut(req)
+        if parsed is None:
+            return b"ERR"
+        mod, res, target, repoch, _cert = parsed
+        key = (mod, res)
+        if key in self.handoff:
+            return b"OK"    # idempotent replay
+        if key not in self.outbound:
+            return b"ERR"   # cut before capture would lose the range
+        for k in [k for k in self.store if key_in_range(k, mod, res)]:
+            del self.store[k]
+        self.moving.pop(key, None)
+        self.outbound.pop(key, None)
+        # the range is leaving: a stale adoption marker from an earlier
+        # epoch must not suppress a future re-adoption of the same range
+        self.adopted.pop(key, None)
+        self.handoff[key] = target
+        self.router_epoch = max(self.router_epoch, repoch)
+        return b"OK"
+
+    def _adopt_range(self, req: bytes) -> bytes:
+        parsed = parse_adopt(req)
+        if parsed is None:
+            return b"ERR"
+        mod, res, _src_shard, repoch, pairs, _cert = parsed
+        key = (mod, res)
+        if self.adopted.get(key) == repoch:
+            # idempotent replay — epoch-keyed, because the same range may
+            # leave (cut) and come back under a later epoch
+            return b"OK"
+        for k, v in pairs:
+            self.store[k] = v
+        self.adopted[key] = repoch
+        # the range is ours again: drop the MOVED marker a previous
+        # outbound handoff of this same range left behind (split → merge
+        # back), or every in-range op bounces to a shard that no longer
+        # owns it
+        self.handoff.pop(key, None)
+        self.router_epoch = max(self.router_epoch, repoch)
+        return b"OK"
+
     def _locked_write(self, req: bytes) -> bytes:
         if req[:1] == b"S":
             if len(req) < 2:
@@ -342,12 +636,18 @@ class ShardKVApp(KVStoreApp):
             key = req[2:2 + klen]
             if len(key) != klen:
                 return b"ERR"
+            bounce = self._write_bounce((key,))
+            if bounce:
+                return bounce
             if key in self.locks:
                 return b"LOCKED"
             return super().apply(req)
         pairs = _decode_pairs(req, 1)
         if pairs is None:
             return b"ERR"
+        bounce = self._write_bounce(k for k, _v in pairs)
+        if bounce:
+            return bounce
         if any(k in self.locks for k, _v in pairs):
             return b"LOCKED"
         return super().apply(req)
@@ -362,6 +662,11 @@ class ShardKVApp(KVStoreApp):
             return prior                       # idempotent re-PREPARE
         if self.finished.get(txid) is not None:
             return VOTE_CONFLICT               # already finished (aborted)
+        if any(self._range_state(k) is not None for k, _v in pairs):
+            # a PREPARE that would lock a frozen or handed-off range loses
+            # without being recorded: the coordinator presumes abort, the
+            # client re-splits against the new routing table and retries
+            return VOTE_CONFLICT
         if any(self.locks.get(k, txid) != txid for k, _v in pairs):
             self.votes[txid] = VOTE_CONFLICT   # a losing vote never locks
             return VOTE_CONFLICT
@@ -423,13 +728,24 @@ class ShardKVApp(KVStoreApp):
                 tuple(sorted(self.pending.items())),
                 tuple(sorted(self.votes.items())),
                 tuple(sorted(self.outcomes.items())),
-                tuple(sorted(self.finished.items())))
+                tuple(sorted(self.finished.items())),
+                tuple(sorted(self.moving.items())),
+                tuple(sorted(self.outbound.items())),
+                tuple(sorted(self.handoff.items())),
+                tuple(sorted(self.adopted.items())),
+                self.router_epoch)
 
     def adopt(self, snap) -> None:
-        store, locks, pending, votes, outcomes, finished = snap
+        (store, locks, pending, votes, outcomes, finished,
+         moving, outbound, handoff, adopted, repoch) = snap
         self.store = dict(store)
         self.locks = dict(locks)
         self.pending = dict(pending)
         self.votes = dict(votes)
         self.outcomes = dict(outcomes)
         self.finished = dict(finished)
+        self.moving = dict(moving)
+        self.outbound = dict(outbound)
+        self.handoff = dict(handoff)
+        self.adopted = dict(adopted)
+        self.router_epoch = repoch

@@ -8,7 +8,7 @@ model), and a message dispatch table.
 from __future__ import annotations
 
 from heapq import heappush as _heappush
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 from repro.core import crypto
 from repro.sim.events import Process, Simulator
@@ -25,6 +25,13 @@ class Node(Process):
         self.registry = registry
         self.signer = registry.keygen(pid)
         self._dispatch: Dict[str, Callable[[str, Any], None]] = {}
+        #: called (in registration order) every time this node transitions
+        #: crashed -> recovered.  Timer-driven subsystems register here to
+        #: re-arm state whose pending timers fired (and were swallowed, or
+        #: deliberately no-op'd) while the node was down — e.g. TBcast's
+        #: ack/RTO flags, which would otherwise strand retransmission
+        #: forever (see core/tbcast.py).
+        self.recover_hooks: List[Callable[[], None]] = []
         # Subclasses overriding on_message (interceptors, Byzantine
         # adversaries) must keep receiving messages even though the fast
         # deliver() path below inlines the dispatch-table lookup.
@@ -130,6 +137,14 @@ class Node(Process):
         q = self.netp.bg_quantum_us
         delay = q - (self.sim.now % q)
         self.timer(delay, cb)
+
+    # -- crash / recovery ----------------------------------------------------
+    def recover(self) -> None:
+        was_crashed = self.crashed
+        super().recover()
+        if was_crashed:
+            for hook in list(self.recover_hooks):
+                hook()
 
     # -- timers --------------------------------------------------------------
     def timer(self, delay: float, cb: Callable[[], None], note: str = "") -> None:

@@ -661,13 +661,18 @@ class RegisterClient:
     def n_shards(self) -> int:
         return len(self.pools)
 
-    def pool_for(self, owner: str, reg: str):
+    def pool_for(self, owner: str, reg: str,
+                 namespace: Optional[str] = None):
         """Stable shard routing of register keys across pools.  Namespaced
         clients hash ``app:owner:reg`` so each application's keys spread
-        independently; the unnamed app hashes the legacy ``owner:reg``."""
+        independently; the unnamed app hashes the legacy ``owner:reg``.
+        ``namespace`` overrides the client's own namespace — a reader in
+        one application following a register written under another's
+        namespace (shard split/merge range transfer) must route with the
+        *writer's* namespace or it consults the wrong pool."""
         if len(self.pools) == 1:
             return self.pools[0]
-        ns = self.namespace
+        ns = self.namespace if namespace is None else namespace
         key = f"{ns}:{owner}:{reg}" if ns else f"{owner}:{reg}"
         h = zlib.crc32(key.encode())
         return self.pools[h % len(self.pools)]
@@ -731,29 +736,33 @@ class RegisterClient:
 
     # -------------------------------------------------------------- READ
     def read(self, owner: str, reg: str,
-             cb: Callable[[Optional[Tuple[int, bytes]], bool], None]) -> None:
+             cb: Callable[[Optional[Tuple[int, bytes]], bool], None],
+             namespace: Optional[str] = None) -> None:
         """READ ``owner``'s register.  cb(value, owner_is_byzantine) where
-        value is (ts, bytes) or None (default value ⊥)."""
+        value is (ts, bytes) or None (default value ⊥).  ``namespace``
+        routes the read under another application's namespace (see
+        :meth:`pool_for`)."""
         if self.node.sim.tracing:
             t0 = self.node.sim.now
             inner_cb = cb
             def cb(val, byz):
                 self.node.sim.trace.append(("smwr", t0, self.node.sim.now))
                 inner_cb(val, byz)
-        self._start_read(owner, reg, cb, attempt=1)
+        self._start_read(owner, reg, cb, attempt=1, namespace=namespace)
 
-    def _start_read(self, owner: str, reg: str, cb, attempt: int) -> None:
+    def _start_read(self, owner: str, reg: str, cb, attempt: int,
+                    namespace: Optional[str] = None) -> None:
         self.stats["read_attempts"] += 1
         self._token += 1
         tok = self._token
         self._pending[tok] = {
             "kind": "r", "resps": [], "cb": cb, "done": False,
             "start": self.node.sim.now, "owner": owner, "reg": reg,
-            "attempt": attempt,
+            "attempt": attempt, "ns": namespace,
         }
         body = (owner, reg, tok)
         size = crypto.wire_size_shallow(body) + 24  # len("REG_READ") + 16
-        for m in self.pool_for(owner, reg).members:
+        for m in self.pool_for(owner, reg, namespace).members:
             self.node.send(m, "REG_READ", body, size=size)
 
     def _on_read_ack(self, src: str, body: Any) -> None:
@@ -796,7 +805,8 @@ class RegisterClient:
                 if st["attempt"] < MAX_READ_ATTEMPTS:
                     self.stats["read_retries"] += 1
                     self._start_read(st["owner"], st["reg"], st["cb"],
-                                     st["attempt"] + 1)
+                                     st["attempt"] + 1,
+                                     namespace=st.get("ns"))
                 else:
                     self.stats["reads_exhausted"] += 1
                     st["cb"](None, False)

@@ -96,6 +96,10 @@ class Cluster:
     replica_cls: Any = None
     #: replicas retired by an epoch switch (control-plane bookkeeping)
     retired_replicas: List[UbftReplica] = field(default_factory=list)
+    #: set when a shard merge retires this whole group: it stays attached
+    #: (recorded 2PC outcomes must remain probeable) but owns no key range
+    #: and receives no fresh client traffic
+    retired: bool = False
     #: (sim time, old_pid, new_pid) per initiated replacement
     replacements: List[Tuple[float, str, str]] = field(default_factory=list)
     #: called with ``(old_replica, joiner)`` at the end of every

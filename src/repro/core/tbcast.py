@@ -19,6 +19,34 @@ FIFO skip-ahead at the receiver when the sender's window has moved on (the
 Memory accounting (Table 2): each stream×peer connection owns ``t`` wire
 slots plus a ``t``-deep staging buffer, each slot sized for the largest
 message — exposed through :meth:`TBcastService.memory_bytes`.
+
+Ack/RTO timer lifecycle across crashes
+--------------------------------------
+Both coarse timers are guarded by a *pending* flag (``ack_pending`` on the
+receive side, ``rto_pending`` on the send side) so at most one timer per
+state is ever in flight.  The flags therefore carry a liveness obligation:
+whoever sets one must guarantee the matching ``_fire`` eventually clears
+it, **including across a crash+recover of this node** (crash-recover
+preserves all state — §2's crash-recovery processes).  The rules:
+
+* timers are scheduled on the raw simulator (``sim.after``), *not* through
+  ``Node.timer``: the fire always runs, clears its pending flag first, and
+  only then checks ``crashed`` before acting.  A fire during the crash
+  window is thus a flag reset, never an ack/retransmission — a crashed
+  node stays silent, but cannot strand its own bookkeeping.
+* a ``Node.recover_hooks`` entry (:meth:`TBcastService._on_recover`)
+  re-arms whatever the crash window dropped: receive states with
+  undelivered acks schedule a fresh ack (so live senders' retransmission
+  loops quiesce as soon as the node returns), and send states with live
+  unacked window entries re-arm their RTO (a crash between fires would
+  otherwise leave the window un-retransmitted until an unrelated broadcast
+  happened to land on the same stream).
+* retransmission to an unresponsive peer decays: every RTO fire that
+  retransmits without intervening ack progress doubles the next interval
+  (bounded by ``2^rto_backoff_max``); any ack progress resets the interval
+  to ``rto_us``.  Steady-state chatter toward a crashed/partitioned peer
+  is therefore bounded instead of a full-window resend every ``rto_us``
+  forever.
 """
 
 from __future__ import annotations
@@ -41,6 +69,9 @@ class _SendState:
     next_k: int = 0
     acked: int = -1         # highest contiguously acked k
     rto_pending: bool = False
+    backoff: int = 0        # consecutive no-progress RTO fires (exponent)
+    rto_gen: int = 0        # invalidates superseded in-flight RTO timers
+    rto_at: float = 0.0     # when the pending RTO fire is scheduled
 
 
 @dataclass
@@ -57,12 +88,17 @@ class TBcastService:
     """Multiplexes tail-broadcast streams for one node."""
 
     def __init__(self, node: Node, t: int, rto_us: float = 60.0,
-                 ack_interval_us: float = 40.0, max_msg_bytes: int = 4096):
+                 ack_interval_us: float = 40.0, max_msg_bytes: int = 4096,
+                 rto_backoff_max: int = 6):
         self.node = node
         self.t = t
         self.rto_us = rto_us
         self.ack_interval_us = ack_interval_us
         self.max_msg_bytes = max_msg_bytes
+        #: cap on the no-progress backoff exponent: the retransmission
+        #: interval to an unresponsive peer decays to 2^max × rto_us and
+        #: stays there (bounded — the peer may yet recover)
+        self.rto_backoff_max = rto_backoff_max
         self._send: Dict[Tuple[str, str], _SendState] = {}   # (stream, dst)
         self._recv: Dict[Tuple[str, str], _RecvState] = {}   # (origin, stream)
         self._handlers: List[Tuple[str, Callable[[str, str, int, Any], None]]] = []
@@ -70,6 +106,7 @@ class TBcastService:
         self._conns: set = set()
         node.handle("TB", self._on_tb)
         node.handle("TB_ACK", self._on_ack)
+        node.recover_hooks.append(self._on_recover)
 
     # ------------------------------------------------------------------ API
     def register(self, prefix: str,
@@ -116,10 +153,13 @@ class TBcastService:
                 del st.window[oldest]
                 st.min_k = min(st.window)
             # inlined _ship + the _arm_rto guard (hot loop: one frame per
-            # destination otherwise)
+            # destination otherwise).  The second disjunct catches a stale
+            # long-backoff timer outliving an ack-progress reset: fresh
+            # traffic then supersedes it instead of waiting out the decay.
             node.net.send(node.pid, dst,
                           ("TB", (stream, k, st.min_k, payload)), size)
-            if not st.rto_pending:
+            if (not st.rto_pending or
+                    st.rto_at > node.sim.now + self.rto_us * (1 << st.backoff)):
                 self._arm_rto(stream, dst, st)
 
     def drop_peer(self, pid: str) -> None:
@@ -153,21 +193,43 @@ class TBcastService:
                  st: Optional[_SendState] = None) -> None:
         if st is None:
             st = self._send[(stream, dst)]
-        if st.rto_pending:
+        delay = self.rto_us * (1 << st.backoff)
+        due = self.node.sim.now + delay
+        if st.rto_pending and st.rto_at <= due:
             return
+        # either nothing pending, or the pending fire sits further out than
+        # the current backoff warrants (it was armed under a higher exponent
+        # before an ack reset it): supersede the old timer via the
+        # generation counter — simulator timers cannot be cancelled
         st.rto_pending = True
+        st.rto_at = due
+        st.rto_gen += 1
+        gen = st.rto_gen
 
         def _fire() -> None:
+            if gen != st.rto_gen:
+                return      # superseded by a re-arm with a shorter delay
+            # the flag reset must survive a crash window (see the module
+            # docstring's timer-lifecycle rules): clear first, then gate
+            # the actual retransmission on liveness.  Recovery re-arms.
             st.rto_pending = False
+            if self.node.crashed:
+                return
             live = {k: v for k, v in st.window.items() if k > st.acked}
             if not live:
+                st.backoff = 0
                 return
             st.min_k = min(st.window) if st.window else st.next_k
             for k in sorted(live):
                 self._ship(stream, dst, st, k, live[k])
+            # no ack progress since the last fire (an ack would have reset
+            # the exponent): decay the next interval instead of flooding a
+            # dead peer with a full-window resend every rto_us forever
+            if st.backoff < self.rto_backoff_max:
+                st.backoff += 1
             self._arm_rto(stream, dst)
 
-        self.node.timer(self.rto_us, _fire)
+        self.node.sim.after(delay, _fire)
 
     # ------------------------------------------------------------- receive
     def _on_tb(self, src: str, body: Any) -> None:
@@ -235,22 +297,48 @@ class TBcastService:
         rs.ack_pending = True
 
         def _fire() -> None:
+            # clear the flag unconditionally — a fire swallowed whole by a
+            # crash guard used to strand ack_pending=True forever, leaving
+            # every live sender retransmitting its window to this replica
+            # indefinitely after recovery (duplicates with k < next_k hit
+            # the pending-flag early-return above and never re-acked)
             rs.ack_pending = False
+            if self.node.crashed:
+                return      # stay silent; _on_recover re-arms if needed
             rs.last_acked = rs.next_k - 1
             self.node.send(origin, "TB_ACK", (stream, rs.last_acked))
 
-        self.node.timer(self.ack_interval_us, _fire)
+        self.node.sim.after(self.ack_interval_us, _fire)
 
     def _on_ack(self, src: str, body: Any) -> None:
         stream, upto = body
         st = self._send.get((stream, src))
         if st is None:
             return
+        if upto > st.acked:
+            st.backoff = 0      # ack progress: retransmission back to rto_us
         st.acked = max(st.acked, upto)
         for k in [k for k in st.window if k <= st.acked]:
             del st.window[k]
         if st.window:
             st.min_k = min(st.window)
+
+    # ------------------------------------------------------------- recovery
+    def _on_recover(self) -> None:
+        """Re-arm timer-driven state after a crash+recover of this node.
+
+        Crash-recover preserves all broadcast state, but any ack/RTO fire
+        that landed inside the crash window only reset its pending flag —
+        the ack was never sent and the RTO chain was not re-armed.  On the
+        receive side that leaves live senders retransmitting to us until we
+        ack again; on the send side it leaves unacked window entries that
+        would only be retransmitted if a fresh broadcast happened to land
+        on the same stream.  Both are quiesced here."""
+        for (origin, stream), rs in self._recv.items():
+            self._maybe_ack(origin, stream, rs)
+        for (stream, dst), st in self._send.items():
+            if any(k > st.acked for k in st.window):
+                self._arm_rto(stream, dst, st)
 
     # ---------------------------------------------------------- accounting
     def memory_bytes(self) -> int:

@@ -372,7 +372,8 @@ def run_scenario(spec: ScenarioSpec) -> ScenarioResult:
         if not isinstance(sched, FaultSchedule):
             sched = FaultSchedule(sched)
         injector = FaultInjector(sim, substrate.net, substrate.pools,
-                                 clusters=clusters).install(sched)
+                                 clusters=clusters,
+                                 services=substrate.services).install(sched)
 
     runs: Dict[str, _WorkloadRun] = {}
     for a in spec.apps:

@@ -57,11 +57,14 @@ from __future__ import annotations
 
 import hashlib
 import random
+import struct
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from repro.apps.kvstore import (TXID_LEN, VOTE_OK, ShardKVApp, get_req,
-                                make_txid, mset_req, parse_rfinish,
-                                parse_tprep, rfinish_req, set_req,
+from repro.apps.kvstore import (TXID_LEN, VOTE_OK, ShardKVApp, adopt_req,
+                                capture_req, cut_req, freeze_req, get_req,
+                                key_in_range, make_txid, mset_req,
+                                parse_adopt, parse_cut, parse_rfinish,
+                                parse_tprep, range_fp, rfinish_req, set_req,
                                 tdecide_req, tfinish_req, tprep_req)
 from repro.core import crypto
 from repro.core.consensus import App, ConsensusConfig, UbftReplica
@@ -93,6 +96,16 @@ class ServiceClient:
     #: (before FINISH) — recovery must then abort / finish-forward
     drop_decide = False
     drop_finish = False
+    #: routing-bounce handling (live split/merge): how many FROZEN/MOVED
+    #: bounces one op survives before the bounce is surfaced to the
+    #: caller, and how long to wait before re-routing.  FROZEN retries
+    #: back off exponentially (capped): a freeze lasts as long as the
+    #: range transfer, and every premature retry is a full consensus slot
+    #: on the very shard the transfer is trying to drain — flat retries
+    #: turn a hot-shard split into a self-inflicted retry storm
+    max_route_retries = 64
+    retry_delay_us = 150.0
+    retry_backoff_max = 5          # cap the FROZEN delay at 150µs · 2^5
 
     def __init__(self, service: "ShardedService", pid: str):
         self.service = service
@@ -112,29 +125,91 @@ class ServiceClient:
         self.latencies: List[float] = []
 
     # ------------------------------------------------------------ routing
+    def _client_for(self, shard: int):
+        """Per-shard uBFT client, grown lazily — a split minting shard
+        index K+1 after this ServiceClient was created must still be
+        reachable without re-creating the client."""
+        while shard >= len(self.shard_clients):
+            self.shard_clients.append(
+                self.service.shards[len(self.shard_clients)].new_client())
+        return self.shard_clients[shard]
+
     def request(self, op: tuple,
-                cb: Optional[Callable[[bytes, float], None]] = None) -> None:
+                cb: Optional[Callable[[bytes, float], None]] = None,
+                _attempt: int = 0, _t0: Optional[float] = None) -> None:
         kind = op[0]
         if kind == "get":
-            return self._one(self.router.shard_of(op[1]), get_req(op[1]), cb)
+            return self._one(self.router.shard_of(op[1]), get_req(op[1]), cb,
+                             op=op, attempt=_attempt, t0=_t0)
         if kind == "set":
             return self._one(self.router.shard_of(op[1]),
-                             set_req(op[1], op[2]), cb)
+                             set_req(op[1], op[2]), cb,
+                             op=op, attempt=_attempt, t0=_t0)
         if kind == "mset":
             by_shard = self.router.split(list(op[1]))
             if len(by_shard) == 1:
                 ((s, pairs),) = by_shard.items()
-                return self._one(s, mset_req(pairs), cb)
+                return self._one(s, mset_req(pairs), cb,
+                                 op=op, attempt=_attempt, t0=_t0)
             return self._mset_2pc(by_shard, cb)
         raise ValueError(f"unknown service op {kind!r}")
 
     def _one(self, shard: int, payload: bytes,
-             cb: Optional[Callable[[bytes, float], None]]) -> None:
+             cb: Optional[Callable[[bytes, float], None]],
+             op: Optional[tuple] = None, attempt: int = 0,
+             t0: Optional[float] = None) -> None:
+        if t0 is None:
+            t0 = self.sim.now
+
         def done(result: bytes, lat: float) -> None:
-            self.latencies.append(lat)
+            # live split/merge bounces: a shard that froze or handed off
+            # the key's range answers deterministically; re-route rather
+            # than surface the bounce (until the retry budget runs out)
+            if op is not None and attempt < self.max_route_retries:
+                if result == b"FROZEN":
+                    # The range still lives at this shard but is
+                    # write-locked for transfer.  Do NOT poll: every
+                    # premature retry costs the *source* shard a consensus
+                    # slot, and on a hot shard that surge is what pushes
+                    # the queue past the §5.4 direct-copy horizon (where
+                    # every slot decays to the slow-path kick).  Wait for
+                    # the router-epoch bump that ends the transfer, with a
+                    # capped-exponential timer as the fallback for a
+                    # crashed control plane.
+                    fired: dict = {}
+
+                    def go() -> None:
+                        if fired:
+                            return
+                        fired["x"] = 1
+                        self.request(op, cb, _attempt=attempt + 1, _t0=t0)
+
+                    delay = self.retry_delay_us * (
+                        2 ** min(attempt, self.retry_backoff_max))
+                    self.service._epoch_waiters.append(go)
+                    self.sim.after(delay, go)
+                    return
+                if result[:5] == b"MOVED" and len(result) == 7:
+                    (tgt,) = struct.unpack("<H", result[5:])
+                    if op[0] in ("get", "set"):
+                        # the reply names the adopting shard: chase it
+                        # directly — the shared routing table may not have
+                        # committed the epoch bump yet
+                        self._one(tgt, payload, cb, op=op,
+                                  attempt=attempt + 1, t0=t0)
+                    else:
+                        # multi-key op: re-split via the routing table
+                        self.sim.after(
+                            self.retry_delay_us,
+                            lambda: self.request(op, cb,
+                                                 _attempt=attempt + 1,
+                                                 _t0=t0))
+                    return
+            end_lat = lat if attempt == 0 else self.sim.now - t0
+            self.latencies.append(end_lat)
             if cb is not None:
-                cb(result, lat)
-        self.shard_clients[shard].request(payload, done)
+                cb(result, end_lat)
+        self._client_for(shard).request(payload, done)
 
     # -------------------------------------------------------- 2PC phases
     def _mset_2pc(self, by_shard: Dict[int, list],
@@ -146,7 +221,7 @@ class ServiceClient:
         # this client's per-coordinator-shard uBFT client.  The consensus
         # layer authenticates that pid on every request (rid/client/sender
         # binding), so only *this* client can ever record a commit
-        owner = self.shard_clients[coord].pid
+        owner = self._client_for(coord).pid
         txid = make_txid(owner, self._txseq, self._tx_rng.getrandbits(64))
         self._txseq += 1
         deadline = t0 + self.service.tx_timeout_us
@@ -160,7 +235,7 @@ class ServiceClient:
             return done
 
         for s in shards:
-            self.shard_clients[s].request(
+            self._client_for(s).request(
                 tprep_req(txid, deadline, coord, by_shard[s]), vote(s))
 
     def _decide(self, txid: bytes, shards: List[int], coord: int,
@@ -177,8 +252,8 @@ class ServiceClient:
             outcome = result[-1:] if result[:3] == b"OUT" else b"A"
             self._finish(txid, shards, outcome, cb, t0)
 
-        self.shard_clients[coord].request(tdecide_req(txid, proposed),
-                                          decided)
+        self._client_for(coord).request(tdecide_req(txid, proposed),
+                                         decided)
 
     def _finish(self, txid: bytes, shards: List[int], outcome: bytes,
                 cb: Optional[Callable[[bytes, float], None]],
@@ -196,7 +271,7 @@ class ServiceClient:
                     cb(b"OK" if outcome == b"C" else b"ABORTED", lat)
 
         for s in shards:
-            self.shard_clients[s].request(tfinish_req(txid, outcome), done)
+            self._client_for(s).request(tfinish_req(txid, outcome), done)
 
 
 class _TxRecovery:
@@ -452,6 +527,27 @@ class ShardedService:
         #: every live recovery instance (originals + joiners), for
         #: observability and bounded-state assertions in tests
         self.recoveries: List[_TxRecovery] = []
+        #: shard indices retired by a merge — still attached (in-flight
+        #: 2PC outcome records must stay probeable) but unroutable
+        self.retired: set = set()
+        #: (sim time, kind, src_idx, dst_idx, ranges, router_epoch) per
+        #: completed reshard operation
+        self.reshards: List[tuple] = []
+        #: (sim time, phase) per transfer state transition of the current
+        #: reshard — where a split spends its time under load
+        self.reshard_trace: List[tuple] = []
+        #: clients parked on a FROZEN bounce, woken when the router epoch
+        #: bumps (instead of polling the frozen shard with retry slots)
+        self._epoch_waiters: List[Callable[[], None]] = []
+        #: one reshard in flight at a time (the control plane serialises
+        #: epoch bumps; concurrent splits would race on the router table)
+        self.resharding = False
+        # retained so split_shard can attach new groups with the same
+        # shape as the original fleet (set by attach())
+        self._app_factory: Callable[[], App] = ShardKVApp
+        self._cfg: Optional[Any] = None
+        self._budget: int = POOL_MEMORY_BUDGET
+        self._pools: Optional[Any] = None
 
     @classmethod
     def attach(cls, substrate: Substrate, n_shards: int, name: str = "kv",
@@ -482,20 +578,441 @@ class ShardedService:
                 cfg=(cfg(i) if callable(cfg) else cfg), budget=budget, **kw))
         svc = cls(substrate, name, shards, router, tx_timeout_us,
                   tx_secret=tx_secret)
+        svc._app_factory = app
+        svc._cfg = cfg
+        svc._budget = budget
+        svc._pools = pools
         for i, cluster in enumerate(shards):
-            for idx, r in enumerate(cluster.replicas):
-                svc.recoveries.append(
-                    _TxRecovery(svc, i, r, stagger_us=200.0 + 150.0 * idx))
-            # membership epoch switches must not shrink the recovery
-            # fleet: every joiner gets its own recovery instance, which
-            # arms probes for snapshot-adopted intents on activation
-            cluster.replace_hooks.append(
-                lambda _old, joiner, _i=i, _c=cluster:
-                svc.recoveries.append(_TxRecovery(
-                    svc, _i, joiner,
-                    stagger_us=200.0 + 150.0 * _c.replicas.index(joiner))))
+            svc._wire_shard(i, cluster)
         substrate.services[name] = svc
         return svc
+
+    def _wire_shard(self, idx: int, cluster: Cluster) -> None:
+        """Attach the service-layer per-replica machinery to one shard:
+        2PC recovery timers and the reshard-slot endorsement validators."""
+        for ridx, r in enumerate(cluster.replicas):
+            self.recoveries.append(
+                _TxRecovery(self, idx, r, stagger_us=200.0 + 150.0 * ridx))
+            self._install_reshard_validators(r)
+        # membership epoch switches must not shrink the recovery
+        # fleet: every joiner gets its own recovery instance, which
+        # arms probes for snapshot-adopted intents on activation
+        def on_replace(_old, joiner, _i=idx, _c=cluster):
+            self.recoveries.append(_TxRecovery(
+                self, _i, joiner,
+                stagger_us=200.0 + 150.0 * _c.replicas.index(joiner)))
+            self._install_reshard_validators(joiner)
+        cluster.replace_hooks.append(on_replace)
+
+    # ------------------------------------------- reshard slot endorsement
+    def _install_reshard_validators(self, replica: UbftReplica) -> None:
+        v = replica.svc_validators
+        v["sfreeze"] = self._freeze_certifiable
+        v["scap"] = self._capture_certifiable
+        v["scut"] = (lambda rid, payload, _r=replica:
+                     self._cut_certifiable(rid, payload, _r))
+        v["radopt"] = (lambda rid, payload, _r=replica:
+                       self._adopt_certifiable(rid, payload, _r))
+
+    @staticmethod
+    def _range_rid_ok(fields) -> bool:
+        """Shared well-formedness guard: a Byzantine leader controls rid
+        contents, so every field is type- and bounds-checked before it
+        reaches a struct.pack."""
+        return (all(isinstance(x, int) and not isinstance(x, bool)
+                    for x in fields)
+                and 1 <= fields[0] < 2 ** 32          # modulus
+                and 0 <= fields[1] < fields[0])        # residue
+
+    @classmethod
+    def _freeze_certifiable(cls, rid: tuple, payload: Any) -> bool:
+        """``("svc","sfreeze", mod, res, target, repoch)`` — exact
+        payload match.  A forged freeze is a pure liveness attack (writes
+        to the range bounce until an operator intervenes, costing the
+        Byzantine leader its view); it can never lose or plant data, so
+        framing is the whole check."""
+        if len(rid) != 6 or not cls._range_rid_ok(rid[2:]):
+            return False
+        mod, res, target, repoch = rid[2:]
+        if not (0 <= target < 2 ** 16 and 0 <= repoch < 2 ** 32):
+            return False
+        return payload == freeze_req(mod, res, target, repoch)
+
+    @classmethod
+    def _capture_certifiable(cls, rid: tuple, payload: Any) -> bool:
+        """``("svc","scap", mod, res, repoch)`` — exact payload match;
+        the state machine refuses a capture without a prior freeze."""
+        if len(rid) != 5 or not cls._range_rid_ok(rid[2:4]):
+            return False
+        mod, res, repoch = rid[2:]
+        if not (isinstance(repoch, int) and 0 <= repoch < 2 ** 32):
+            return False
+        return payload == capture_req(mod, res)
+
+    def _cut_certifiable(self, rid: tuple, payload: Any,
+                         replica: UbftReplica) -> bool:
+        """``("svc","scut", mod, res, target, repoch)``: endorsed only
+        with f+1 target-shard signatures over ``("adopted", ...)`` in the
+        payload — the cut deletes the range at the source, so it must be
+        provably preceded by a committed adoption, or a Byzantine leader
+        could destroy data with a forged freeze/capture/cut sequence."""
+        if len(rid) != 6 or not self._range_rid_ok(rid[2:]):
+            return False
+        mod, res, target, repoch = rid[2:]
+        if not (0 <= target < 2 ** 16 and 0 <= repoch < 2 ** 32):
+            return False
+        if not isinstance(payload, bytes):
+            return False
+        parsed = parse_cut(payload)
+        if parsed is None or parsed[:4] != (mod, res, target, repoch):
+            return False
+        if not 0 <= target < len(self.shards):
+            return False
+        tgt = self.shards[target]
+        members = set(tgt.replica_pids)
+        need = tgt.replicas[0].f + 1
+        good = {pid for pid, sig in parsed[4]
+                if pid in members and replica.registry.verify(
+                    pid, ("adopted", mod, res, repoch), sig)}
+        return len(good) >= need
+
+    def _adopt_certifiable(self, rid: tuple, payload: Any,
+                           replica: UbftReplica) -> bool:
+        """``("svc","radopt", src_idx, mod, res, repoch)``: endorsed only
+        when the payload's pairs match its fingerprint and f+1 *source*
+        shard members signed ``("resh", mod, res, repoch, fp)`` — so a
+        Byzantine leader of the adopting shard cannot plant forged keys
+        via a fabricated adopt slot (mirrors the recovery FINISH's
+        outcome certificate)."""
+        if len(rid) != 6:
+            return False
+        src_idx, mod, res, repoch = rid[2:]
+        if not all(isinstance(x, int) and not isinstance(x, bool)
+                   for x in rid[2:]):
+            return False
+        if not isinstance(payload, bytes):
+            return False
+        parsed = parse_adopt(payload)
+        if parsed is None or parsed[:4] != (mod, res, src_idx, repoch):
+            return False
+        if not 0 <= src_idx < len(self.shards):
+            return False
+        pairs, cert = parsed[4], parsed[5]
+        fp = range_fp(mod, res, repoch, pairs)
+        src = self.shards[src_idx]
+        members = set(src.replica_pids)
+        need = src.replicas[0].f + 1
+        good = {pid for pid, sig in cert
+                if pid in members and replica.registry.verify(
+                    pid, ("resh", mod, res, repoch, fp), sig)}
+        return len(good) >= need
+
+    # ------------------------------------------------------- split / merge
+    #: control-plane poll cadence (µs) while a reshard is in flight.  The
+    #: cadence bounds the freeze window: while a range is frozen its
+    #: writes bounce, and every bounce costs the *source* shard a
+    #: consensus slot — on a hot shard a leisurely control plane lets
+    #: that surge push the queue past the §5.4 direct-copy horizon, where
+    #: every slot decays to the slow-path kick.  Microsecond polls keep
+    #: the whole transfer well under that cliff.
+    _POLL_US = 25.0
+    #: register re-read cadence (µs) while a target replica waits for f+1
+    #: matching published ranges
+    _PULL_RETRY_US = 150.0
+
+    def split_shard(self, idx: int,
+                    when_done: Optional[Callable[[], None]] = None) -> int:
+        """Split shard ``idx``: attach a fresh 2f+1 group as shard
+        ``len(shards)`` and hand it the upper child of ``idx``'s coarsest
+        key range (``router.peek_split``).  Returns the new shard index
+        immediately; the transfer runs asynchronously (freeze → drain →
+        capture → publish via the shared pools → adopt → cut → router
+        epoch bump) — drive the simulator and watch ``reshards`` or pass
+        ``when_done``."""
+        if self.resharding:
+            raise RuntimeError("a reshard operation is already in flight")
+        if not 0 <= idx < len(self.shards) or idx in self.retired:
+            raise ValueError(f"cannot split shard {idx}")
+        self.resharding = True
+        rng = self.router.peek_split(idx)
+        new_idx = len(self.shards)
+        kw: Dict[str, Any] = {}
+        if self._pools is not None:
+            kw["pools"] = self._pools
+        cluster = Cluster.attach(
+            self.substrate, self._app_factory,
+            name=f"{self.name}/s{new_idx}",
+            cfg=(self._cfg(new_idx) if callable(self._cfg) else self._cfg),
+            budget=self._budget, **kw)
+        self.shards.append(cluster)
+        self._wire_shard(new_idx, cluster)
+        repoch = self.router.epoch + 1
+
+        def commit() -> None:
+            moved = self.router.commit_split(idx, new_idx)
+            assert moved == rng and self.router.epoch == repoch
+            self.reshards.append(
+                (self.sim.now, "split", idx, new_idx, (rng,), repoch))
+
+        self._move_ranges(idx, new_idx, [rng], repoch, commit, when_done)
+        return new_idx
+
+    def merge_shards(self, src_idx: int, dst_idx: int,
+                     when_done: Optional[Callable[[], None]] = None) -> None:
+        """Merge shard ``src_idx`` into ``dst_idx``: every range of the
+        source moves (same freeze/transfer/cut pipeline as a split, over
+        all of its ranges), then the source index is retired.  The
+        retired group stays attached — its 2PC outcome records must
+        remain probeable by recovery — but is unroutable from the table
+        on."""
+        if self.resharding:
+            raise RuntimeError("a reshard operation is already in flight")
+        if src_idx == dst_idx:
+            raise ValueError("merge needs two distinct shards")
+        for i in (src_idx, dst_idx):
+            if not 0 <= i < len(self.shards) or i in self.retired:
+                raise ValueError(f"cannot merge shard {i}")
+        self.resharding = True
+        ranges = self.router.ranges_of(src_idx)
+        repoch = self.router.epoch + 1
+
+        def commit() -> None:
+            self.router.commit_merge(src_idx, dst_idx)
+            assert self.router.epoch == repoch
+            self.retired.add(src_idx)
+            self.shards[src_idx].retired = True
+            self.reshards.append(
+                (self.sim.now, "merge", src_idx, dst_idx, tuple(ranges),
+                 repoch))
+
+        self._move_ranges(src_idx, dst_idx, ranges, repoch, commit,
+                          when_done)
+
+    # ------------------------------------------------ transfer state machine
+    def _live(self, cluster: Cluster) -> List[UbftReplica]:
+        return [r for r in cluster.replicas
+                if not r.crashed and not r.joining]
+
+    def _quorum(self, cluster: Cluster, pred) -> bool:
+        need = cluster.replicas[0].f + 1
+        return sum(1 for r in self._live(cluster) if pred(r)) >= need
+
+    def _poll(self, cond, then, tick=None) -> None:
+        def probe() -> None:
+            if tick is not None:
+                tick()
+            if cond():
+                then()
+            else:
+                self.sim.after(self._POLL_US, probe)
+        probe()
+
+    def _move_ranges(self, src_idx: int, dst_idx: int,
+                     ranges: List[Tuple[int, int]], repoch: int,
+                     commit: Callable[[], None],
+                     when_done: Optional[Callable[[], None]]) -> None:
+        """Drive one set of key ranges from ``src_idx`` to ``dst_idx``.
+
+        Every state transition is either a BFT slot in an affected
+        shard's log (freeze, capture, adopt, cut) or a write/read of the
+        shared register pools (the captured range travels the same
+        disaggregated-memory path as a membership state transfer); the
+        control plane itself only *observes* replica state and submits
+        the next slot — it holds no authority any replica trusts, so a
+        crashed control plane strands no shard in an unsafe state (a
+        frozen range is an availability, not a safety, condition)."""
+        src, dst = self.shards[src_idx], self.shards[dst_idx]
+        ranges = [tuple(rng) for rng in ranges]
+        self.reshard_trace = [(self.sim.now, "start")]
+        trace = lambda ph: self.reshard_trace.append((self.sim.now, ph))
+
+        def frozen(rep) -> bool:
+            return all((m, r) in rep.app.moving or (m, r) in rep.app.handoff
+                       for (m, r) in ranges)
+
+        def drained(rep) -> bool:
+            return not any(key_in_range(k, m, r)
+                           for (m, r) in ranges for k in rep.app.locks)
+
+        def captured(rep) -> bool:
+            return all((m, r) in rep.app.outbound
+                       or (m, r) in rep.app.handoff
+                       for (m, r) in ranges)
+
+        def adopted(rep) -> bool:
+            return all(rep.app.adopted.get((m, r)) == repoch
+                       for (m, r) in ranges)
+
+        def cut_done(rep) -> bool:
+            return all((m, r) in rep.app.handoff for (m, r) in ranges)
+
+        # 1. FREEZE every moving range: from that log position on, writes
+        #    and new PREPAREs bounce; reads are still served at the source
+        for (m, r) in ranges:
+            src.submit_internal(("svc", "sfreeze", m, r, dst_idx, repoch),
+                                freeze_req(m, r, dst_idx, repoch))
+
+        # 2. drain in-flight 2PC: transactions prepared under the old
+        #    epoch hold in-range locks and must finish at the source (the
+        #    freeze stops new in-range locks, recovery timers bound the
+        #    wait), then CAPTURE fixes the outbound snapshot in the log
+        def capture() -> None:
+            trace("drained")
+            for (m, r) in ranges:
+                src.submit_internal(("svc", "scap", m, r, repoch),
+                                    capture_req(m, r))
+            self._poll(lambda: self._quorum(src, captured), publish)
+
+        # 3. PUBLISH: each live source replica signs its (deterministic)
+        #    captured range and writes it into its own resh/ register —
+        #    the transfer rides the shared pools, not replica-to-replica
+        #    messages, exactly like a membership state transfer
+        published: set = set()
+
+        def publish_tick() -> None:
+            for rep in self._live(src):
+                for (m, r) in ranges:
+                    if ((rep.pid, m, r) in published
+                            or (m, r) not in rep.app.outbound):
+                        continue
+                    published.add((rep.pid, m, r))
+                    self._publish_range(rep, m, r, repoch)
+
+        def publish() -> None:
+            trace("captured")
+            publish_tick()
+            # 4. ADOPT: every live target replica pulls the range from
+            #    f+1 matching registers and proposes the adopt slot
+            for d in self._live(dst):
+                for (m, r) in ranges:
+                    self._pull_range(d, src, src_idx, m, r, repoch)
+            self._poll(lambda: self._quorum(dst, adopted), cut_phase,
+                       tick=publish_tick)
+
+        # 5. CUT: only after the adoption has provably committed at the
+        #    target (f+1 signatures ride the cut slot's certificate) does
+        #    the source drop the range and start answering MOVED
+        def cut_phase() -> None:
+            trace("adopted")
+            for (m, r) in ranges:
+                self._collect_adoption_cert(
+                    dst, m, r, repoch,
+                    lambda cert, m=m, r=r: src.submit_internal(
+                        ("svc", "scut", m, r, dst_idx, repoch),
+                        cut_req(m, r, dst_idx, repoch, cert)))
+            self._poll(lambda: self._quorum(src, cut_done), finish)
+
+        # 6. the router-table mutation commits last: every client routing
+        #    on the old table in the meantime was answered FROZEN/MOVED,
+        #    never with stale data
+        def finish() -> None:
+            trace("cut")
+            commit()
+            self.resharding = False
+            waiters, self._epoch_waiters = self._epoch_waiters, []
+            for w in waiters:
+                self.sim.after(0.0, w)
+            if when_done is not None:
+                when_done()
+
+        self._poll(lambda: self._quorum(src, frozen),
+                   lambda: (trace("frozen"),
+                            self._poll(lambda: self._quorum(src, drained),
+                                       capture))[-1])
+
+    def _publish_range(self, rep: UbftReplica, m: int, r: int,
+                       repoch: int) -> None:
+        pairs = rep.app.outbound[(m, r)]
+        fp = range_fp(m, r, repoch, pairs)
+
+        def signed(sig: bytes) -> None:
+            rep.regs.write(f"resh/{repoch}/{m}/{r}",
+                           crypto.encode((pairs, sig)), lambda: None)
+
+        rep.async_sign(("resh", m, r, repoch, fp), signed)
+
+    def _pull_range(self, d: UbftReplica, src_cluster: Cluster,
+                    src_idx: int, m: int, r: int, repoch: int) -> None:
+        """One target replica pulls a published range: read every source
+        replica's ``resh/`` register (routed under the *source* cluster's
+        namespace), verify each signature against the advertised pairs,
+        and propose the adopt slot once f+1 registers agree on one
+        fingerprint.  Retries on a timer until the adoption executes —
+        registers survive source-replica crashes, so f+1 completed
+        publishes are durable."""
+        reg = f"resh/{repoch}/{m}/{r}"
+        need = src_cluster.replicas[0].f + 1
+
+        def attempt() -> None:
+            if (d.crashed or d.joining
+                    or d.app.adopted.get((m, r)) == repoch):
+                return
+            got: Dict[str, tuple] = {}
+
+            def mk(pid: str):
+                def cb(val, _byz) -> None:
+                    if val is None or d.app.adopted.get((m, r)) == repoch:
+                        return
+                    try:
+                        pairs, sig = crypto.decode(val[1])
+                    except Exception:
+                        return      # torn/garbage blob: ignore this reader
+                    pairs = tuple((bytes(k), bytes(v)) for (k, v) in pairs)
+                    fp = range_fp(m, r, repoch, pairs)
+                    if not d.registry.verify(
+                            pid, ("resh", m, r, repoch, fp), sig):
+                        return
+                    got[pid] = (fp, pairs, sig)
+                    by_fp: Dict[bytes, list] = {}
+                    for p, (f_, pr, s) in got.items():
+                        by_fp.setdefault(f_, []).append((p, pr, s))
+                    for entries in by_fp.values():
+                        if len(entries) >= need:
+                            cert = tuple(sorted(
+                                (p, s) for p, _pr, s in entries))
+                            d.propose_internal(
+                                ("svc", "radopt", src_idx, m, r, repoch),
+                                adopt_req(m, r, src_idx, repoch,
+                                          entries[0][1], cert))
+                            return
+                return cb
+
+            for pid in src_cluster.replica_pids:
+                d.regs.read(pid, reg, mk(pid), namespace=src_cluster.name)
+            d.timer(self._PULL_RETRY_US, attempt)
+
+        attempt()
+
+    def _collect_adoption_cert(self, dst: Cluster, m: int, r: int,
+                               repoch: int, cb) -> None:
+        """Gather f+1 target-replica signatures over
+        ``("adopted", m, r, repoch)`` — the evidence the cut slot carries."""
+        need = dst.replicas[0].f + 1
+        sigs: Dict[str, Optional[bytes]] = {}
+        state = {"done": False}
+
+        def tick() -> None:
+            if state["done"]:
+                return
+            for d in self._live(dst):
+                if d.pid in sigs or d.app.adopted.get((m, r)) != repoch:
+                    continue
+                sigs[d.pid] = None      # signature in flight
+
+                def signed(sig: bytes, pid: str = d.pid) -> None:
+                    if state["done"]:
+                        return
+                    sigs[pid] = sig
+                    good = {p: s for p, s in sigs.items() if s is not None}
+                    if len(good) >= need:
+                        state["done"] = True
+                        cb(tuple(sorted(good.items())[:need]))
+
+                d.async_sign(("adopted", m, r, repoch), signed)
+            if not state["done"]:
+                self.sim.after(self._POLL_US, tick)
+
+        tick()
 
     # --------------------------------------------- Cluster-like interface
     @property

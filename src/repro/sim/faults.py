@@ -33,7 +33,7 @@ from typing import Any, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 ACTIONS = ("crash", "recover", "partition", "heal", "reconfigure",
-           "replace_replica", "stale_serve")
+           "replace_replica", "stale_serve", "reshard")
 
 
 @dataclass(frozen=True)
@@ -147,13 +147,16 @@ class FaultInjector:
     """
 
     def __init__(self, sim, net, pools: Sequence[Any] = (),
-                 clusters: Optional[dict] = None):
+                 clusters: Optional[dict] = None,
+                 services: Optional[dict] = None):
         self.sim = sim
         self.net = net
         self.pools = list(pools)
         #: app name -> Cluster, for ``replace_replica`` targets (the pid's
         #: ``app/`` prefix selects the cluster; "" is the unnamed app)
         self.clusters = dict(clusters or {})
+        #: service name -> ShardedService, for ``reshard`` targets
+        self.services = dict(services or {})
         self.log: List[Tuple[float, str, Any]] = []
         self.skipped: List[Tuple[float, str, Any]] = []
 
@@ -256,4 +259,26 @@ class FaultInjector:
         if bool(node.stale_serve) == bool(on):
             return False
         node.set_stale_serve(on)
+        return True
+
+    def _do_reshard(self, target: Any) -> bool:
+        """Live shard split/merge on a sharded service (the shard count
+        becomes a mid-run variable, like any other fault-schedule event):
+        ``(service, "split", idx)`` or ``(service, "merge", src, dst)``.
+        The operation is *initiated* here and completes asynchronously —
+        watch ``service.reshards``.  Skipped (returns False) when another
+        reshard is still in flight."""
+        name, kind = target[0], target[1]
+        svc = self.services.get(name)
+        if svc is None:
+            raise KeyError(f"no sharded service {name!r} for reshard "
+                           f"target {target!r}")
+        if svc.resharding:
+            return False
+        if kind == "split":
+            svc.split_shard(target[2])
+        elif kind == "merge":
+            svc.merge_shards(target[2], target[3])
+        else:
+            raise ValueError(f"unknown reshard kind {kind!r}")
         return True

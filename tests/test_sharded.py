@@ -524,3 +524,194 @@ def test_scenario_spec_with_seeded_fault_schedule():
                    timeout=5_000_000.0)
     res.substrate.sim.run(until=res.substrate.sim.now + 100_000.0)
     _assert_shard_agreement(svc)
+
+
+# --------------------------------------------------------------------------
+# Live shard split / merge (ISSUE 7)
+# --------------------------------------------------------------------------
+def test_router_split_and_merge_refine_the_table():
+    r = ShardRouter(2)
+    keys = [b"k%03d" % i for i in range(300)]
+    before = {k: r.shard_of(k) for k in keys}
+    rng = r.peek_split(0)
+    assert r.commit_split(0, 2) == rng and r.epoch == 1
+    assert r.n_shards == 3
+    for k in keys:
+        after = r.shard_of(k)
+        if after == 2:
+            assert before[k] == 0      # only shard 0's keys moved
+        else:
+            assert after == before[k]  # everyone else kept their home
+    assert [k for k in keys if r.shard_of(k) == 2], "split moved nothing"
+    # merging the new shard back restores the original binary partition
+    r.commit_merge(2, 0)
+    assert r.epoch == 2 and r.n_shards == 2
+    assert {k: r.shard_of(k) for k in keys} == before
+    assert sorted(r.table) == [(2, 0), (2, 1)]   # siblings coalesced
+
+
+def test_split_moves_range_and_preserves_every_key():
+    sub, svc = _service(n_shards=2, seed=31)
+    cl = svc.new_client()
+    keys = [b"k%03d" % i for i in range(40)]
+    for k in keys:
+        assert svc.run_op(cl, ("set", k, b"v-" + k))[0] == b"OK"
+    before = {k: svc.router.shard_of(k) for k in keys}
+    done = {}
+    new_idx = svc.split_shard(0, when_done=lambda: done.setdefault(
+        "t", sub.sim.now))
+    assert sub.sim.run_until(lambda: "t" in done, timeout=5_000_000.0), \
+        "split never completed"
+    assert svc.router.epoch == 1 and svc.router.n_shards == 3
+    assert len(svc.reshards) == 1 and svc.reshards[0][1] == "split"
+    # every key still readable with its exact value, wherever it now lives
+    for k in keys:
+        assert svc.run_op(cl, ("get", k))[0] == b"v-" + k
+    moved = [k for k in keys if svc.router.shard_of(k) == new_idx]
+    assert moved and all(before[k] == 0 for k in moved)
+    # the source really dropped the range (no stale shadow copy) and
+    # answers MOVED deterministically for it
+    src_app = svc.shards[0].replicas[0].app
+    assert not any(k in src_app.store for k in moved)
+    assert src_app.handoff and not src_app.moving and not src_app.outbound
+    # fresh writes land at the new home and are durable there
+    for k in moved[:3]:
+        assert svc.run_op(cl, ("set", k, b"w2"))[0] == b"OK"
+        assert svc.run_op(cl, ("get", k))[0] == b"w2"
+    assert any(k in svc.shards[new_idx].replicas[0].app.store
+               for k in moved)
+    sub.sim.run(until=sub.sim.now + 50_000.0)
+    _assert_shard_agreement(svc)
+
+
+def test_merge_returns_ranges_and_retires_source_shard():
+    sub, svc = _service(n_shards=2, seed=33)
+    cl = svc.new_client()
+    keys = [b"k%03d" % i for i in range(40)]
+    for k in keys:
+        assert svc.run_op(cl, ("set", k, b"v-" + k))[0] == b"OK"
+    done = {}
+    svc.merge_shards(1, 0, when_done=lambda: done.setdefault(
+        "t", sub.sim.now))
+    assert sub.sim.run_until(lambda: "t" in done, timeout=5_000_000.0), \
+        "merge never completed"
+    assert svc.router.n_shards == 1 and svc.router.epoch == 1
+    assert svc.retired == {1} and svc.shards[1].retired
+    for k in keys:
+        assert svc.router.shard_of(k) == 0
+        assert svc.run_op(cl, ("get", k))[0] == b"v-" + k
+    # a retired shard takes no fresh traffic but stays attached
+    assert len(svc.shards) == 2
+    for k in keys[:4]:
+        assert svc.run_op(cl, ("set", k, b"w2"))[0] == b"OK"
+    assert all(k in svc.shards[0].replicas[0].app.store for k in keys)
+    sub.sim.run(until=sub.sim.now + 50_000.0)
+    _assert_shard_agreement(svc)
+
+
+def test_split_then_merge_back_roundtrip():
+    """A range that leaves and comes back: split 0 -> new shard, then
+    merge the new shard straight back into 0.  The source's stale
+    ``handoff`` marker from the split's cut must be cleared by the
+    re-adoption — a roundtripped range that keeps answering MOVED (to a
+    now-retired shard) strands every key in it."""
+    sub, svc = _service(n_shards=2, seed=35)
+    cl = svc.new_client()
+    keys = [b"k%03d" % i for i in range(30)]
+    for k in keys:
+        assert svc.run_op(cl, ("set", k, b"v-" + k))[0] == b"OK"
+    done = {}
+    new = svc.split_shard(0, when_done=lambda: done.setdefault(
+        "s", sub.sim.now))
+    assert sub.sim.run_until(lambda: "s" in done, timeout=5_000_000.0), \
+        "split never completed"
+    svc.merge_shards(new, 0, when_done=lambda: done.setdefault(
+        "m", sub.sim.now))
+    assert sub.sim.run_until(lambda: "m" in done, timeout=5_000_000.0), \
+        "merge never completed"
+    assert svc.router.epoch == 2 and svc.retired == {new}
+    # every key is readable and writable at its (restored) home again
+    for k in keys:
+        assert svc.run_op(cl, ("get", k))[0] == b"v-" + k
+    for k in keys[:6]:
+        assert svc.run_op(cl, ("set", k, b"w-" + k))[0] == b"OK"
+        assert svc.run_op(cl, ("get", k))[0] == b"w-" + k
+    # the restored owner holds no stale MOVED marker for the range
+    for rep in svc.shards[0].replicas:
+        assert not rep.app.handoff and not rep.app.moving
+    sub.sim.run(until=sub.sim.now + 50_000.0)
+    _assert_shard_agreement(svc)
+
+
+def test_split_races_cross_shard_msets_without_tearing():
+    """The headline race: a split of the coordinator shard fires in the
+    middle of a cross-shard MSET stream.  Transactions prepared under the
+    old participant set must finish under it (the freeze drains them),
+    later ones bounce and abort cleanly — and no key pair is ever
+    GET-observable torn across the router epoch bump."""
+    sub, svc = _service(cfg=_slow_cfg(), seed=43, n_pools=2,
+                        tx_timeout_us=40_000.0)
+    cl = svc.new_client()
+    pairs = _drive_txs(sub, svc, cl, n_tx=8,
+                       mid_run=lambda: svc.split_shard(0), mid_at=500.0,
+                       timeout=20_000_000.0)
+    assert sub.sim.run_until(lambda: bool(svc.reshards),
+                             timeout=20_000_000.0), "split never completed"
+    sub.sim.run(until=sub.sim.now + 200_000.0)
+    assert svc.router.epoch == 1 and len(svc.shards) == 3
+    _assert_not_torn(svc, cl, pairs)
+    _assert_shard_agreement(svc)
+    # the split-off range's keys are served at exactly one shard
+    src_app = svc.shards[0].replicas[0].app
+    new_app = svc.shards[2].replicas[0].app
+    assert not (set(src_app.store) & set(new_app.store))
+
+
+def test_leader_crash_during_split_still_completes():
+    """Crash the source shard's leader while the freeze/capture slots are
+    in flight: the view change must re-route the reshard slots like any
+    pending request and the split must still complete without losing a
+    key."""
+    sub, svc = _service(cfg=_slow_cfg(), seed=47, n_pools=2,
+                        tx_timeout_us=40_000.0)
+    cl = svc.new_client()
+    keys = [b"k%03d" % i for i in range(24)]
+    for k in keys:
+        assert svc.run_op(cl, ("set", k, b"v-" + k),
+                          timeout=5_000_000.0)[0] == b"OK"
+    leader = svc.shards[0].replicas[0]
+    t0 = sub.sim.now
+    sub.sim.at(t0 + 100.0, lambda: svc.split_shard(0))
+    sub.sim.at(t0 + 300.0, leader.crash)
+    assert sub.sim.run_until(lambda: bool(svc.reshards),
+                             timeout=30_000_000.0), \
+        "split stalled on the crashed leader"
+    for k in keys:
+        assert svc.run_op(cl, ("get", k),
+                          timeout=5_000_000.0)[0] == b"v-" + k
+    leader.recover()
+    sub.sim.run(until=sub.sim.now + 300_000.0)
+    _assert_shard_agreement(svc)
+
+
+def test_reshard_rides_the_fault_schedule():
+    """``reshard`` is a first-class FaultEvent: a mid-run hot-shard split
+    driven declaratively through run_scenario, under a Zipf-keyed SET
+    workload."""
+    sched = FaultSchedule().add(1_500.0, "reshard", ("kv", "split", 0))
+    spec = ScenarioSpec(
+        apps=[], n_pools=2, seed=53, faults=sched, drain_us=200_000.0,
+        services=[ServiceSpec(
+            name="kv", n_shards=2, cfg=_slow_cfg(), tx_timeout_us=40_000.0,
+            workload=Workload(kind="closed", n_requests=30, n_clients=2,
+                              keyspace=32, zipf_theta=1.2, key_seed=59,
+                              payload_fn=lambda i, k: ("set", k, b"v%d" % i),
+                              timeout_us=120_000_000.0))])
+    res = run_scenario(spec)
+    assert res.apps["kv"].completed == 30
+    svc = res.substrate.services["kv"]
+    assert res.injector is not None and \
+        ("reshard" in {a for (_t, a, _x) in res.injector.log})
+    assert len(svc.shards) == 3 and svc.router.epoch == 1
+    assert svc.reshards and svc.reshards[0][1] == "split"
+    _assert_shard_agreement(svc)

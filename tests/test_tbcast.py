@@ -80,6 +80,99 @@ def test_sender_window_bounded():
         assert len(st.window) <= 2 * t
 
 
+def _count_tb(net, sim, counts):
+    """Wrap net.send to record (time, src, dst) of every TB frame."""
+    orig = net.send
+
+    def counting_send(src, dst, msg, size):
+        if msg[0] == "TB":
+            counts.append((sim.now, src, dst))
+        return orig(src, dst, msg, size)
+
+    net.send = counting_send
+
+
+def test_receiver_crash_recover_reacks_and_quiesces():
+    """A receiver that crashes with an ack pending must ack again after
+    recovery: the stranded ack_pending flag used to make every live sender
+    retransmit its window to the returned replica forever."""
+    sim, net, nodes = rig(n=2)
+    counts = []
+    _count_tb(net, sim, counts)
+    group = [n.pid for n in nodes]
+    for k in range(5):
+        nodes[0].tb.broadcast("s/x", k, f"m{k}".encode(), group)
+    assert sim.run_until(lambda: len(nodes[1].got) >= 5, timeout=5000)
+    # crash inside the ack window: the coarse ack timer is still pending
+    assert any(rs.ack_pending for rs in nodes[1].tb._recv.values())
+    nodes[1].crash()
+    sim.run(until=6000)     # sender retransmits into the void meanwhile
+    assert any(t > 3000 for (t, s, d) in counts if s == "n0" and d == "n1"), \
+        "test premise broken: no retransmission while receiver was down"
+    nodes[1].recover()
+    sim.run(until=8000)
+    st = nodes[0].tb._send[("s/x", "n1")]
+    assert not any(k > st.acked for k in st.window), \
+        "sender window never acked after receiver recovery"
+    late = [t for (t, s, d) in counts if s == "n0" and d == "n1" and t > 8000]
+    sim.run(until=20000)
+    late = [t for (t, s, d) in counts if s == "n0" and d == "n1" and t > 8000]
+    assert late == [], f"retransmission did not quiesce: {late[:5]}"
+
+
+def test_sender_crash_recover_rearms_rto():
+    """A sender that crashes while its RTO is pending must re-arm it on
+    recovery: its unacked window entries were only ever retransmitted again
+    if a fresh broadcast happened to land on the same stream."""
+    sim, net, nodes = rig(n=2)
+    nodes[1].crash()        # receiver down: no acks, RTO keeps the window
+    for k in range(3):
+        nodes[0].tb.broadcast("s/x", k, f"m{k}".encode(),
+                              [n.pid for n in nodes])
+    st = nodes[0].tb._send[("s/x", "n1")]
+    assert st.rto_pending
+    nodes[0].crash()        # the pending RTO fire lands inside the crash
+    sim.run(until=1000)
+    assert not st.rto_pending, "flag reset must survive the crash window"
+    nodes[1].recover()
+    sim.run(until=2000)
+    nodes[0].recover()      # recover hook re-arms the RTO for the window
+    sim.run(until=30000)
+    ks = sorted(k for (_o, k, _m) in nodes[1].got)
+    assert ks == [0, 1, 2], f"stranded sender never retransmitted: {ks}"
+
+
+def test_rto_backoff_decays_and_resets_on_ack():
+    """Retransmission to an unresponsive peer decays exponentially
+    (bounded), and any ack progress snaps the interval back to rto_us."""
+    sim, net, nodes = rig(n=2)
+    counts = []
+    _count_tb(net, sim, counts)
+    nodes[1].crash()
+    nodes[0].tb.broadcast("s/x", 0, b"m0", [n.pid for n in nodes])
+    sim.run(until=40000)
+    rto = nodes[0].tb.rto_us
+    cap = rto * (1 << nodes[0].tb.rto_backoff_max)
+    early = [t for (t, s, d) in counts if d == "n1" and t <= 1000]
+    late = [t for (t, s, d) in counts if d == "n1" and 20000 < t <= 40000]
+    assert len(early) >= 4, f"early retransmission too sparse: {early}"
+    assert len(late) <= 20000 / cap + 2, \
+        f"late retransmission did not decay: {len(late)} sends in 20ms"
+    st = nodes[0].tb._send[("s/x", "n1")]
+    assert st.backoff == nodes[0].tb.rto_backoff_max
+    nodes[1].recover()
+    assert sim.run_until(lambda: len(nodes[1].got) == 1, timeout=300000)
+    sim.run(until=sim.now + 200)    # let the coarse ack land
+    assert st.backoff == 0, "ack progress must reset the backoff"
+    # a fresh broadcast after the reset retransmits at full cadence again
+    nodes[1].crash()
+    t0 = sim.now
+    nodes[0].tb.broadcast("s/x", 1, b"m1", [n.pid for n in nodes])
+    sim.run(until=t0 + 1000)
+    fresh = [t for (t, s, d) in counts if d == "n1" and t > t0]
+    assert len(fresh) >= 4, f"backoff reset ineffective: {fresh}"
+
+
 def test_memory_accounting_scales_with_t():
     sim, net, nodes = rig(t=8)
     group = [n.pid for n in nodes]
