@@ -17,7 +17,11 @@ the dry-run artifacts (artifacts/dryrun/*.json) when present.
   the ``membership`` figure is run);
 * ``BENCH_sharded.json`` — sharded-service scale-out (K×load×Zipf sweep:
   uniform scaling curve, hot-shard p99 knee, cross-shard 2PC latency)
-  from ``benchmarks/sharded.py`` (when the ``sharded`` figure is run).
+  from ``benchmarks/sharded.py`` (when the ``sharded`` figure is run);
+* ``BENCH_selfheal.json`` — self-healing membership (gray-failure
+  detect→replace timeline, rolling full-group rotation tails vs a
+  no-fault baseline) from ``benchmarks/selfheal.py`` (when the
+  ``selfheal`` figure is run).
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--json] [figure ...]
 """
@@ -42,8 +46,9 @@ def _write_json(path: str, payload: dict) -> None:
 def main() -> None:
     from benchmarks import (engine_perf, fig7_app_latency, fig8_request_size,
                             fig9_breakdown, fig10_nonequivocation,
-                            fig11_reconfig, fig11_tail_latency, sharded,
-                            shared_pools, table2_memory, throughput, roofline)
+                            fig11_reconfig, fig11_tail_latency, selfheal,
+                            sharded, shared_pools, table2_memory, throughput,
+                            roofline)
     mods = {
         "fig7": fig7_app_latency,
         "fig8": fig8_request_size,
@@ -55,6 +60,7 @@ def main() -> None:
         "throughput": throughput,
         "shared": shared_pools,
         "sharded": sharded,
+        "selfheal": selfheal,
         "engine": engine_perf,
         "roofline": roofline,
     }
@@ -96,6 +102,8 @@ def main() -> None:
             _write_json("BENCH_membership.json", results["membership"])
         if "sharded" in results:
             _write_json("BENCH_sharded.json", results["sharded"])
+        if "selfheal" in results:
+            _write_json("BENCH_selfheal.json", results["selfheal"])
         if "throughput" in results:
             tp = results["throughput"]
             protocol = {

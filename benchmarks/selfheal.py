@@ -1,0 +1,161 @@
+"""Self-healing membership benchmark (ISSUE 8): autonomous gray-failure
+recovery and rolling full-group rotation under open-loop load.
+
+Two modes:
+
+* ``detect``   — a seeded gray failure (``slow_replica``: the replica
+                 stays up but delays and drops its sends) hits mid-run;
+                 the suspicion layer must detect it, execute the
+                 precomputed plan and return the group to the fast path
+                 autonomously.  Reported: the detection → fire → active
+                 timeline relative to the fault, plus tail latency.
+* ``rotation`` — a rolling 2f+1 full-group rotation (every seat replaced
+                 through consecutive epoch bumps, strictly one at a time)
+                 underneath the same open-loop workload, against a
+                 no-fault baseline.  Gate: rotation p99 ≤ 2.5× baseline
+                 p99 (cf. the single-replacement 1.78× in
+                 BENCH_membership.json) and all 2f+1 seats replaced.
+
+``benchmarks/run.py --json selfheal`` writes ``BENCH_selfheal.json``.
+
+Usage:  PYTHONPATH=src:. python benchmarks/selfheal.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from benchmarks.common import emit, tune_runtime
+from repro.apps.kvstore import KVStoreApp, set_req
+from repro.core.consensus import ConsensusConfig
+from repro.scenario import AppSpec, ScenarioSpec, Workload, run_scenario
+from repro.sim.faults import FaultSchedule
+
+ROTATION_P99_BOUND = 2.5   # × the no-fault baseline p99
+
+FAULT_AT_US = 2_000.0
+
+
+def _cfg() -> ConsensusConfig:
+    return ConsensusConfig(t=32, window=32, slow_mode="always",
+                           ctb_fast_enabled=False,
+                           view_timeout_us=20_000.0)
+
+
+def _spec(seed: int, rate_rps: float, duration_us: float, faults=None,
+          drain_us: float = 60_000.0) -> ScenarioSpec:
+    return ScenarioSpec(
+        n_pools=2, seed=seed, drain_us=drain_us, faults=faults,
+        apps=[AppSpec(
+            name="", app=KVStoreApp, cfg=_cfg(), self_heal=True,
+            workload=Workload(kind="open", rate_rps=rate_rps,
+                              duration_us=duration_us,
+                              payload_fn=lambda i: set_req(
+                                  b"k%d" % (i % 8), b"v%d" % i),
+                              seed=seed + 1,
+                              timeout_us=120_000_000.0))])
+
+
+def _row(res) -> dict:
+    lats = np.asarray(res.latencies())
+    row = {f"p{p}": float(np.percentile(lats, p)) if len(lats) else 0.0
+           for p in (50, 99, 99.9)}
+    row["n"] = int(len(lats))
+    row["issued"] = res.apps[""].issued
+    row["stalled"] = res.apps[""].stalled
+    return row
+
+
+def _run_detect(rate_rps: float, duration_us: float, seed: int) -> dict:
+    def _faults(_substrate):
+        return FaultSchedule().add(
+            FAULT_AT_US, "slow_replica",
+            ("r1", {"delay_us": 1500.0, "drop": 0.5, "seed": seed}))
+
+    res = run_scenario(_spec(seed, rate_rps, duration_us, faults=_faults))
+    cluster = res.clusters[""]
+    mon = cluster.health_monitor
+    assert mon.replacements, "gray failure went undetected"
+    rec = mon.replacements[0]
+    assert rec["target"] == "r1", rec
+    assert rec["t_active"] is not None, "joiner never activated"
+    assert "r1" not in cluster.current_members()
+    row = _row(res)
+    row.update({
+        "fault_at": FAULT_AT_US,
+        "detect_us": rec["t_detect"] - FAULT_AT_US,
+        "fire_us": rec["t_fire"] - FAULT_AT_US,
+        "recover_us": rec["t_active"] - FAULT_AT_US,
+        "epoch": cluster.current_epoch(),
+        "false_suspicions": sorted(
+            t for t in cluster.stats().get("suspicions", {}) if t != "r1"),
+    })
+    assert row["false_suspicions"] == [], row["false_suspicions"]
+    return row
+
+
+def _run_rotation(rate_rps: float, duration_us: float, seed: int) -> dict:
+    def _faults(substrate):
+        cluster = substrate.clusters[""]
+
+        def start() -> None:
+            cluster.health_monitor.rotate()
+        substrate.sim.at(FAULT_AT_US, start)
+        return FaultSchedule()
+
+    res = run_scenario(_spec(seed, rate_rps, duration_us, faults=_faults,
+                             drain_us=150_000.0))
+    cluster = res.clusters[""]
+    mon = cluster.health_monitor
+    n_seats = len(cluster.replicas)
+    assert not mon.rotating, "rotation never completed"
+    assert len(mon.rotation_log) == n_seats
+    assert all(e["t_done"] is not None for e in mon.rotation_log)
+    assert cluster.current_epoch() == n_seats
+    row = _row(res)
+    row.update({
+        "epoch": cluster.current_epoch(),
+        "seats_replaced": len(mon.rotation_log),
+        "rotation_total_us": (mon.rotation_log[-1]["t_done"] -
+                              mon.rotation_log[0]["t_fire"]),
+        "step_us": [e["t_done"] - e["t_fire"] for e in mon.rotation_log],
+    })
+    return row
+
+
+def run(smoke: bool = False) -> dict:
+    tune_runtime()
+    rate = 4_000.0 if smoke else 8_000.0
+    duration = 6_000.0 if smoke else 12_000.0
+    out: dict = {}
+
+    base = _row(run_scenario(_spec(11, rate, duration)))
+    out["baseline"] = base
+    emit("selfheal.baseline.p99", base["p99"],
+         f"p50={base['p50']:.1f};n={base['n']}")
+
+    det = _run_detect(rate, duration, seed=11)
+    out["detect"] = det
+    emit("selfheal.detect.recover_us", det["recover_us"],
+         f"detect={det['detect_us']:.0f};fire={det['fire_us']:.0f};"
+         f"p99={det['p99']:.1f}")
+
+    rot = _run_rotation(rate, duration, seed=11)
+    out["rotation"] = rot
+    if base["p99"] > 0:
+        rot["p99_vs_baseline"] = rot["p99"] / base["p99"]
+        assert rot["p99_vs_baseline"] <= ROTATION_P99_BOUND, (
+            f"rotation tail cost {rot['p99_vs_baseline']:.2f}x exceeds "
+            f"the {ROTATION_P99_BOUND}x bound")
+    emit("selfheal.rotation.p99", rot["p99"],
+         f"vs_baseline={rot.get('p99_vs_baseline', 0):.2f}x;"
+         f"seats={rot['seats_replaced']};"
+         f"total_us={rot['rotation_total_us']:.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(smoke="--smoke" in sys.argv)

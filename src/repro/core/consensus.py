@@ -75,6 +75,14 @@ class ConsensusConfig:
     # Max consensus slots in flight (proposed but not yet executed) —
     # slots no longer lock-step one decided round at a time.
     pipeline_depth: int = 64
+    # Decision gap repair: a replica whose execution is stalled behind an
+    # undecided slot while a *later* slot is already decided pulls the
+    # missing commit certificate from current members after this grace
+    # period (then retries at the same cadence).  None disables the
+    # repair path entirely — no timers, no wire traffic (the default:
+    # recorded scenarios predate the mechanism).  The self-healing
+    # membership layer turns it on.
+    gap_repair_us: Optional[float] = None
 
 
 # --------------------------------------------------------------------------
@@ -120,6 +128,15 @@ class PeerState:
     commits: Dict[int, Any] = field(default_factory=dict)               # slot -> commit cert
     checkpoint: Optional[Any] = None
     blocked: bool = False          # Byzantine message observed → stop
+    # False while this peer's view lineage is unknown to us: either we
+    # joined after the peer last sealed a view (the replayed seals were
+    # epoch-gated out), or the peer sealed into a future epoch we have
+    # not applied yet.  While unsynced, Byzantine-check failures drop the
+    # message instead of blocking the stream — an honest peer whose view
+    # we simply cannot know yet must not be cut off forever.  The first
+    # same-epoch SEAL_VIEW re-establishes the view and restores strict
+    # checking.
+    view_synced: bool = True
     # FIFO reorder machinery for this peer's CTBcast stream
     fifo_pending: Dict[int, Any] = field(default_factory=dict)
     fifo_next: int = 0
@@ -276,6 +293,10 @@ class UbftReplica(Node):
                                             for r in participants}
         for st in self.state.values():
             st.checkpoint = self.checkpoint
+            # a joiner has no record of any peer's sealed views — the
+            # replay epoch-gates out pre-join lineage, so strict view
+            # checks must wait for each peer's first same-epoch seal
+            st.view_synced = not joining
         #: app snapshots taken exactly at checkpoint boundaries — the only
         #: snapshots whose fingerprint a signed checkpoint can vouch for
         #: (served to joiners via XFER_REQ and published by publish_xfer)
@@ -318,12 +339,42 @@ class UbftReplica(Node):
         self.vc_snapshots: Dict[Tuple[int, str], Any] = {}
         self.changing_view = False
         self.new_view_sent: Set[int] = set()
+        # views whose NEW_VIEW I (as leader) have FIFO-self-delivered —
+        # next_slot is established by _repropose only then
+        self.reproposed_views: Set[int] = set()
         self.progress_deadline: Optional[float] = None
         # Patience grows exponentially with consecutive failed views and
         # resets on progress (needed for liveness under eventual synchrony:
         # a view must eventually outlast the slow path).
         self.view_patience = self.cfg.view_timeout_us
         self.executed_rids: Set[tuple] = set()
+        # Self-healing telemetry (core/health.py): per-replica health
+        # signals latent in the protocol, kept as plain local counters —
+        # zero wire traffic, so static/golden deployments are unaffected.
+        # ``seated_past`` counts, per peer pid, the progress-timer
+        # starvations this replica observed while that pid held the
+        # leader's seat (the "repeated view changes seating past the same
+        # pid" suspicion signal).
+        self.health_counters: Dict[str, Any] = {
+            "starvations": 0,       # own progress-deadline expiries
+            "view_changes": 0,      # views this replica entered
+            "seated_past": {},      # pid -> starvations under its lead
+        }
+        # fired with the abandoned leader's pid on every local
+        # progress-deadline expiry — the health agent's event feed
+        self.on_starvation_hooks: List[Callable[[str], None]] = []
+        # Decision gap repair (cfg.gap_repair_us; off by default).  A
+        # rotation retires one voucher per step, so a replica that joined
+        # mid-stream can end up short of the f+1 COMMIT vouchers for a
+        # slot decided around its join window — with nothing left on any
+        # live stream to close the gap until the sender's next summary
+        # boundary.  The repair path pulls the missing certificate from
+        # current members instead of waiting.
+        self.gap_repair_us: Optional[float] = self.cfg.gap_repair_us
+        self._gap_repair_armed = False
+        #: slot -> responder pid -> verified commit cert (pruned on decide)
+        self.repair_votes: Dict[int, Dict[str, Any]] = {}
+        self.gap_repairs = 0          # decisions recovered via repair
 
         # summaries (Alg. 4)
         self.summary_sigs: Dict[int, Dict[str, bytes]] = {}
@@ -368,6 +419,9 @@ class UbftReplica(Node):
         self.handle("JOIN_SYNC", self._on_join_sync)
         self.handle("XFER_REQ", self._on_xfer_req)
         self.handle("XFER_RESP", self._on_xfer_resp)
+        # decision gap repair (self-healing deployments)
+        self.handle("GAP_REPAIR_REQ", self._on_gap_repair_req)
+        self.handle("GAP_REPAIR", self._on_gap_repair)
 
         # decided callback hooks (runtime integration)
         self.on_decide_hooks: List[Callable[[int, tuple], None]] = []
@@ -594,6 +648,13 @@ class UbftReplica(Node):
             return
         if self.view > 0 and self.view not in self.new_view_sent:
             return  # NEW_VIEW must precede proposals in this view
+        if (self.gap_repair_us is not None and self.view > 0 and
+                self.view not in self.reproposed_views):
+            # NEW_VIEW is broadcast but not yet FIFO-self-delivered:
+            # next_slot is blind until _repropose runs, and proposing a
+            # fresh batch now can land on an already-decided slot — a
+            # duplicate PREPARE that byz-blocks my own stream everywhere
+            return
         while (self.propose_queue and
                self.next_slot in self.checkpoint.open_slots and
                self._slots_in_flight() < self.cfg.pipeline_depth):
@@ -653,6 +714,16 @@ class UbftReplica(Node):
                     break
                 del st.recent[first]
             if not self._byz_check(p, m):       # Algorithm 5
+                if self.gap_repair_us is not None and not st.view_synced:
+                    # The peer's view lineage is unknown here (post-join,
+                    # or the peer sealed into an epoch we haven't applied
+                    # yet): a check against the stale st.view says nothing
+                    # about honesty.  Drop instead of block — but still
+                    # adopt COMMIT certificates, which carry f+1 certify
+                    # signatures and are re-verified on every path.
+                    if m[0] == "COMMIT":
+                        self._on_commit(p, m)
+                    continue
                 st.blocked = True               # "block upon a Byzantine message"
                 return
             self._process_ctb(p, k, m)
@@ -805,6 +876,8 @@ class UbftReplica(Node):
             self._arm_svc_recheck(v, s)
             return
         self.my_prepared[s] = (v, batch)
+        if s > self.exec_upto + 1:
+            self._arm_gap_repair()   # leader moved past a stalled slot
         missing = {r[0] for r in batch
                    if r[1] != "" and r[0] not in self.pending_req and
                    r[0] not in self.decided_rids}
@@ -1052,6 +1125,7 @@ class UbftReplica(Node):
             return
         batch = as_batch(reqs)
         self.decided[s] = batch
+        self.repair_votes.pop(s, None)
         for r in batch:
             self.decided_rids.add(r[0])
             # a decided rid no longer gates any endorsement: clear its
@@ -1068,6 +1142,7 @@ class UbftReplica(Node):
         for hook in self.on_decide_hooks:
             hook(s, batch)
         self._execute_ready()
+        self._arm_gap_repair()
 
     def _execute_ready(self) -> None:
         while self.exec_upto + 1 in self.decided:
@@ -1117,6 +1192,130 @@ class UbftReplica(Node):
             self.exec_upto = s
         self._maybe_checkpoint_round()
         self._drain_proposals()
+
+    # ==================================================================
+    # Decision gap repair (self-healing deployments; cfg.gap_repair_us)
+    # ==================================================================
+    def _arm_gap_repair(self) -> None:
+        """Arm (once) a timer that pulls missing decisions from members.
+
+        Fires only while execution is stalled behind undecided slots that
+        some *later* decided/prepared slot proves the group moved past.
+        Each firing requests ALL such holes at once — a joiner that came
+        up short of vouchers for a window of slots heals in one round
+        trip, not one slot per timer period.  The per-response trust
+        model is the JOIN_SYNC vouched-certificate one: a responder
+        attests "I decided s" with a re-verified f+1-signed commit
+        certificate, and f+1 current members agreeing on the value decide
+        it here (≥1 of them is honest, and honest decisions for a slot
+        are unique)."""
+        if (self.gap_repair_us is None or self._gap_repair_armed or
+                self.crashed or self.joining):
+            return
+        if not self._gap_slots():
+            return
+        self._gap_repair_armed = True
+
+        def _fire() -> None:
+            self._gap_repair_armed = False
+            if self.crashed or self.joining:
+                return
+            gaps = self._gap_slots()
+            if not gaps:
+                return
+            for q in self.replicas:
+                if q != self.pid:
+                    self.send(q, "GAP_REPAIR_REQ", (tuple(gaps),))
+            self._arm_gap_repair()       # retry cadence while stalled
+
+        self.timer(self.gap_repair_us, _fire)
+
+    def _gap_slots(self) -> List[int]:
+        """Undecided slots below the highest slot this replica has seen
+        decided or prepared.  A bare stall with nothing beyond is normal
+        pipeline state — the progress timer, not repair, owns that case."""
+        known = max(max(self.decided, default=-1),
+                    max(self.my_prepared, default=-1))
+        lo = max(self.exec_upto + 1, self.checkpoint.start)
+        return [s for s in range(lo, known)
+                if s not in self.decided][:self.cfg.window]
+
+    def _on_gap_repair_req(self, src: str, body: tuple) -> None:
+        if self.gap_repair_us is None:
+            return
+        slots = body[0]
+        if not isinstance(slots, tuple):
+            return
+        certs = []
+        for s in slots[:self.cfg.window]:
+            if not isinstance(s, int) or s not in self.decided:
+                continue
+            cert = self.my_commits.get(s)
+            if cert is None:
+                # scan ALL tracked streams (retired peers may be the only
+                # holders of certs for slots decided around a rotation)
+                for ps in self.state.values():
+                    cert = ps.commits.get(s)
+                    if cert is not None:
+                        break
+            if cert is None:
+                for c in self.vouched_commits.get(s, {}).values():
+                    cert = c
+                    break
+            if cert is not None:
+                certs.append(cert)
+        if certs:
+            self.send(src, "GAP_REPAIR", (tuple(certs),),
+                      extra_bytes=64 * len(certs))
+
+    def _on_gap_repair(self, src: str, body: tuple) -> None:
+        if self.gap_repair_us is None or src not in self._member_set:
+            return
+        certs = body[0]
+        if not isinstance(certs, tuple):
+            return
+        items: List[tuple] = []
+        parsed: List[dict] = []
+        for cert in certs[:self.cfg.window]:
+            try:
+                v, s, fp, req = (cert["view"], cert["slot"], cert["fp"],
+                                 cert["req"])
+            except (TypeError, KeyError):
+                return
+            if s in self.decided:
+                continue
+            if crypto.fingerprint_cached(req) != fp:
+                return
+            sub = [(pid, ("certify", v, s, fp), sig)
+                   for pid, sig in cert["sigs"]]
+            if len({pid for pid, _, _ in sub}) < self.quorum:
+                return
+            parsed.append(cert)
+            items.extend(sub)
+        if parsed:
+            self.async_verify_many(
+                items, lambda oks: self._gap_repair_verified(oks, src,
+                                                             parsed))
+
+    def _gap_repair_verified(self, oks: List[bool], src: str,
+                             parsed: List[dict]) -> None:
+        if not all(oks):
+            return
+        for cert in parsed:
+            s = cert["slot"]
+            if s in self.decided:
+                continue
+            votes = self.repair_votes.setdefault(s, {})
+            votes[src] = cert
+            # f+1 current members attesting the same value (view-agnostic:
+            # across a view change honest members may hold certificates
+            # from different views for the one decided value)
+            matching = {q for q, c in votes.items()
+                        if c["fp"] == cert["fp"] and q in self._member_set}
+            if len(matching) >= self.quorum:
+                del self.repair_votes[s]
+                self.gap_repairs += 1
+                self._decide(s, cert["req"])
 
     # ==================================================================
     # Checkpoints (Alg. 2 lines 43-61)
@@ -1395,10 +1594,22 @@ class UbftReplica(Node):
                 if s in have or s not in self.checkpoint.open_slots:
                     continue
                 cert = self.my_commits.get(s)
-                if cert is None:
+                if cert is None and self.gap_repair_us is None:
                     for q in self.replicas:
                         cert = self.state[q].commits.get(s)
                         if cert is not None:
+                            break
+                elif cert is None:
+                    # scan ALL tracked streams, not just current members:
+                    # after a rotation the only holder of an old cert may
+                    # be a retired peer's state
+                    for ps in self.state.values():
+                        cert = ps.commits.get(s)
+                        if cert is not None:
+                            break
+                    if cert is None:
+                        for c in self.vouched_commits.get(s, {}).values():
+                            cert = c
                             break
                 if cert is not None:
                     extra.append(cert)
@@ -1412,6 +1623,11 @@ class UbftReplica(Node):
             # replays can carry it): it just activated along with everyone
             self.joining = False
             self._after_view_entered()
+            if self.leader() == self.pid:
+                # same blind-next_slot hazard as _activate: hand the seat
+                # on through the certified view-change machinery instead
+                # of proposing into already-decided slots
+                self.change_view()
             for hook in self.on_activate_hooks:
                 hook()
 
@@ -1516,18 +1732,10 @@ class UbftReplica(Node):
             # own stream never carried a COMMIT for them): re-verified and
             # attributed to the sender as one vouching member
             self._on_commit(src, ("COMMIT", cert), vouch_only=True)
-        if not self.joining:
-            # salvage the self-authenticating part.  When the sender
-            # attached certificates it is itself a recent joiner whose
-            # short stream cannot be vouched for by anyone else — also
-            # *consume* the replayed FIFO keys then: without advancing
-            # fifo_next, every later live broadcast from it would wait
-            # forever on pre-join keys that are never resent, leaving a
-            # second-generation joiner permanently deaf to the only other
-            # surviving member.  The skipped messages are not interpreted
-            # (a replay racing the activation must not complete any live
-            # quorum).  For long-lived senders the FIFO is left alone:
-            # their streams stay recoverable through the quorum.
+        if not self.joining and self.gap_repair_us is None:
+            # historical salvage (recorded deployments): adopt COMMITs,
+            # and consume the replayed keys only for a recent-joiner
+            # sender whose short stream nobody else can vouch for
             for kk, m in history:
                 if certs and kk >= st.fifo_next:
                     st.fifo_next = kk + 1
@@ -1536,6 +1744,73 @@ class UbftReplica(Node):
                     self._on_commit(src, m)
             if certs:
                 self._fifo_drain(src)
+            return
+        if not self.joining:
+            # salvage the self-authenticating part, and *consume* the
+            # replayed FIFO keys: the EPOCH confirmations that activate a
+            # joiner are small and routinely overtake the (much larger)
+            # JOIN_SYNC replays on the wire, so this branch is the common
+            # landing spot for a freshly activated replica.  Without
+            # advancing fifo_next, every later live broadcast from the
+            # sender would wait forever on pre-join keys that are never
+            # resent — the replica stays deaf to that stream until the
+            # sender's next summary boundary, which under a quiet stream
+            # (view-change churn only) is unboundedly far away.  The
+            # skipped messages are still not interpreted (a replay racing
+            # the activation must not complete any live quorum); COMMITs
+            # carry f+1 re-verified signatures and are safe to adopt on
+            # any path.
+            for kk, m in history:
+                fresh = kk >= st.fifo_next
+                if fresh:
+                    st.fifo_next = kk + 1
+                    st.recent[kk] = m
+                if not isinstance(m, tuple) or not m:
+                    continue
+                kind = m[0]
+                if kind == "COMMIT":
+                    if fresh:
+                        st.noncp_msgs_in_view += 1
+                    self._on_commit(src, m)
+                elif not fresh:
+                    continue
+                elif kind == "SEAL_VIEW":
+                    # mirror _on_seal_view's per-peer bookkeeping (minus
+                    # the live actions: no CRTFY_VC share, no catch-up of
+                    # our own view).  Skipping this leaves st.view stale,
+                    # and the sender's first live COMMIT/PREPARE in its
+                    # current view would fail _byz_check — permanently
+                    # blocking an honest peer.
+                    e2 = m[2] if len(m) > 2 else 0
+                    if e2 == self.membership.epoch:
+                        st.seal_view = m[1]
+                        st.view = m[1]
+                        st.view_synced = True
+                        st.noncp_msgs_in_view = 0
+                        st.new_view = None
+                    elif e2 > self.membership.epoch:
+                        st.view_synced = False
+                elif kind == "NEW_VIEW":
+                    st.noncp_msgs_in_view += 1
+                    e2 = m[2] if len(m) > 2 else 0
+                    if e2 == self.membership.epoch:
+                        st.new_view = m[1]
+                elif kind == "CHECKPOINT":
+                    # self-authenticating (f+1 signatures): verify before
+                    # trusting, then track like _on_checkpoint_msg so live
+                    # PREPAREs against the new window aren't rejected
+                    cp = Checkpoint.from_wire(m[1])
+                    old_cp = st.checkpoint or self.checkpoint
+                    if (cp.supersedes(old_cp) and
+                            cp.valid(self.registry, self.quorum)):
+                        st.checkpoint = cp
+                        self._maybe_checkpoint(cp)
+                elif kind == "PREPARE":
+                    # counted but NOT recorded into st.prepares: replays
+                    # skip _byz_check, and recorded prepares feed the
+                    # fast-path decision logic
+                    st.noncp_msgs_in_view += 1
+            self._fifo_drain(src)
             return
         for kk, m in history:
             if kk >= st.fifo_next:
@@ -1570,6 +1845,13 @@ class UbftReplica(Node):
             self._catch_up_view(target)
         else:
             self._after_view_entered()
+        if self.leader() == self.pid:
+            # Activated straight into the seated-leader chair, but without
+            # NEW_VIEW certificates the log position (next_slot) is blind —
+            # proposing would land on already-decided slots and stall the
+            # group for a full patience window.  Hand leadership on through
+            # the certified view-change machinery instead.
+            self.change_view()
         for hook in self.on_activate_hooks:
             hook()
 
@@ -1590,6 +1872,17 @@ class UbftReplica(Node):
                 return
             if (self.progress_deadline is not None and
                     self.sim.now >= self.progress_deadline):
+                # starvation episode: pending work outlived the deadline
+                # under the current leader's seat — record it against that
+                # seat before rotating (the suspicion signal feed)
+                hc = self.health_counters
+                hc["starvations"] += 1
+                stale = self._leader_pid
+                if stale != self.pid:
+                    sp = hc["seated_past"]
+                    sp[stale] = sp.get(stale, 0) + 1
+                for hook in self.on_starvation_hooks:
+                    hook(stale)
                 # patience for the next leader starts now, doubled (liveness
                 # under eventual synchrony: a view must outlast the slow path)
                 self.view_patience = min(self.view_patience * 2,
@@ -1641,6 +1934,7 @@ class UbftReplica(Node):
             return
         self.view += 1
         self._leader_pid = self.replicas[self.view % self.n]
+        self.health_counters["view_changes"] += 1
         self._ctb_broadcast(self._seal_view_msg())
         self.changing_view = False
         self._after_view_entered()
@@ -1675,10 +1969,17 @@ class UbftReplica(Node):
             # stalls re-seals through its own progress timer, and later
             # same-epoch SEAL_VIEWs re-establish the peer's view.  Worst
             # case is a bounded liveness delay around the switch window.
+            if e > self.membership.epoch:
+                # the peer advanced past my epoch: its views are now
+                # unknowable until I catch up and it seals afresh — relax
+                # the strict per-view checks so I don't block an honest
+                # peer on its post-switch traffic
+                self.state[p].view_synced = False
             return
         st = self.state[p]
         st.seal_view = v
         st.view = v
+        st.view_synced = True
         st.noncp_msgs_in_view = 0
         st.new_view = None
         if not self.joining:
@@ -1697,6 +1998,7 @@ class UbftReplica(Node):
         while self.view < v:
             self.view += 1
             self._leader_pid = self.replicas[self.view % self.n]
+            self.health_counters["view_changes"] += 1
             self._ctb_broadcast(self._seal_view_msg())
         self._after_view_entered()
 
@@ -1783,6 +2085,18 @@ class UbftReplica(Node):
         max_committed = max(committed_slots, default=self.checkpoint.start - 1)
         proposed_upto = self.checkpoint.start - 1
         for s in self.checkpoint.open_slots:
+            if (self.gap_repair_us is not None and s in self.decided and
+                    s <= self.exec_upto):
+                # Already decided AND executed here: a fresh PREPARE round
+                # would re-run the full certify/commit machinery for a
+                # settled slot, and a rotation's worth of them in one
+                # burst saturates the event loop for the slots that
+                # actually need agreement.  A member missing the decision
+                # heals from stored commits or the batch gap repair —
+                # which is exactly the feature this skip is gated on,
+                # keeping non-self-healing deployments bit-identical.
+                proposed_upto = s
+                continue
             must = self._must_propose(s, certs)
             prior = self.my_prepared.get(s)
             if must is not None:
@@ -1804,6 +2118,7 @@ class UbftReplica(Node):
             self._ctb_broadcast(("PREPARE", v, s, req))
         self.next_slot = max(self.next_slot, proposed_upto + 1,
                              self.checkpoint.start)
+        self.reproposed_views.add(v)
         self._drain_proposals()
 
     def _must_propose(self, slot: int, certs: Dict[str, tuple]) -> Optional[tuple]:

@@ -21,11 +21,18 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core import crypto
 from repro.core.consensus import App, ConsensusConfig, UbftReplica
+from repro.core.health import (HealthConfig, HealthMonitor, ReconfigPlan,
+                               ReplicaHealth, as_health_config)
 from repro.core.node import Node
 from repro.core.registers import POOL_MEMORY_BUDGET, MemoryNode, MemoryPool
 from repro.core.substrate import Substrate
 from repro.sim.events import Simulator
 from repro.sim.net import NetParams, NetworkModel
+
+
+class ReplacementError(RuntimeError):
+    """A replica replacement was rejected by a guard (unknown/retired
+    target, one already in flight, a stale plan, …)."""
 
 
 class Client(Node):
@@ -102,6 +109,12 @@ class Cluster:
     retired: bool = False
     #: (sim time, old_pid, new_pid) per initiated replacement
     replacements: List[Tuple[float, str, str]] = field(default_factory=list)
+    #: (sim time, old_pid, reason) per *rejected* replacement request —
+    #: the guard surface for idempotency (``replace_replica``)
+    rejected_replacements: List[Tuple[float, str, str]] = \
+        field(default_factory=list)
+    #: self-healing control plane, set by ``enable_self_healing``
+    health_monitor: Optional[HealthMonitor] = None
     #: called with ``(old_replica, joiner)`` at the end of every
     #: ``replace_replica`` — the service layer attaches its per-replica
     #: machinery (e.g. 2PC recovery timers) to the joiner here, so an
@@ -180,8 +193,56 @@ class Cluster:
         return c
 
     # ------------------------------------------------ replica replacement
+    def current_epoch(self) -> int:
+        """Highest membership epoch among live voting replicas."""
+        return max((r.membership.epoch for r in self.replicas
+                    if not r.joining), default=0)
+
+    def current_members(self) -> Tuple[str, ...]:
+        """Membership of the current epoch."""
+        e = self.current_epoch()
+        for r in self.replicas:
+            if not r.joining and r.membership.epoch == e:
+                return r.membership.replicas
+        return tuple(self.replica_pids)
+
+    def current_leader(self) -> str:
+        """Leader pid of the current epoch's seated view (as observed by
+        one live replica of that epoch)."""
+        e = self.current_epoch()
+        for r in self.replicas:
+            if not r.joining and not r.crashed and r.membership.epoch == e:
+                return r.leader()
+        return self.current_members()[0]
+
+    def next_replica_pid(self) -> str:
+        """The deterministic pid the next joiner will get — fixed ahead of
+        time so reconfiguration plans can be precomputed."""
+        prefix = f"{self.name}/" if self.name else ""
+        return f"{prefix}r{len(self.replicas) + len(self.retired_replicas)}"
+
+    def replacement_in_flight(self) -> bool:
+        """True while an epoch bump is pending or a joiner is still
+        non-voting — the never-more-than-one-concurrent-replacement
+        guard."""
+        if any(r.joining for r in self.replicas):
+            return True
+        return any(ne > r.membership.epoch
+                   for r in self.replicas if not r.crashed
+                   for ne in r.pending_membership)
+
+    def _reject_replacement(self, old_pid: str, reason: str,
+                            strict: bool) -> None:
+        self.rejected_replacements.append((self.sim.now, old_pid, reason))
+        if strict:
+            raise ReplacementError(
+                f"cannot replace {old_pid!r} in app {self.name!r}: {reason}")
+        return None
+
     def replace_replica(self, old_pid: str,
-                        new_pid: Optional[str] = None
+                        new_pid: Optional[str] = None,
+                        plan: Optional[ReconfigPlan] = None,
+                        strict: bool = False
                         ) -> Optional[UbftReplica]:
         """Replace a (typically crashed) replica with a fresh one — the
         control-plane operation behind the membership-epoch machinery.
@@ -211,10 +272,23 @@ class Cluster:
            new epoch at the same point of its execution order, and f+1
            EPOCH confirmations activate the joiner.
 
+        Guards (idempotency): a request naming a pid that is unknown,
+        already retired, or mid-replacement — or arriving while another
+        epoch bump is in flight — is rejected with a clear reason
+        (recorded in :attr:`rejected_replacements`; raised as
+        :class:`ReplacementError` with ``strict=True``) instead of racing
+        the membership machinery.
+
+        ``plan`` executes a precomputed :class:`~repro.core.health
+        .ReconfigPlan` instead of deciding online: the joiner pid, the
+        target epoch and the ``rekey_owner`` pool order come from the
+        plan, which is validated against the live membership first (a
+        stale plan is a rejection, never a partial execution).
+
         Returns the joiner (already on the event loop), or ``None`` when
-        the replacement cannot start (unknown pid / one already in
-        flight).  The switch itself completes asynchronously — drive the
-        simulator and watch ``replica.membership.epoch``.
+        the replacement cannot start.  The switch itself completes
+        asynchronously — drive the simulator and watch
+        ``replica.membership.epoch``.
         """
         if self.app_factory is None:
             raise RuntimeError("replace_replica needs the app factory — "
@@ -222,23 +296,56 @@ class Cluster:
         by_pid = {r.pid: r for r in self.replicas}
         old = by_pid.get(old_pid)
         if old is None:
-            return None
+            if any(r.pid == old_pid for r in self.retired_replicas):
+                return self._reject_replacement(
+                    old_pid, "already retired by an earlier epoch switch",
+                    strict)
+            return self._reject_replacement(
+                old_pid, "unknown pid (not in this cluster)", strict)
+        if old.joining:
+            return self._reject_replacement(
+                old_pid, "target is itself a joiner still mid-replacement",
+                strict)
         survivors = [r for r in self.replicas
                      if r.pid != old_pid and not r.crashed and not r.joining]
         if not survivors:
-            return None
-        if any(ne > r.membership.epoch
-               for r in survivors for ne in r.pending_membership):
-            return None  # a replacement is already in flight
+            return self._reject_replacement(
+                old_pid, "no live survivors to transfer state from", strict)
+        if self.replacement_in_flight():
+            return self._reject_replacement(
+                old_pid, "a replacement is already in flight", strict)
         cur_epoch = max(r.membership.epoch for r in survivors)
         members = next(r for r in survivors
                        if r.membership.epoch == cur_epoch).membership.replicas
         if old_pid not in members:
-            return None  # already replaced out of the group
+            return self._reject_replacement(
+                old_pid, "not a member of the current epoch", strict)
         e = cur_epoch + 1
+        pools = list(self.pools)
+        if plan is not None:
+            if new_pid is not None and new_pid != plan.new_pid:
+                return self._reject_replacement(
+                    old_pid, f"new_pid {new_pid!r} conflicts with the "
+                    f"plan's {plan.new_pid!r}", strict)
+            if (plan.old_pid != old_pid or plan.epoch != e or
+                    plan.members != tuple(members)):
+                return self._reject_replacement(
+                    old_pid, f"stale plan (plan epoch {plan.epoch} / "
+                    f"members {plan.members} vs live epoch {e} / "
+                    f"{tuple(members)})", strict)
+            by_name = {p.name: p for p in pools}
+            if set(plan.rekey_order) != set(by_name):
+                return self._reject_replacement(
+                    old_pid, "plan's pool placement no longer matches the "
+                    "cluster", strict)
+            pools = [by_name[n] for n in plan.rekey_order]
+            new_pid = plan.new_pid
         if new_pid is None:
-            prefix = f"{self.name}/" if self.name else ""
-            new_pid = f"{prefix}r{len(self.replicas) + len(self.retired_replicas)}"
+            new_pid = self.next_replica_pid()
+        if new_pid in self.sim.processes:
+            return self._reject_replacement(
+                old_pid, f"joiner pid {new_pid!r} is already a live "
+                f"process", strict)
         cls = self.replica_cls or UbftReplica
         joiner = cls(self.sim, self.net, self.registry, new_pid,
                      list(members), self.pools, self.app_factory(),
@@ -248,18 +355,57 @@ class Cluster:
                          if r.membership.epoch == cur_epoch]
         for r in survivors:
             r.publish_xfer(e)
-        for pool in self.pools:
-            pool.rekey_owner(old_pid, new_pid,
-                             cb=joiner.regs.adopt_wts)
+
+        def _do_rekeys() -> None:
+            for pool in pools:
+                pool.rekey_owner(old_pid, new_pid,
+                                 cb=joiner.regs.adopt_wts)
+        if old.crashed:
+            _do_rekeys()
+        else:
+            # A live target is still a voting member of the current epoch
+            # (possibly its seated leader) until the agreed switch
+            # executes.  Revoking its register permissions at fire time
+            # would mute its slow-path broadcasts mid-epoch and wedge the
+            # group; revoke at joiner activation instead — the switch
+            # retires the old pid at the same point of the execution
+            # order, so it cannot keep writing past its epoch either way.
+            joiner.on_activate_hooks.append(_do_rekeys)
         joiner.begin_join(e, survivor_pids, (old_pid, new_pid))
         for r in survivors:
             r.propose_membership(e, old_pid, new_pid)
+        if not old.crashed:
+            # A live target proposes its own retirement: when the seated
+            # leader is the one being rotated out, the survivors' ECHOs
+            # alone would only reach it after a starvation-driven view
+            # change (a full patience window).  An honest leader proposes
+            # immediately; a Byzantine one still loses its view to the
+            # progress timer as before.
+            old.propose_membership(e, old_pid, new_pid)
         # control-plane bookkeeping: the cluster now routes around old_pid
         idx = self.replicas.index(old)
         self.replicas[idx] = joiner
         self.retired_replicas.append(old)
+        # Clients fan REQs to every pid that is a member now or will be
+        # next epoch: a live target stays a voting member — possibly the
+        # seated leader — until the agreed switch executes, and cutting
+        # it out of the fan-out at fire time would leave requests issued
+        # during the switch without any copy at the one replica that can
+        # propose them.  The retired pid is pruned once the joiner votes.
+        fanout = self.replica_pids
+        if not old.crashed:
+            fanout = fanout + [old_pid]
         for c in self.clients:
-            c.replicas = self.replica_pids
+            c.replicas = fanout
+
+        def _prune_retired() -> None:
+            if joiner.joining and not joiner.crashed:
+                self.sim.after(50.0, _prune_retired)
+                return
+            for c in self.clients:
+                c.replicas = self.replica_pids
+        if not old.crashed:
+            self.sim.after(50.0, _prune_retired)
         if self.substrate is not None:
             self.substrate.add_owner(self.name, new_pid)
         self.replacements.append((self.sim.now, old_pid, new_pid))
@@ -277,6 +423,81 @@ class Cluster:
         for r in self.replicas:
             if not r.crashed and not r.joining:
                 r.propose_internal(rid, payload)
+
+    # ------------------------------------------------ self-healing plane
+    def enable_self_healing(self, cfg: Any = None) -> HealthMonitor:
+        """Turn on the suspicion-driven control plane (core/health.py):
+        one :class:`HealthMonitor` for the group, one
+        :class:`ReplicaHealth` agent per replica (joiners included, via
+        ``replace_hooks``).  ``cfg`` is a :class:`HealthConfig`, a dict of
+        overrides, or None/True for defaults.  Idempotent — a second call
+        returns the existing monitor."""
+        if self.health_monitor is not None:
+            return self.health_monitor
+        hcfg = as_health_config(cfg)
+        mon = HealthMonitor(self, hcfg)
+        for r in self.replicas:
+            r.gap_repair_us = hcfg.gap_repair_us
+            ReplicaHealth(r, mon, hcfg)
+
+        def _on_replace(old: UbftReplica, joiner: UbftReplica) -> None:
+            agent = getattr(old, "health_agent", None)
+            if agent is not None:
+                agent.stop()
+            joiner.gap_repair_us = hcfg.gap_repair_us
+            ReplicaHealth(joiner, mon, hcfg)
+            mon.forget(old.pid)
+
+        self.replace_hooks.append(_on_replace)
+        self.health_monitor = mon
+        return mon
+
+    # ------------------------------------------------------ telemetry
+    def stats(self) -> Dict[str, Any]:
+        """One telemetry surface for benchmarks and controllers:
+        replacement history (accepted + rejected), per-pool rekey retry
+        counts (``aborted_rekeys`` et al.), per-replica health/suspicion
+        counters, and — when self-healing is enabled — the monitor's
+        accusation, replacement and gating logs."""
+        pools = {
+            p.name: {
+                "rekeys": len(p.rekeys),
+                "aborted_rekeys": len(p.aborted_rekeys),
+                "aborted_syncs": len(p.aborted_syncs),
+                "reconfigurations": len(p.reconfigurations),
+            }
+            for p in self.pools
+        }
+        health: Dict[str, Any] = {}
+        for r in self.replicas:
+            hc = getattr(r, "health_counters", None) or {}
+            entry = {
+                "starvations": hc.get("starvations", 0),
+                "view_changes": hc.get("view_changes", 0),
+                "seated_past": dict(hc.get("seated_past", {})),
+            }
+            agent = getattr(r, "health_agent", None)
+            if agent is not None:
+                entry["hb_misses"] = dict(agent.misses)
+                entry["suspects"] = sorted(agent.suspects)
+            health[r.pid] = entry
+        out: Dict[str, Any] = {
+            "epoch": self.current_epoch(),
+            "members": list(self.current_members()),
+            "replacements": list(self.replacements),
+            "rejected_replacements": list(self.rejected_replacements),
+            "replacement_in_flight": self.replacement_in_flight(),
+            "pools": pools,
+            "health": health,
+        }
+        mon = self.health_monitor
+        if mon is not None:
+            out["suspicions"] = {t: sorted(acc)
+                                 for t, acc in mon.accusations.items() if acc}
+            out["auto_replacements"] = [dict(rec) for rec in mon.replacements]
+            out["deferred"] = list(mon.deferred)
+            out["rotation"] = [dict(rec) for rec in mon.rotation_log]
+        return out
 
     def memory_by_pool(self) -> Dict[str, int]:
         """This app's occupied disaggregated memory per shared pool

@@ -101,6 +101,10 @@ class TBcastService:
         self.rto_backoff_max = rto_backoff_max
         self._send: Dict[Tuple[str, str], _SendState] = {}   # (stream, dst)
         self._recv: Dict[Tuple[str, str], _RecvState] = {}   # (origin, stream)
+        #: per-dst count of RTO fires that actually retransmitted — a peer
+        #: that stops acking shows up here (the health layer's "ack
+        #: silence" suspicion signal; local bookkeeping, no wire effect)
+        self.retx_fires: Dict[str, int] = {}
         self._handlers: List[Tuple[str, Callable[[str, str, int, Any], None]]] = []
         self._route: Dict[str, Optional[Callable]] = {}  # stream -> handler
         self._conns: set = set()
@@ -220,6 +224,7 @@ class TBcastService:
                 st.backoff = 0
                 return
             st.min_k = min(st.window) if st.window else st.next_k
+            self.retx_fires[dst] = self.retx_fires.get(dst, 0) + 1
             for k in sorted(live):
                 self._ship(stream, dst, st, k, live[k])
             # no ack progress since the last fire (an ack would have reset

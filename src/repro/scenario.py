@@ -137,6 +137,9 @@ class AppSpec:
     #: pool placement policy: pin this app's register sharding to a pool
     #: subset (indices / names / MemoryPool objects); None = every pool
     pools: Any = None
+    #: self-healing membership (``Cluster.enable_self_healing``): True /
+    #: a ``HealthConfig`` / a dict of overrides; None|False = off
+    self_heal: Any = None
 
 
 @dataclass
@@ -157,6 +160,8 @@ class ServiceSpec:
     budget: int = POOL_MEMORY_BUDGET
     tx_timeout_us: float = 20_000.0
     pools: Any = None
+    #: self-heal every shard group (split-born shards included)
+    self_heal: Any = None
 
 
 @dataclass
@@ -341,6 +346,8 @@ def build_deployment(spec: ScenarioSpec
             kw["pools"] = a.pools
         clusters[a.name] = Cluster.attach(substrate, a.app, name=a.name,
                                           cfg=a.cfg, budget=a.budget, **kw)
+        if a.self_heal:
+            clusters[a.name].enable_self_healing(a.self_heal)
     for s in spec.services:
         from repro.service import ShardedService  # avoid a static cycle
         app = s.app
@@ -350,7 +357,7 @@ def build_deployment(spec: ScenarioSpec
         svc = ShardedService.attach(substrate, s.n_shards, name=s.name,
                                     cfg=s.cfg, app=app, budget=s.budget,
                                     tx_timeout_us=s.tx_timeout_us,
-                                    pools=s.pools)
+                                    pools=s.pools, self_heal=s.self_heal)
         # shard groups are ordinary attached apps: expose them under their
         # full names so FaultInjector events can target "<svc>/s<i>/r<j>"
         for i, shard in enumerate(svc.shards):

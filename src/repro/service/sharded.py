@@ -548,6 +548,9 @@ class ShardedService:
         self._cfg: Optional[Any] = None
         self._budget: int = POOL_MEMORY_BUDGET
         self._pools: Optional[Any] = None
+        #: self-heal every shard group (True / HealthConfig / dict); split-
+        #: born shards inherit it because _wire_shard applies it
+        self._self_heal: Optional[Any] = None
 
     @classmethod
     def attach(cls, substrate: Substrate, n_shards: int, name: str = "kv",
@@ -556,7 +559,8 @@ class ShardedService:
                budget: int = POOL_MEMORY_BUDGET,
                tx_timeout_us: float = 20_000.0,
                tx_secret: int = 0,
-               pools: Optional[Any] = None) -> "ShardedService":
+               pools: Optional[Any] = None,
+               self_heal: Optional[Any] = None) -> "ShardedService":
         """Attach ``n_shards`` groups (``<name>/s<i>``) to the substrate.
 
         ``cfg`` is one :class:`ConsensusConfig` shared by every shard
@@ -582,6 +586,7 @@ class ShardedService:
         svc._cfg = cfg
         svc._budget = budget
         svc._pools = pools
+        svc._self_heal = self_heal
         for i, cluster in enumerate(shards):
             svc._wire_shard(i, cluster)
         substrate.services[name] = svc
@@ -603,6 +608,8 @@ class ShardedService:
                 stagger_us=200.0 + 150.0 * _c.replicas.index(joiner)))
             self._install_reshard_validators(joiner)
         cluster.replace_hooks.append(on_replace)
+        if self._self_heal:
+            cluster.enable_self_healing(self._self_heal)
 
     # ------------------------------------------- reshard slot endorsement
     def _install_reshard_validators(self, replica: UbftReplica) -> None:

@@ -15,7 +15,14 @@ action             target                                   effect
 ``reconfigure``    pool name / index / ``(pool, dead_pid)``  ``MemoryPool.reconfigure``
 ``replace_replica`` replica pid (app resolved by prefix)    ``Cluster.replace_replica``
 ``stale_serve``    memory-node pid or ``(pid, False)``      ``MemoryNode.set_stale_serve``
+``slow_replica``   pid / ``(pid, params)`` / ``(pid, False)``  ``NetworkModel.degrade_src``
 =================  =======================================  =====================
+
+``slow_replica`` is the *gray* failure mode: the target stays up (keeps
+receiving, keeps its state) but every message it sends pays an extra delay
+and/or a seeded fraction is silently lost — exactly the partial failure a
+clean crash schedule cannot express, and the one the self-healing
+suspicion layer (``core/health.py``) exists to catch.
 
 Everything is driven by one seeded RNG, so a schedule is exactly
 reproducible from ``(seed, horizon, targets)`` — the property the
@@ -33,7 +40,7 @@ from typing import Any, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 ACTIONS = ("crash", "recover", "partition", "heal", "reconfigure",
-           "replace_replica", "stale_serve", "reshard")
+           "replace_replica", "stale_serve", "reshard", "slow_replica")
 
 
 @dataclass(frozen=True)
@@ -79,7 +86,10 @@ class FaultSchedule:
                n_memory_crashes: int = 1, n_replica_crashes: int = 0,
                n_partitions: int = 0, reconfigure: bool = False,
                recover: bool = True, replace_replicas: bool = False,
-               stale_serve: Sequence[str] = ()) -> "FaultSchedule":
+               stale_serve: Sequence[str] = (),
+               n_slow_replicas: int = 0,
+               slow_params: Optional[dict] = None,
+               slow_recover: bool = False) -> "FaultSchedule":
         """Generate a deterministic schedule inside ``(0.1, 0.8)·horizon``.
 
         ``memory`` lists crash-eligible memory-node pids (pass at most f_m
@@ -92,6 +102,15 @@ class FaultSchedule:
         partition+heal episodes.  ``stale_serve`` lists memory-node pids
         that turn into stale-serving Byzantine memory (enabled at a seeded
         time, never disabled — keep it within f_m per pool).
+
+        ``n_slow_replicas`` gray-degrades that many replicas (drawn from
+        ``replicas``) at seeded times: delay and drop fraction are drawn
+        per target unless pinned via ``slow_params`` (the degradation's
+        own drop RNG is always seeded from this schedule's stream, so the
+        whole gray episode is a pure function of the seed).
+        ``slow_recover`` follows each degradation with a clearing event —
+        leave it False when a self-healing control plane is expected to
+        replace the sick replica instead.
         """
         rng = np.random.default_rng(seed)
         ev: List[FaultEvent] = []
@@ -123,6 +142,18 @@ class FaultSchedule:
             ev.append(FaultEvent(t0 + t(0.05, 0.15), "heal", (a, b)))
         for pid in stale_serve:
             ev.append(FaultEvent(t(), "stale_serve", str(pid)))
+        if n_slow_replicas:
+            for pid in list(rng.permutation(list(replicas)))[:n_slow_replicas]:
+                t0 = t()
+                params = dict(slow_params) if slow_params else {
+                    "delay_us": float(rng.uniform(300.0, 2000.0)),
+                    "drop": float(rng.uniform(0.1, 0.6)),
+                }
+                params.setdefault("seed", int(rng.integers(2 ** 31)))
+                ev.append(FaultEvent(t0, "slow_replica", (str(pid), params)))
+                if slow_recover:
+                    ev.append(FaultEvent(t0 + t(0.05, 0.15), "slow_replica",
+                                         (str(pid), False)))
         return cls(ev, seed=seed)
 
 
@@ -259,6 +290,36 @@ class FaultInjector:
         if bool(node.stale_serve) == bool(on):
             return False
         node.set_stale_serve(on)
+        return True
+
+    def _do_slow_replica(self, target: Any) -> bool:
+        """Gray failure: degrade every send *from* a replica that stays up.
+        ``pid`` or ``(pid, {"delay_us":…, "drop":…, "seed":…})`` enables
+        (dict keys optional); ``(pid, False)`` clears.  Re-degrading an
+        already-degraded pid (or clearing a healthy one) is skipped."""
+        params: Optional[dict] = None
+        on = True
+        if isinstance(target, tuple):
+            pid, arg = target
+            if arg is False:
+                on = False
+            elif isinstance(arg, dict):
+                params = arg
+            elif arg is not None and arg is not True:
+                raise ValueError(f"bad slow_replica arg {arg!r} — expected "
+                                 f"a params dict or False")
+        else:
+            pid = target
+        if not on:
+            if pid not in self.net.degraded:
+                return False
+            self.net.clear_degrade(pid)
+            return True
+        if pid in self.net.degraded:
+            return False
+        p = {"delay_us": 500.0, "drop": 0.3, "seed": 1}
+        p.update(params or {})
+        self.net.degrade_src(pid, **p)
         return True
 
     def _do_reshard(self, target: Any) -> bool:

@@ -24,6 +24,7 @@ leader also draws through :meth:`NetworkModel.jitter`.
 from __future__ import annotations
 
 import heapq
+import random
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -73,6 +74,13 @@ class NetworkModel:
         # Forced partitions drop regardless of GST (fault-schedule driver:
         # an operator-visible network fault, not pre-GST asynchrony).
         self.forced: set = set()
+        # Gray failure (``slow_replica`` fault): a degraded *source* stays
+        # up but every send pays an extra delay and/or loses a seeded
+        # fraction.  Applied regardless of GST (a sick NIC, not pre-GST
+        # asynchrony).  Drop draws come from a dedicated per-entry RNG —
+        # never the simulator's jitter stream, so enabling a degradation
+        # cannot perturb the jitter draws of unaffected traffic.
+        self.degraded: Dict[str, Tuple[float, float, random.Random]] = {}
         self.bytes_sent: int = 0
         self.msgs_sent: int = 0
         self._jitter_buf = None
@@ -119,6 +127,11 @@ class NetworkModel:
                     (src, dst) in self.partitioned and
                     self.sim.now < self.sim.gst)):
             return  # dropped; retransmission layers must cope
+        deg = None
+        if self.degraded:
+            deg = self.degraded.get(src)
+            if deg is not None and deg[1] and deg[2].random() < deg[1]:
+                return  # gray failure: the sender's NIC lost it
         self.bytes_sent += size
         self.msgs_sent += 1
         # inlined latency(): base + per-byte, jittered from the pre-drawn
@@ -139,6 +152,8 @@ class NetworkModel:
             extra = self.link_delay.get((src, dst), 0.0)
             if extra and sim.now < sim.gst:
                 lat += extra
+        if deg is not None:
+            lat += deg[0]
 
         if deliver is not None:
             sim.after(lat, deliver)
@@ -159,6 +174,19 @@ class NetworkModel:
         heapq.heappush(sim._heap, (sim.now + lat, sim._seq, _arrive))
 
     # -- asynchrony / failure injection ------------------------------------
+    def degrade_src(self, pid: str, delay_us: float = 0.0,
+                    drop: float = 0.0, seed: int = 0) -> None:
+        """Gray-degrade every send *from* ``pid``: add ``delay_us`` to its
+        one-way latency and drop a ``drop`` fraction (seeded, deterministic,
+        independent of the jitter stream).  Applies regardless of GST."""
+        if not 0.0 <= drop < 1.0:
+            raise ValueError(f"drop fraction must be in [0, 1): {drop!r}")
+        self.degraded[pid] = (float(delay_us), float(drop),
+                              random.Random(seed))
+
+    def clear_degrade(self, pid: str) -> None:
+        self.degraded.pop(pid, None)
+
     def delay_link(self, src: str, dst: str, extra_us: float) -> None:
         self.link_delay[(src, dst)] = extra_us
 

@@ -229,6 +229,130 @@ def test_reconfigure_noop_is_logged_as_skipped(pooled_cluster,
 
 
 # --------------------------------------------------------------------------
+# Gray failures (slow_replica) and false-suspicion hysteresis (ISSUE 8)
+# --------------------------------------------------------------------------
+def test_slow_replica_fault_event_degrades_and_clears(pooled_cluster,
+                                                      fault_injector):
+    c = pooled_cluster(n_pools=1, seed=0)
+    inj = fault_injector(c, FaultSchedule([
+        FaultEvent(100.0, "slow_replica",
+                   ("r1", {"delay_us": 800.0, "drop": 0.2, "seed": 7})),
+        FaultEvent(200.0, "slow_replica", "r1"),       # re-degrade: no-op
+        FaultEvent(300.0, "slow_replica", ("r1", False)),   # recover
+        FaultEvent(400.0, "slow_replica", ("r2", False)),   # healthy: no-op
+    ]))
+    c.sim.run(until=150.0)
+    assert "r1" in c.net.degraded
+    assert c.net.degraded["r1"][:2] == (800.0, 0.2)
+    c.sim.run(until=250.0)
+    assert [a for (_t, a, _tgt) in inj.log] == ["slow_replica"]
+    assert len(inj.skipped) == 1                      # the re-degrade
+    c.sim.run(until=500.0)
+    assert "r1" not in c.net.degraded
+    assert len(inj.skipped) == 2                      # clearing healthy r2
+
+
+def test_slow_replica_rejects_bad_drop_fraction(pooled_cluster,
+                                                fault_injector):
+    c = pooled_cluster(n_pools=1, seed=0)
+    fault_injector(c, FaultSchedule([
+        FaultEvent(100.0, "slow_replica", ("r1", {"drop": 1.5}))]))
+    with pytest.raises(ValueError):
+        c.sim.run(until=200.0)
+
+
+def test_seeded_slow_replica_schedules_are_deterministic():
+    def make(seed, **kw):
+        return FaultSchedule.seeded(seed, horizon_us=2000.0,
+                                    replicas=["r0", "r1", "r2"],
+                                    n_memory_crashes=0, **kw)
+
+    s1 = make(42, n_slow_replicas=2, slow_recover=True)
+    s2 = make(42, n_slow_replicas=2, slow_recover=True)
+    assert s1.events == s2.events
+    assert s1.events != make(43, n_slow_replicas=2,
+                             slow_recover=True).events
+    slow = [e for e in s1.events if e.action == "slow_replica"]
+    degrades = [e for e in slow if isinstance(e.target[1], dict)]
+    recovers = [e for e in slow if e.target[1] is False]
+    assert len(degrades) == 2 and len(recovers) == 2
+    for e in degrades:
+        assert 300.0 <= e.target[1]["delay_us"] <= 2000.0
+        assert 0.1 <= e.target[1]["drop"] <= 0.6
+        assert "seed" in e.target[1]
+    # pinned parameters override the drawn ones (the seed stays drawn)
+    pinned = make(42, n_slow_replicas=1,
+                  slow_params={"delay_us": 999.0, "drop": 0.25})
+    (ev,) = [e for e in pinned.events if e.action == "slow_replica"]
+    assert ev.target[1]["delay_us"] == 999.0 and ev.target[1]["drop"] == 0.25
+    # a zero-count request draws nothing: schedules without gray failures
+    # are bit-identical to the pre-ISSUE-8 generation
+    assert make(42) .events == make(42, n_slow_replicas=0).events
+
+
+@pytest.mark.parametrize("seed", [1, 5])
+def test_byzantine_accusation_spammer_cannot_evict(pooled_cluster, seed):
+    """f Byzantine replicas spamming maximal accusations never meet the
+    f+1 accuser quorum — zero replacements, the group stays at epoch 0."""
+    c = pooled_cluster(n_pools=2, seed=seed, cfg=_registers_cfg())
+    mon = c.enable_self_healing(True)
+    spammer = c.replicas[2]
+    c.sim.periodic(200.0, lambda: spammer.send(
+        mon.pid, "HEALTH_ACCUSE", ("r1", 99.0)))
+    acked = _run_workload(c, n_reqs=16)
+    c.sim.run(until=c.sim.now + 150_000)
+    assert mon.replacements == []
+    assert c.replacements == [] and c.current_epoch() == 0
+    # the spam was seen (and logged) but never formed a quorum
+    assert "r1" in mon.accusations
+    assert set(mon.accusations["r1"]) <= {spammer.pid}
+    _assert_safe(c, acked)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [2, 9])
+def test_byzantine_leader_view_churn_evicts_no_honest_replica(
+        pooled_cluster, seed):
+    """A Byzantine leader that refuses to propose forces repeated view
+    changes.  The starvation episodes seat past *its* pid only — honest
+    replicas are never evicted, and if anyone is auto-replaced it is the
+    silent leader itself."""
+    c = pooled_cluster(n_pools=2, seed=seed, cfg=_registers_cfg())
+    mon = c.enable_self_healing(True)
+    c.replicas[0]._drain_proposals = lambda: None      # silent leader
+    acked = _run_workload(c, n_reqs=12)
+    c.sim.run(until=c.sim.now + 200_000)
+    assert all(rec["target"] == "r0" for rec in mon.replacements)
+    assert all(old == "r0" for (_t, old, _new) in c.replacements)
+    for rep in c.replicas:
+        if not rep.crashed and not rep.joining:
+            assert {"r1", "r2"} <= set(rep.membership.replicas)
+    _assert_safe(c, acked)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [3, 8])
+def test_seeded_gray_matrix_only_degraded_replica_evicted(
+        pooled_cluster, fault_injector, seed):
+    """Seeded gray-failure matrix: the degraded replica is detected and
+    replaced autonomously; no honest replica is ever touched."""
+    c = pooled_cluster(n_pools=2, seed=seed, cfg=_registers_cfg())
+    mon = c.enable_self_healing(True)
+    sched = FaultSchedule.seeded(
+        seed, horizon_us=3000.0, replicas=["r1"], n_memory_crashes=0,
+        n_slow_replicas=1,
+        slow_params={"delay_us": 1500.0, "drop": 0.5})
+    fault_injector(c, sched)
+    acked = _run_workload(c, n_reqs=20)
+    c.sim.run(until=c.sim.now + 120_000)
+    assert mon.replacements, "gray failure went undetected"
+    assert all(rec["target"] == "r1" for rec in mon.replacements)
+    assert "r1" not in c.current_members()
+    c.net.clear_degrade("r1")
+    _assert_safe(c, acked)
+
+
+# --------------------------------------------------------------------------
 # Cross-app isolation on a shared substrate (ISSUE 4)
 # --------------------------------------------------------------------------
 def _run_kv_workload(cluster, n_reqs=10, timeout=600_000_000):

@@ -1,0 +1,368 @@
+"""Self-healing membership (ISSUE 8): suspicion-driven replacement,
+precomputed reconfiguration plans, rolling full-group rotation.
+
+Covers the tentpole end to end:
+
+* :class:`~repro.core.health.PlanTable` — one precomputed plan per
+  possible target, staleness detection, chained rotation plans;
+* autonomous detect → replace → recover for a crashed replica and for a
+  gray-degraded (``slow_replica``) one, with the detection/recovery
+  timeline recorded on the monitor;
+* hysteresis and gating: a healthy group never replaces anyone, a stale
+  plan never executes, ``replace_replica`` rejects bad requests with
+  clear reasons (and raises with ``strict=True``);
+* the rolling 2f+1 rotation: every seat replaced through consecutive
+  epoch bumps, strictly one replacement in flight, the group serving
+  requests afterwards;
+* the telemetry surface: ``Cluster.stats()`` exposes per-replica health
+  counters, per-pool rekey/abort counts and the suspicion state.
+"""
+
+import pytest
+
+from repro.apps.kvstore import KVStoreApp, set_req
+from repro.core.consensus import ConsensusConfig
+from repro.core.health import (HealthConfig, ReconfigPlan, as_health_config)
+from repro.core.smr import Cluster, ReplacementError
+from repro.core.substrate import Substrate
+from repro.sim.faults import FaultInjector, FaultSchedule
+
+
+def _registers_cfg(**kw):
+    base = dict(t=16, window=16, slow_mode="always", ctb_fast_enabled=False,
+                view_timeout_us=20_000.0)
+    base.update(kw)
+    return ConsensusConfig(**base)
+
+
+def _cluster(seed=0, n_pools=2, cfg=None, heal=None):
+    substrate = Substrate(n_pools=n_pools, seed=seed)
+    c = Cluster.attach(substrate, KVStoreApp, name="",
+                       cfg=cfg or _registers_cfg())
+    mon = c.enable_self_healing(heal) if heal is not None else None
+    return c, mon
+
+
+def _run_kv(cluster, client, lo, hi, acked, timeout=600_000_000):
+    for i in range(lo, hi):
+        k, v = b"k%d" % (i % 4), b"v%d" % i
+        r, _ = cluster.run_request(client, set_req(k, v), timeout=timeout)
+        assert r == b"OK"
+        acked[k] = v
+
+
+def _assert_converged(cluster, acked):
+    cluster.sim.run(until=cluster.sim.now + 100_000)
+    live = [r for r in cluster.replicas if not r.crashed and not r.joining]
+    for rep in live:
+        for k, v in acked.items():
+            assert rep.app.store.get(k) == v, (rep.pid, k, v)
+    for a, b in zip(live, live[1:]):
+        assert a.app.store == b.app.store
+
+
+# --------------------------------------------------------------------------
+# HealthConfig normalization
+# --------------------------------------------------------------------------
+def test_as_health_config_accepts_true_dict_and_instance():
+    assert as_health_config(True) == HealthConfig()
+    assert as_health_config(None) == HealthConfig()
+    assert as_health_config({"hb_us": 250.0}).hb_us == 250.0
+    hc = HealthConfig(budget=9)
+    assert as_health_config(hc) is hc
+    with pytest.raises(TypeError):
+        as_health_config(42)
+
+
+# --------------------------------------------------------------------------
+# PlanTable
+# --------------------------------------------------------------------------
+def test_plan_table_one_plan_per_member():
+    c, mon = _cluster(seed=1, heal=True)
+    plans = mon.plans.plans
+    assert set(plans) == {"r0", "r1", "r2"}
+    for old, plan in plans.items():
+        assert plan.epoch == 1
+        assert plan.old_pid == old
+        assert plan.new_pid == "r3"          # deterministic joiner pid
+        assert plan.members == ("r0", "r1", "r2")
+        assert plan.xfer_sources == tuple(
+            m for m in ("r0", "r1", "r2") if m != old)
+        assert plan.rekey_order == tuple(p.name for p in c.pools)
+        assert plan.neighborhood[0] == 1      # f
+        assert mon.plans.current(plan)
+
+
+def test_plan_goes_stale_after_epoch_switch():
+    c, mon = _cluster(seed=2, heal=True)
+    stale = mon.plans.plan_for("r1")
+    c.replicas[2].crash()
+    assert c.replace_replica("r2") is not None
+    c.sim.run(until=c.sim.now + 50_000)
+    assert c.current_epoch() == 1
+    assert not mon.plans.current(stale)
+    # executing the stale plan is refused with a clear reason
+    assert c.replace_replica("r1", plan=stale) is None
+    assert "stale plan" in c.rejected_replacements[-1][2]
+    # refreshed table targets the new membership and the next joiner pid
+    mon.plans.refresh()
+    fresh = mon.plans.plan_for("r1")
+    assert fresh.epoch == 2 and fresh.new_pid == "r4"
+    assert fresh.members == ("r0", "r1", "r3")
+
+
+def test_rotation_chain_is_consecutive_and_membership_chained():
+    c, mon = _cluster(seed=3, heal=True)
+    chain = mon.plans.rotation()
+    assert [p.epoch for p in chain] == [1, 2, 3]
+    # leader-last: the seated leader (r0, view 0) is rotated in the final
+    # step so only one view change is paid across the whole rotation
+    assert c.current_leader() == "r0"
+    assert [p.old_pid for p in chain] == ["r1", "r2", "r0"]
+    assert [p.new_pid for p in chain] == ["r3", "r4", "r5"]
+    # each plan's expected membership is the previous plan's outcome
+    assert chain[0].members == ("r0", "r1", "r2")
+    assert chain[1].members == ("r0", "r3", "r2")
+    assert chain[2].members == ("r0", "r3", "r4")
+
+
+# --------------------------------------------------------------------------
+# replace_replica guards
+# --------------------------------------------------------------------------
+def test_replace_guards_reject_with_reasons():
+    c, _ = _cluster(seed=4)
+    assert c.replace_replica("nope") is None
+    assert "unknown pid" in c.rejected_replacements[-1][2]
+    with pytest.raises(ReplacementError):
+        c.replace_replica("nope", strict=True)
+
+    c.replicas[2].crash()
+    joiner = c.replace_replica("r2")
+    assert joiner is not None
+    # target mid-replacement / second replacement in flight
+    assert c.replace_replica(joiner.pid) is None
+    assert "joiner" in c.rejected_replacements[-1][2]
+    assert c.replace_replica("r1") is None
+    assert "in flight" in c.rejected_replacements[-1][2]
+    c.sim.run(until=c.sim.now + 50_000)
+    # already retired by the committed switch
+    assert c.replace_replica("r2") is None
+    assert "already retired" in c.rejected_replacements[-1][2]
+    # every rejection carries (time, pid, reason)
+    assert all(len(rec) == 3 for rec in c.rejected_replacements)
+
+
+def test_replace_guard_rejects_conflicting_new_pid():
+    c, mon = _cluster(seed=5, heal=True)
+    plan = mon.plans.plan_for("r2")
+    c.replicas[2].crash()
+    assert c.replace_replica("r2", new_pid="weird", plan=plan) is None
+    assert "conflicts" in c.rejected_replacements[-1][2]
+    # the plan itself still executes afterwards (the guard had no effect)
+    assert c.replace_replica("r2", plan=plan) is not None
+
+
+# --------------------------------------------------------------------------
+# Autonomous detection and replacement
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [5, 11])
+def test_crash_is_detected_and_replaced_autonomously(seed):
+    c, mon = _cluster(seed=seed, heal=True)
+    cl = c.new_client()
+    acked = {}
+    _run_kv(c, cl, 0, 6, acked)
+    t_crash = c.sim.now
+    c.replicas[2].crash()
+    c.sim.run(until=c.sim.now + 60_000)
+    assert len(mon.replacements) == 1
+    rec = mon.replacements[0]
+    assert rec["target"] == "r2" and rec["new"] == "r3"
+    assert t_crash <= rec["t_detect"] <= rec["t_fire"]
+    assert rec["t_active"] is not None and rec["t_active"] >= rec["t_fire"]
+    # detection + recovery well inside the fault-schedule noise floor
+    assert rec["t_active"] - t_crash < 30_000.0
+    assert c.current_epoch() == 1
+    assert "r2" not in c.current_members()
+    _run_kv(c, cl, 6, 12, acked)
+    _assert_converged(c, acked)
+
+
+@pytest.mark.parametrize("seed", [11, 29])
+def test_gray_degraded_replica_is_detected_and_replaced(seed):
+    """A slow_replica (alive, but delaying and dropping every send) is
+    caught by heartbeat *age* even though its heartbeats keep arriving."""
+    c, mon = _cluster(seed=seed, heal=True)
+    sched = FaultSchedule().add(
+        2_000.0, "slow_replica",
+        ("r1", {"delay_us": 1500.0, "drop": 0.5, "seed": 3}))
+    FaultInjector.for_cluster(c, sched)
+    cl = c.new_client()
+    acked = {}
+    _run_kv(c, cl, 0, 20, acked)
+    c.sim.run(until=c.sim.now + 80_000)
+    assert mon.replacements, "gray failure went undetected"
+    assert all(rec["target"] == "r1" for rec in mon.replacements)
+    assert "r1" not in c.current_members()
+    c.net.clear_degrade("r1")     # the sick NIC is out of the group now
+    _run_kv(c, cl, 20, 26, acked)
+    _assert_converged(c, acked)
+
+
+def test_healthy_group_never_replaces_anyone():
+    c, mon = _cluster(seed=6, heal=True)
+    cl = c.new_client()
+    acked = {}
+    _run_kv(c, cl, 0, 12, acked)
+    c.sim.run(until=c.sim.now + 100_000)
+    assert mon.replacements == []
+    assert mon.accusations == {} or all(
+        not acc for acc in mon.accusations.values())
+    assert c.current_epoch() == 0
+    _assert_converged(c, acked)
+
+
+def test_suspicion_retracts_when_peer_recovers():
+    """A transiently degraded peer is accused, then retracted once its
+    heartbeats flow again — hysteresis, not eviction (the accusation
+    quorum holds < hold_us or the budget gates fire)."""
+    cfg = HealthConfig(hold_us=30_000.0)   # hold long enough to recover
+    c, mon = _cluster(seed=7, heal=cfg)
+    c.net.degrade_src("r2", delay_us=2_500.0, drop=0.0, seed=1)
+    c.sim.run(until=c.sim.now + 8_000)
+    accused = {a for (_t, a, tgt, _s, kind) in mon.suspicion_log
+               if kind == "accuse" and tgt == "r2"}
+    assert accused, "degradation never raised suspicion"
+    c.net.clear_degrade("r2")
+    c.sim.run(until=c.sim.now + 60_000)
+    retracted = {a for (_t, a, tgt, _s, kind) in mon.suspicion_log
+                 if kind == "retract" and tgt == "r2"}
+    assert accused <= retracted
+    assert mon.replacements == []
+    assert c.current_epoch() == 0
+
+
+def test_seat_backoff_and_budget_gate_repeat_fires():
+    """After one automatic replacement the same seat backs off
+    exponentially and the global cooldown defers immediate refires."""
+    cfg = HealthConfig(cooldown_us=30_000.0, backoff_base_us=50_000.0)
+    c, mon = _cluster(seed=8, heal=cfg)
+    c.replicas[2].crash()
+    c.sim.run(until=c.sim.now + 30_000)
+    assert len(mon.replacements) == 1
+    assert mon._seat_backoff[2][0] == 1
+    # the replacement seat (slot 2) now needs backoff_base_us to elapse;
+    # crash the joiner immediately and watch the gates defer
+    c.replicas[2].crash()
+    c.sim.run(until=c.sim.now + 20_000)
+    reasons = {r for (_t, _tgt, r) in mon.deferred}
+    assert any("cooldown" in r or "backoff" in r for r in reasons), reasons
+
+
+# --------------------------------------------------------------------------
+# Rolling full-group rotation
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+def test_rolling_rotation_replaces_every_seat():
+    c, mon = _cluster(seed=21, heal=True)
+    cl = c.new_client()
+    acked = {}
+    _run_kv(c, cl, 0, 8, acked)
+    done = []
+    mon.rotate(lambda: done.append(c.sim.now))
+    with pytest.raises(RuntimeError):
+        mon.rotate()                      # one rotation at a time
+    c.sim.run(until=c.sim.now + 300_000)
+    assert done and not mon.rotating
+    assert [e["epoch"] for e in mon.rotation_log] == [1, 2, 3]
+    assert all(e["t_done"] is not None for e in mon.rotation_log)
+    # strictly sequential: step k+1 fires only after step k completed
+    for a, b in zip(mon.rotation_log, mon.rotation_log[1:]):
+        assert b["t_fire"] >= a["t_done"]
+    assert c.current_epoch() == 3
+    assert sorted(c.current_members()) == ["r3", "r4", "r5"]
+    # the rotated group still serves requests, history preserved
+    _run_kv(c, cl, 8, 16, acked)
+    _assert_converged(c, acked)
+
+
+@pytest.mark.slow
+def test_rotation_under_load_stays_safe():
+    c, mon = _cluster(seed=13, heal=True)
+    cl = c.new_client()
+    acked = {}
+    _run_kv(c, cl, 0, 6, acked)
+    done = []
+    mon.rotate(lambda: done.append(c.sim.now))
+    # keep writing while all three seats rotate underneath the client
+    _run_kv(c, cl, 6, 40, acked)
+    c.sim.run(until=c.sim.now + 300_000)
+    assert done and c.current_epoch() == 3
+    _assert_converged(c, acked)
+
+
+# --------------------------------------------------------------------------
+# Telemetry surface
+# --------------------------------------------------------------------------
+def test_stats_surface_counters_and_suspicions():
+    c, mon = _cluster(seed=9, heal=True)
+    c.replicas[2].crash()
+    c.sim.run(until=c.sim.now + 40_000)
+    st = c.stats()
+    assert st["epoch"] == 1
+    assert st["members"] == list(c.current_members())
+    assert st["auto_replacements"] and \
+        st["auto_replacements"][0]["target"] == "r2"
+    assert not st["replacement_in_flight"]
+    for name, pool in st["pools"].items():
+        assert set(pool) == {"rekeys", "aborted_rekeys", "aborted_syncs",
+                             "reconfigurations"}
+        assert pool["rekeys"] == 1        # exactly the r2 -> r3 rekey
+    for pid, h in st["health"].items():
+        assert {"starvations", "view_changes", "seated_past"} <= set(h)
+    # live agents also expose their miss/suspect state
+    live_pid = c.replicas[0].pid
+    assert "hb_misses" in st["health"][live_pid]
+    assert "suspects" in st["health"][live_pid]
+    assert isinstance(st["suspicions"], dict)
+    assert st["rejected_replacements"] == []
+
+
+def test_stats_without_health_layer_has_no_suspicions_key():
+    c, _ = _cluster(seed=10)
+    st = c.stats()
+    assert "suspicions" not in st and "auto_replacements" not in st
+    assert st["epoch"] == 0
+    # consensus health counters exist even with the layer off (they are
+    # plain local counters, zero wire traffic)
+    assert all(h["starvations"] >= 0 for h in st["health"].values())
+
+
+# --------------------------------------------------------------------------
+# Scenario / service wiring
+# --------------------------------------------------------------------------
+def test_scenario_appspec_self_heal_wires_monitor():
+    from repro.scenario import AppSpec, ScenarioSpec, Workload, run_scenario
+
+    spec = ScenarioSpec(
+        n_pools=2, seed=15, drain_us=20_000.0,
+        apps=[AppSpec(name="", app=KVStoreApp, cfg=_registers_cfg(),
+                      self_heal={"hb_us": 300.0},
+                      workload=Workload(kind="closed", n_requests=6,
+                                        payload_fn=lambda i: set_req(
+                                            b"a%d" % (i % 2), b"b%d" % i),
+                                        seed=3))])
+    res = run_scenario(spec)
+    mon = res.clusters[""].health_monitor
+    assert mon is not None and mon.cfg.hb_us == 300.0
+    assert mon.replacements == []      # healthy run
+
+
+def test_sharded_service_self_heal_covers_every_shard():
+    from repro.service import ShardedService
+
+    substrate = Substrate(n_pools=2, seed=16)
+    svc = ShardedService.attach(substrate, 2, name="kv",
+                                cfg=_registers_cfg(), self_heal=True)
+    for shard in svc.shards:
+        assert shard.health_monitor is not None
+    assert svc._self_heal is True      # split-born shards inherit it
