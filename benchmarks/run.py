@@ -21,7 +21,11 @@ the dry-run artifacts (artifacts/dryrun/*.json) when present.
 * ``BENCH_selfheal.json`` — self-healing membership (gray-failure
   detect→replace timeline, rolling full-group rotation tails vs a
   no-fault baseline) from ``benchmarks/selfheal.py`` (when the
-  ``selfheal`` figure is run).
+  ``selfheal`` figure is run);
+* ``BENCH_inference.json`` — replicated inference serving (steady-state
+  consensus overhead vs the unreplicated baseline, flash-crowd SLO
+  attainment with vs without admission control) from
+  ``benchmarks/inference.py`` (when the ``inference`` figure is run).
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--json] [figure ...]
 """
@@ -46,9 +50,9 @@ def _write_json(path: str, payload: dict) -> None:
 def main() -> None:
     from benchmarks import (engine_perf, fig7_app_latency, fig8_request_size,
                             fig9_breakdown, fig10_nonequivocation,
-                            fig11_reconfig, fig11_tail_latency, selfheal,
-                            sharded, shared_pools, table2_memory, throughput,
-                            roofline)
+                            fig11_reconfig, fig11_tail_latency, inference,
+                            selfheal, sharded, shared_pools, table2_memory,
+                            throughput, roofline)
     mods = {
         "fig7": fig7_app_latency,
         "fig8": fig8_request_size,
@@ -61,6 +65,7 @@ def main() -> None:
         "shared": shared_pools,
         "sharded": sharded,
         "selfheal": selfheal,
+        "inference": inference,
         "engine": engine_perf,
         "roofline": roofline,
     }
@@ -104,6 +109,8 @@ def main() -> None:
             _write_json("BENCH_sharded.json", results["sharded"])
         if "selfheal" in results:
             _write_json("BENCH_selfheal.json", results["selfheal"])
+        if "inference" in results:
+            _write_json("BENCH_inference.json", results["inference"])
         if "throughput" in results:
             tp = results["throughput"]
             protocol = {

@@ -35,6 +35,7 @@ import numpy as np
 from benchmarks.common import emit, percentiles, tune_runtime
 from repro.core.consensus import ConsensusConfig
 from repro.scenario import ScenarioSpec, ServiceSpec, Workload, run_scenario
+from repro.workloads import ramp_times
 
 N_POOLS = 2
 KEYSPACE = 128
@@ -162,15 +163,11 @@ def _split_run(do_split: bool, duration_us: float, late_us: float,
     sub = Substrate(f_m=1, n_pools=N_POOLS, seed=seed)
     svc = ShardedService.attach(sub, n_shards=KNEE_K, cfg=_cfg())
 
+    # the ramp is the workload library's flash-crowd ramp (one
+    # implementation; ramp_times draws exactly the exponential vector the
+    # hand-rolled recipe did, so the schedule is byte-identical)
     rng = np.random.default_rng(11)
-    r0 = SPLIT_RATE0_RPS / 1e6          # ops per µs at t=0
-    r1 = SPLIT_RATE1_RPS / 1e6
-    slope = (r1 - r0) / duration_us
-    lam_total = (r0 + r1) / 2.0 * duration_us
-    lam = np.cumsum(rng.exponential(1.0, size=int(lam_total * 1.1) + 100))
-    lam = lam[lam <= lam_total]
-    # invert Λ(t) = r0·t + slope·t²/2 for each arrival
-    times = (np.sqrt(r0 * r0 + 2.0 * slope * lam) - r0) / slope
+    times = ramp_times(rng, SPLIT_RATE0_RPS, SPLIT_RATE1_RPS, duration_us)
     n_ops = len(times)
     p = np.arange(1, KEYSPACE + 1, dtype=float) ** -SPLIT_THETA
     key_idx = rng.choice(KEYSPACE, size=n_ops, p=p / p.sum())

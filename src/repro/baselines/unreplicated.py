@@ -17,13 +17,34 @@ from repro.sim.net import NetParams, NetworkModel
 
 
 class UnreplicatedServer(Node):
+    """Single server, same network primitive.  Apps with a non-zero
+    ``App.cost_us`` get the same serial service model as the replicated
+    deferred execution engine — one decode engine, FIFO — so replicated
+    vs unreplicated comparisons isolate the consensus overhead instead
+    of handing the baseline an infinitely parallel app."""
+
     def __init__(self, sim, net, registry, pid: str, app: App):
         super().__init__(sim, net, registry, pid)
         self.app = app
+        self._app_has_cost = type(app).cost_us is not App.cost_us
+        self._busy_until = 0.0
         self.handle("REQ", self._on_req)
 
     def _on_req(self, src: str, body) -> None:
         rid, payload = body
+        if self._app_has_cost:
+            cost = self.app.cost_us(payload)
+            if cost > 0.0:
+                start = max(self.sim.now, self._busy_until)
+                self._busy_until = start + cost
+
+                def _finish() -> None:
+                    result = self.app.apply(payload)
+                    self.send(src, "REP", (rid, result))
+
+                self.sim.at(self._busy_until, _finish,
+                            note="unrepl.service")
+                return
         result = self.app.apply(payload)
         self.send(src, "REP", (rid, result))
 

@@ -48,6 +48,37 @@ from repro.sim.net import NetworkModel
 # Configuration
 # --------------------------------------------------------------------------
 @dataclass
+class AdmissionConfig:
+    """SLO-aware admission control at the leader (the serving plane).
+
+    When the leader's client backlog (requests accepted but not yet
+    executed — the queue depth against the §5.4 direct-copy horizon)
+    exceeds ``queue_high``, newly echoed client requests are not fed
+    into the pipeline; instead the leader proposes an agreed *shed
+    marker* ``(("shed", rid), "", b"")`` for them.  Executing the marker
+    makes every honest replica send the identical deterministic
+    ``reply`` (default ``b"BUSY"``), so the client completes on the
+    normal f+1 matching-reply quorum instead of timing out into the
+    collapsing queue.
+
+    Sheds are *agreed*, and followers are their auditors: a replica only
+    endorses (or signs a certificate over) a shed-bearing slot while its
+    own backlog is at least ``queue_accept`` — a Byzantine leader
+    shedding honest requests under light load never collects an honest
+    certificate quorum and loses its view to the normal progress timer.
+    """
+    queue_high: int = 64           # leader sheds above this backlog
+    queue_accept: Optional[int] = None   # follower vouch floor (default high/2)
+    max_shed: int = 8              # shed markers per batch slot
+    reply: bytes = b"BUSY"         # deterministic agreed reply
+
+    def accept_floor(self) -> int:
+        if self.queue_accept is not None:
+            return self.queue_accept
+        return max(1, self.queue_high // 2)
+
+
+@dataclass
 class ConsensusConfig:
     window: int = 256          # consensus slots per checkpoint (§7)
     t: int = 128               # CTBcast tail parameter (§7)
@@ -83,6 +114,10 @@ class ConsensusConfig:
     # recorded scenarios predate the mechanism).  The self-healing
     # membership layer turns it on.
     gap_repair_us: Optional[float] = None
+    # SLO-aware admission control (the serving plane).  None — the
+    # default, and every recorded scenario — disables shedding entirely:
+    # no shed markers are proposed, validated, or accepted on the wire.
+    admission: Optional[AdmissionConfig] = None
 
 
 # --------------------------------------------------------------------------
@@ -104,6 +139,21 @@ class App:
         caller; apps enforcing caller-bound operations (e.g. the 2PC
         coordinator's owner-only commit-DECIDE) override this."""
         return self.apply(req)
+
+    def cost_us(self, req: bytes) -> float:
+        """Deterministic execution cost of one request in simulated µs.
+
+        The default (0.0 — and any app that does not override this) keeps
+        execution instantaneous, exactly the pre-serving-plane behaviour.
+        An app that overrides it (e.g. the token server charging roofline
+        decode time per generated token) turns on the deferred execution
+        engine: each decided slot occupies the replica's serial app engine
+        for the batch's summed cost before it applies, so ``exec_upto``
+        lags the decided frontier by the true service backlog.  Must be a
+        pure function of the request bytes and the app state at the
+        slot's execution point — every honest replica computes it at the
+        same state, so the engine stays deterministic."""
+        return 0.0
 
     def snapshot(self) -> Any:
         return None
@@ -449,6 +499,35 @@ class UbftReplica(Node):
         self.svc_validators: Dict[str, Callable[[tuple, bytes], bool]] = {}
         self._svc_wait: Set[Tuple[int, int]] = set()
 
+        # SLO-aware admission control (cfg.admission; the serving plane).
+        # ``_client_backlog`` counts pending_req entries with a client
+        # field — accepted-but-unexecuted client requests, i.e. the queue
+        # depth against the execution horizon — maintained O(1) at the
+        # _pend_put/_pend_pop choke points.
+        self.shed_queue: Deque[tuple] = deque()   # rids queued to shed
+        self._client_backlog = 0
+        self.admission_stats: Dict[str, int] = {
+            "shed": 0,           # rids this leader routed to the shed path
+            "busy_replies": 0,   # BUSY replies executed here
+            "dup_sheds": 0,      # shed markers that lost the race to apply
+        }
+        # Deferred execution engine (App.cost_us; the serving plane).
+        # Checked once: apps that keep the zero-cost default execute
+        # inline on the exact pre-existing path.
+        self._app_has_cost = type(app).cost_us is not App.cost_us
+        self._exec_inflight: Optional[int] = None
+        self._exec_gen = 0
+        if self._app_has_cost:
+            # Node.timer swallows callbacks that fire while crashed, so a
+            # crash mid-service would otherwise leave the engine wedged
+            # on a completion that never arrives
+            self.recover_hooks.append(self._exec_recover)
+
+        # Per-stream high-water marks for slot-keyed TBcast votes, plus
+        # the overflow-stream key counters (see _tb_slot_broadcast)
+        self._tb_slot_hwm: Dict[str, int] = {}
+        self._tb_overflow_k: Dict[str, int] = {}
+
         self._progress_timer_armed = False
 
     # ------------------------------------------------------------------
@@ -476,6 +555,39 @@ class UbftReplica(Node):
         if full is None:
             full = self._STREAMS[stream] = f"cons/{stream}"
         self.tb.broadcast(full, key, payload, self.replicas)
+
+    def _tb_slot_broadcast(self, stream: str, s: int, payload: Any) -> None:
+        """TBcast a per-slot vote, keyed by the slot — with a catch: TBcast
+        receivers deliver strictly FIFO per (origin, stream), and the
+        sender's window floor (``min_k``) skips them past any key it never
+        buffered.  A vote for a slot *below* this stream's high-water mark
+        (a re-certify in a later view, after an endorsement-gate refusal
+        let higher slots overtake it) would therefore arrive below the
+        receiver's FIFO pointer and be dropped as a duplicate forever —
+        wedging the slot across every subsequent view.  Such votes ride a
+        dedicated monotone-keyed overflow stream instead (``<stream>2``,
+        prefix-routed to the same handler; the payload, not the key,
+        carries the slot)."""
+        hwm = self._tb_slot_hwm.get(stream, -1)
+        if s > hwm:
+            self._tb_slot_hwm[stream] = s
+            self._tb_broadcast(stream, s, payload)
+            return
+        over = stream + "2"
+        k = self._tb_overflow_k.get(over, 0)
+        self._tb_overflow_k[over] = k + 1
+        self._tb_broadcast(over, k, payload)
+
+    def _pend_put(self, rid: tuple, req: tuple) -> None:
+        """Insert into pending_req, keeping the client-backlog counter."""
+        if rid not in self.pending_req and req[1] != "":
+            self._client_backlog += 1
+        self.pending_req[rid] = req
+
+    def _pend_pop(self, rid: tuple) -> None:
+        req = self.pending_req.pop(rid, None)
+        if req is not None and req[1] != "":
+            self._client_backlog -= 1
 
     # ==================================================================
     # RPC (client requests; §5.4 Echo round)
@@ -508,9 +620,9 @@ class UbftReplica(Node):
                         self.send(src, "REP", (rid, self.results[s][i]))
                         return
             return
-        self.pending_req[rid] = req
+        self._pend_put(rid, req)
         if len(self.pending_req) > 4 * self.cfg.window:  # Byzantine clients
-            self.pending_req.pop(next(iter(self.pending_req)))
+            self._pend_pop(next(iter(self.pending_req)))
         # release any PREPARE that waited for the direct client copy; a
         # batched slot is endorsed once ALL its missing rids have arrived
         for (v, s) in self.waiting_prepare.pop(rid, []):
@@ -561,6 +673,16 @@ class UbftReplica(Node):
     def _enqueue_proposal(self, req: tuple) -> None:
         rid = req[0]
         if rid in self.proposed_rids:
+            return
+        adm = self.cfg.admission
+        if (adm is not None and req[1] != "" and
+                self._client_backlog > adm.queue_high):
+            # over the queue-depth horizon: shed with an agreed BUSY
+            # marker instead of feeding the overload into the pipeline
+            self.proposed_rids.add(rid)
+            self.shed_queue.append(rid)
+            self.admission_stats["shed"] += 1
+            self._drain_proposals()
             return
         self.proposed_rids.add(rid)
         self.propose_queue.append(req)
@@ -628,6 +750,18 @@ class UbftReplica(Node):
             batch.append(req)
             rids.add(req[0])
             size += len(req[2])
+        adm = self.cfg.admission
+        if adm is not None and self.shed_queue:
+            # shed markers ride along (or form a shed-only slot): agreed,
+            # zero-payload, and capped so they never starve real requests
+            n_shed = 0
+            while self.shed_queue and n_shed < adm.max_shed:
+                orig = self.shed_queue.popleft()
+                if orig in self.decided_rids or orig in rids:
+                    continue  # settled (or racing a real proposal) already
+                batch.append((("shed", orig), "", b""))
+                rids.add(orig)
+                n_shed += 1
         return tuple(batch) if batch else None
 
     def _full_batch_queued(self) -> bool:
@@ -655,16 +789,17 @@ class UbftReplica(Node):
             # fresh batch now can land on an already-decided slot — a
             # duplicate PREPARE that byz-blocks my own stream everywhere
             return
-        while (self.propose_queue and
+        while ((self.propose_queue or self.shed_queue) and
                self.next_slot in self.checkpoint.open_slots and
                self._slots_in_flight() < self.cfg.pipeline_depth):
             # drop already-decided heads (stale after view changes)
             while (self.propose_queue and
                    self.propose_queue[0][0] in self.decided_rids):
                 self.propose_queue.popleft()
-            if not self.propose_queue:
+            if not self.propose_queue and not self.shed_queue:
                 return
-            if (self.cfg.batch_timeout_us > 0 and
+            if (self.propose_queue and
+                    self.cfg.batch_timeout_us > 0 and
                     not self._batch_flush_due and
                     not self._full_batch_queued()):
                 # wait (bounded) for more requests to coalesce
@@ -789,31 +924,58 @@ class UbftReplica(Node):
             batch = as_batch(raw)
         except TypeError:
             return None
-        if not 1 <= len(batch) <= self.cfg.max_batch:
+        adm = self.cfg.admission
+        cap = self.cfg.max_batch + (adm.max_shed if adm is not None else 0)
+        if not 1 <= len(batch) <= cap:
             return None
         total = 0
         rids = set()
+        n_real = 0
+        n_shed = 0
         for r in batch:
             if not (isinstance(r, tuple) and len(r) == 3 and
                     isinstance(r[1], str) and isinstance(r[2], bytes)):
                 return None
-            if r[1] != "" and not (isinstance(r[0], tuple) and r[0] and
-                                   r[0][0] == r[1]):
+            rid = r[0]
+            if (isinstance(rid, tuple) and len(rid) == 2 and
+                    rid[0] == "shed" and r[1] == ""):
+                # an admission shed marker: only meaningful — and only
+                # valid on the wire — when admission control is deployed;
+                # the shed's *target* rid joins the duplicate check so a
+                # slot can never both apply and shed the same request
+                orig = rid[1]
+                if (adm is None or r[2] != b"" or
+                        not (isinstance(orig, tuple) and orig and
+                             isinstance(orig[0], str))):
+                    return None
+                if orig in rids or rid in rids:
+                    return None
+                rids.add(orig)
+                rids.add(rid)
+                n_shed += 1
+                continue
+            n_real += 1
+            if r[1] != "" and not (isinstance(rid, tuple) and rid and
+                                   rid[0] == r[1]):
                 # a client request's rid leads with the client pid (checked
                 # against the network sender at REQ ingress); a batch whose
                 # ``client`` field disagrees is a leader forging the caller
                 # identity that ``App.apply_from`` will be handed
                 return None
             try:
-                rids.add(r[0])  # rids key sets/dicts everywhere downstream
+                if rid in rids:   # duplicate rids: one reply per rid
+                    return None
+                rids.add(rid)  # rids key sets/dicts everywhere downstream
             except TypeError:
                 return None
             if len(r[2]) > self.cfg.max_request_bytes:
                 return None
             total += len(r[2])
-        if len(rids) != len(batch):   # duplicate rids: one reply per rid
+        if n_real > self.cfg.max_batch:
             return None
-        if len(batch) > 1 and total > self.cfg.max_batch_bytes:
+        if n_shed and (adm is None or n_shed > adm.max_shed):
+            return None
+        if n_real > 1 and total > self.cfg.max_batch_bytes:
             return None
         return batch
 
@@ -866,7 +1028,7 @@ class UbftReplica(Node):
                 # the leader's copy contradicts the client's direct copy
                 # (§5.4): never adopt or endorse a rewritten request
                 return
-        if not self._svc_certifiable(raw):
+        if not self._batch_certifiable(raw):
             # an unjustifiable service request is not even *stored*: were it
             # kept in my_prepared, an honest replica leading the next view
             # would faithfully re-propose it (_repropose) and a Byzantine
@@ -918,6 +1080,39 @@ class UbftReplica(Node):
                     return False
         return True
 
+    def _admission_ok(self, raw: Any) -> bool:
+        """May this replica vouch for a slot carrying shed markers?  A
+        shed is justified only while this replica's *own* client backlog
+        confirms the overload (the ``queue_accept`` floor) — a Byzantine
+        leader shedding honest requests under light load never collects
+        an honest certificate quorum and loses its view to the normal
+        progress timer.  Deployments without admission control never see
+        shed markers past ``_valid_batch``, so this is a no-op there."""
+        adm = self.cfg.admission
+        if adm is None:
+            return True
+        floor = adm.accept_floor()
+        for r in as_batch(raw):
+            rid = r[0]
+            if (r[1] == "" and isinstance(rid, tuple) and len(rid) == 2 and
+                    rid[0] == "shed"):
+                orig = rid[1]
+                if orig in self.decided_rids or orig in self.executed_rids:
+                    continue   # settled elsewhere: the shed is a no-op
+                if orig not in self.pending_req:
+                    # an honest client broadcasts to every replica, so a
+                    # rid we never saw has no honest client waiting on it
+                    # — shedding it cannot censor anyone we answer to
+                    continue
+                if self._client_backlog < floor:
+                    return False
+        return True
+
+    def _batch_certifiable(self, raw: Any) -> bool:
+        """All local-justification gates a batch must pass before this
+        replica promises or signs for it (svc validators + admission)."""
+        return self._admission_ok(raw) and self._svc_certifiable(raw)
+
     def _arm_svc_recheck(self, v: int, s: int) -> None:
         if (v, s) in self._svc_wait:
             return
@@ -945,7 +1140,7 @@ class UbftReplica(Node):
             # the view moves on
             self._arm_svc_recheck(v, s)
             return
-        if not self._svc_certifiable(pr[1]):
+        if not self._batch_certifiable(pr[1]):
             self._arm_svc_recheck(v, s)
             return
         if (v, s) not in self.my_will_certifies:
@@ -958,12 +1153,12 @@ class UbftReplica(Node):
         if v != self.view or s not in self.checkpoint.open_slots:
             return
         pr = self.my_prepared.get(s)
-        if pr is not None and pr[0] == v and not self._svc_certifiable(pr[1]):
+        if pr is not None and pr[0] == v and not self._batch_certifiable(pr[1]):
             self._arm_svc_recheck(v, s)
             return
         if self.cfg.fast_enabled:
             self.my_will_certifies.add((v, s))
-            self._tb_broadcast("WILL_CERTIFY", s, (v, s))      # line 21
+            self._tb_slot_broadcast("WILL_CERTIFY", s, (v, s))  # line 21
         else:
             self._do_certify(v, s)
 
@@ -981,17 +1176,18 @@ class UbftReplica(Node):
         pr = self.my_prepared.get(s)
         if pr is None or pr[0] != v:
             return
-        if not self._svc_certifiable(pr[1]):
+        if not self._batch_certifiable(pr[1]):
             # the slow path reaches here without passing _endorse, so the
             # service-slot gate must sit on the signature itself: no
-            # honest certificate for an unjustified svc request
+            # honest certificate for an unjustified svc request (or an
+            # unjustified admission shed)
             self._arm_svc_recheck(v, s)
             return
         self.my_certified.add((v, s))
         req = pr[1]
         fp = crypto.fingerprint_cached(req)
         payload = ("certify", v, s, fp)
-        self.async_sign(payload, lambda sig: self._tb_broadcast(
+        self.async_sign(payload, lambda sig: self._tb_slot_broadcast(
             "CERTIFY", s, (v, s, fp, sig)))
 
     def _on_certify(self, q: str, body: tuple) -> None:
@@ -1079,7 +1275,7 @@ class UbftReplica(Node):
                 s in self.checkpoint.open_slots and
                 (v, s) not in self.my_will_commits):
             self.my_will_commits.add((v, s))
-            self._tb_broadcast("WILL_COMMIT", s, (v, s))       # line 27
+            self._tb_slot_broadcast("WILL_COMMIT", s, (v, s))   # line 27
 
     def _on_will_commit(self, origin: str, stream: str, key: int,
                         payload: Any) -> None:
@@ -1145,53 +1341,137 @@ class UbftReplica(Node):
         self._arm_gap_repair()
 
     def _execute_ready(self) -> None:
+        if self._app_has_cost:
+            # deferred engine: slots occupy the serial app engine for
+            # their summed App.cost_us before applying
+            self._exec_pump()
+            return
         while self.exec_upto + 1 in self.decided:
-            s = self.exec_upto + 1
-            results = []
-            # the batch executes atomically (one slot), replies per-request
-            for rid, client, payload in self.decided[s]:
-                if (client == "" and isinstance(rid, tuple) and
-                        len(rid) == 4 and rid[0] == "member"):
-                    # agreed MEMBERSHIP slot: every honest replica applies
-                    # the epoch bump at the same point of its execution
-                    # order — the switch is atomic across the group
-                    self._apply_membership(rid[1], rid[2], rid[3], s)
-                if (client == "" and isinstance(rid, tuple) and rid and
-                        rid[0] == "svc" and rid not in self.executed_rids):
-                    # service-level request (cross-shard 2PC recovery):
-                    # applied to the app like a client request, but with no
-                    # reply — there is no client waiting, the effect IS the
-                    # point (e.g. a presumed-abort FINISH releasing locks)
-                    result = self.app.apply_from("", payload)
-                    self.executed_rids.add(rid)
-                    results.append(result)
-                    self.pending_req.pop(rid, None)
-                    self.echoes.pop(rid, None)
-                    for hook in self.on_execute_hooks:
-                        hook(s, rid, payload, result)
-                    continue
-                if client == "" or rid in self.executed_rids:
-                    # no-op / duplicate: does not touch the app and sends
-                    # no reply (a duplicate's real reply came from the slot
-                    # that executed it; a second b"" REP could otherwise
-                    # outvote it at the client)
-                    results.append(b"")
-                    self.pending_req.pop(rid, None)
-                    self.echoes.pop(rid, None)
-                    continue
-                result = self.app.apply_from(client, payload)
-                self.executed_rids.add(rid)
-                results.append(result)
-                self.pending_req.pop(rid, None)
-                self.echoes.pop(rid, None)
-                if client in self.sim.processes:
-                    self.send(client, "REP", (rid, result))
-                for hook in self.on_execute_hooks:
-                    hook(s, rid, payload, result)
-            self.results[s] = tuple(results)
-            self.exec_upto = s
+            self._execute_slot(self.exec_upto + 1)
         self._maybe_checkpoint_round()
         self._drain_proposals()
+
+    def _execute_slot(self, s: int) -> None:
+        results = []
+        # the batch executes atomically (one slot), replies per-request
+        for rid, client, payload in self.decided[s]:
+            if (client == "" and isinstance(rid, tuple) and
+                    len(rid) == 4 and rid[0] == "member"):
+                # agreed MEMBERSHIP slot: every honest replica applies
+                # the epoch bump at the same point of its execution
+                # order — the switch is atomic across the group
+                self._apply_membership(rid[1], rid[2], rid[3], s)
+            if (client == "" and isinstance(rid, tuple) and
+                    len(rid) == 2 and rid[0] == "shed"):
+                # agreed admission shed: every honest replica sends the
+                # identical deterministic BUSY for the target rid, so the
+                # client completes on the normal f+1 reply quorum.  The
+                # target joins executed_rids — a later slot carrying the
+                # real request degrades to a duplicate, so a shed can
+                # never be torn against applied state (and vice versa: a
+                # shed for an already-applied rid degrades to a no-op)
+                adm = self.cfg.admission
+                orig = rid[1]
+                self.decided_rids.add(orig)
+                if adm is None or orig in self.executed_rids:
+                    self.admission_stats["dup_sheds"] += 1
+                    results.append(b"")
+                else:
+                    self.executed_rids.add(orig)
+                    results.append(adm.reply)
+                    self.admission_stats["busy_replies"] += 1
+                    if orig[0] in self.sim.processes:
+                        self.send(orig[0], "REP", (orig, adm.reply))
+                self._pend_pop(orig)
+                self.echoes.pop(orig, None)
+                continue
+            if (client == "" and isinstance(rid, tuple) and rid and
+                    rid[0] == "svc" and rid not in self.executed_rids):
+                # service-level request (cross-shard 2PC recovery):
+                # applied to the app like a client request, but with no
+                # reply — there is no client waiting, the effect IS the
+                # point (e.g. a presumed-abort FINISH releasing locks)
+                result = self.app.apply_from("", payload)
+                self.executed_rids.add(rid)
+                results.append(result)
+                self._pend_pop(rid)
+                self.echoes.pop(rid, None)
+                for hook in self.on_execute_hooks:
+                    hook(s, rid, payload, result)
+                continue
+            if client == "" or rid in self.executed_rids:
+                # no-op / duplicate: does not touch the app and sends
+                # no reply (a duplicate's real reply came from the slot
+                # that executed it; a second b"" REP could otherwise
+                # outvote it at the client)
+                results.append(b"")
+                self._pend_pop(rid)
+                self.echoes.pop(rid, None)
+                continue
+            result = self.app.apply_from(client, payload)
+            self.executed_rids.add(rid)
+            results.append(result)
+            self._pend_pop(rid)
+            self.echoes.pop(rid, None)
+            if client in self.sim.processes:
+                self.send(client, "REP", (rid, result))
+            for hook in self.on_execute_hooks:
+                hook(s, rid, payload, result)
+        self.results[s] = tuple(results)
+        self.exec_upto = s
+
+    # ------------------------------------------------------------------
+    # Deferred execution engine (App.cost_us > 0; the serving plane)
+    # ------------------------------------------------------------------
+    def _slot_cost_us(self, s: int) -> float:
+        """Summed service cost of the entries that will actually execute
+        in slot ``s`` — computed at the slot's execution point, where
+        every honest replica holds the identical app state."""
+        cost = 0.0
+        for rid, client, payload in self.decided[s]:
+            if rid in self.executed_rids:
+                continue   # duplicate: executes as a free no-op
+            if client != "" or (isinstance(rid, tuple) and rid and
+                                rid[0] == "svc"):
+                cost += self.app.cost_us(payload)
+        return cost
+
+    def _exec_pump(self) -> None:
+        """Serial engine: the next ready slot applies only after its
+        summed per-request cost has elapsed on this replica's (single)
+        app engine.  ``exec_upto`` lags the decided frontier by the true
+        service backlog, so the pipeline cap and the leader's admission
+        backlog both measure the real execution horizon."""
+        if self._exec_inflight is not None or self.crashed:
+            return
+        while self.exec_upto + 1 in self.decided:
+            s = self.exec_upto + 1
+            cost = self._slot_cost_us(s)
+            if cost > 0.0:
+                self._exec_inflight = s
+                gen = self._exec_gen
+                self.timer(cost, lambda: self._exec_fire(gen))
+                break
+            self._execute_slot(s)   # free slots apply immediately
+        self._maybe_checkpoint_round()
+        self._drain_proposals()
+
+    def _exec_fire(self, gen: int) -> None:
+        if gen != self._exec_gen:
+            return   # stale completion from before a crash/recover cycle
+        s = self._exec_inflight
+        self._exec_inflight = None
+        if s is not None and s == self.exec_upto + 1 and s in self.decided:
+            self._execute_slot(s)
+        self._exec_pump()
+
+    def _exec_recover(self) -> None:
+        # a crash swallowed the in-flight service completion timer
+        # (Node.timer drops callbacks that fire while crashed): the slot
+        # re-enters service from scratch after recovery
+        self._exec_gen += 1
+        self._exec_inflight = None
+        self._exec_pump()
 
     # ==================================================================
     # Decision gap repair (self-healing deployments; cfg.gap_repair_us)
@@ -1386,9 +1666,18 @@ class UbftReplica(Node):
                                   if k[1] in cp.open_slots}
         self.my_certified = {k for k in self.my_certified
                              if k[1] in cp.open_slots}
-        for d2 in (self.my_prepared, self.my_commits, self.decided,
-                   self.results, self.vouched_commits):
+        # decided/results are the execution queue, not just agreement
+        # bookkeeping: with a costed app (deferred execution engine) the
+        # decode backlog can lag a checkpoint boundary, and pruning a
+        # decided-but-unexecuted slot would strand this replica on the
+        # state-transfer path mid-service.  Keep everything the engine
+        # still has to walk; prune only what is both settled and executed.
+        exec_floor = min(cp.start, self.exec_upto + 1)
+        for d2 in (self.my_prepared, self.my_commits, self.vouched_commits):
             for s in [s for s in d2 if s < cp.start]:
+                del d2[s]
+        for d2 in (self.decided, self.results):
+            for s in [s for s in d2 if s < exec_floor]:
                 del d2[s]
         for key in [k for k in self.certify_sigs if k[1] < cp.start]:
             del self.certify_sigs[key]
@@ -1404,8 +1693,17 @@ class UbftReplica(Node):
             else:
                 del self.waiting_prepare[rid]
         if self.exec_upto < cp.start - 1:
-            # we are behind: adopt via state transfer (fp-verified)
-            self._request_state(cp)
+            if any(s not in self.decided
+                   for s in range(self.exec_upto + 1, cp.start)):
+                # behind with missing decisions: adopt via state transfer
+                # (fp-verified)
+                self._request_state(cp)
+            else:
+                # behind but holding every decision up to the boundary:
+                # the (possibly deferred) execution engine walks there on
+                # its own — adopting a snapshot would skip the costed
+                # slots' service time and replies
+                self._execute_ready()
         self.next_slot = max(self.next_slot, cp.start)
         self._drain_proposals()
         return True

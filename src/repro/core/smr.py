@@ -497,6 +497,19 @@ class Cluster:
             out["auto_replacements"] = [dict(rec) for rec in mon.replacements]
             out["deferred"] = list(mon.deferred)
             out["rotation"] = [dict(rec) for rec in mon.rotation_log]
+        admission: Dict[str, Any] = {}
+        for r in self.replicas:
+            cfg = getattr(r, "cfg", None)
+            if cfg is None or cfg.admission is None:
+                continue
+            admission[r.pid] = dict(
+                r.admission_stats,
+                backlog=r._client_backlog,
+                shed_queued=len(r.shed_queue),
+                exec_lag=max(r.decided.keys(), default=-1) - r.exec_upto,
+            )
+        if admission:
+            out["admission"] = admission
         return out
 
     def memory_by_pool(self) -> Dict[str, int]:

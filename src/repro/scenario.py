@@ -67,7 +67,7 @@ class Workload:
     the simulator's, and are indexed by request number: request ``i``
     always sees the same key regardless of interleaving.
     """
-    kind: str = "closed"               # "closed" | "open"
+    kind: str = "closed"               # "closed" | "open" | "trace"
     n_requests: int = 0                # closed: total requests to complete
     duration_us: float = 0.0           # closed: window; open: arrival window
     rate_rps: float = 0.0              # open: Poisson rate per client (req/s)
@@ -79,10 +79,19 @@ class Workload:
     keyspace: int = 0                  # >0: draw a key per request
     zipf_theta: float = 0.0            # 0 = uniform; >0 = Zipf skew
     key_seed: int = 0                  # key-popularity stream
+    #: kind="trace": a precomputed ``[(t_us, payload), ...]`` schedule
+    #: (the workload library's generators — repro.workloads — produce
+    #: these); arrivals are replayed verbatim, round-robin over clients
+    trace: Optional[List[Tuple[float, Any]]] = None
 
     def __post_init__(self):
-        if self.kind not in ("closed", "open"):
+        if self.kind not in ("closed", "open", "trace"):
             raise ValueError(f"unknown workload kind {self.kind!r}")
+        if self.kind == "trace":
+            if not self.trace:
+                raise ValueError("trace workload needs a non-empty trace")
+            if not self.duration_us:
+                self.duration_us = max(t for t, _ in self.trace) + 1.0
         if self.kind == "closed":
             if not (self.n_requests or self.duration_us):
                 raise ValueError(
@@ -234,6 +243,8 @@ class _WorkloadRun:
         self.clients = [cluster.new_client() for _ in range(w.n_clients)]
         if w.kind == "closed":
             self._start_closed()
+        elif w.kind == "trace":
+            self._start_trace()
         else:
             self._start_open()
 
@@ -289,6 +300,29 @@ class _WorkloadRun:
 
         cl.request(self.w.payload_for(i), done)
 
+    # -------------------------------------------------------------- trace
+    def _start_trace(self) -> None:
+        """Replay a precomputed ``(t_us, payload)`` schedule verbatim
+        (open-loop: arrivals fire regardless of completions), round-robin
+        over the client pool.  Trace times are relative to now."""
+        w, sim = self.w, self.cluster.sim
+        t0 = sim.now
+        n_cl = len(self.clients)
+        for j, (t, payload) in enumerate(w.trace):
+            if t >= w.duration_us:
+                continue
+            cl = self.clients[j % n_cl]
+            sim.at(t0 + t, (lambda cl=cl, p=payload: self._fire_trace(cl, p)),
+                   note="workload.arrival")
+            self.issued += 1
+
+    def _fire_trace(self, cl, payload) -> None:
+        def done(_res, lat: float) -> None:
+            self.completed += 1
+            self.lats.append(lat)
+
+        cl.request(payload, done)
+
     # ----------------------------------------------------------- progress
     def done(self) -> bool:
         w = self.w
@@ -300,7 +334,7 @@ class _WorkloadRun:
             # window; ``issued - completed`` shows up as ``stalled``)
             return (self.t_end is not None and
                     self.cluster.sim.now >= self.t_end)
-        # open loop: every arrival of the window issued and completed
+        # open loop / trace replay: every arrival issued and completed
         if self.t_end is not None and self.cluster.sim.now < self.t_end:
             return False
         return self.completed >= self.issued

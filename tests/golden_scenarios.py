@@ -321,6 +321,77 @@ def scenario_sharded_service() -> dict:
     }
 
 
+def scenario_token_server() -> dict:
+    """Replicated inference plane (ISSUE 9): a token server whose
+    session/KV metadata rides consensus slots, roofline decode cost
+    through the deferred execution engine, SLO-sized admission shedding
+    a flash crowd with agreed BUSY replies — and one replica crashed
+    mid-crowd (its in-flight decode timer swallowed) and recovered.
+    Gates the workload generators, the trace replay, the cost model, the
+    admission protocol, and the engine's crash/recover path with one
+    digest."""
+    import zlib
+
+    import numpy as np
+
+    from repro.core.consensus import AdmissionConfig, ConsensusConfig
+    from repro.core.substrate import Substrate
+    from repro.serve import InferencePlane, ServingCostModel, SLOSpec
+    from repro.workloads import flash_crowd_times, llm_session_trace
+
+    cm = ServingCostModel.from_counts("toy-1b", n_params=1.0e9,
+                                      kv_bytes_per_token=26_624, batch=32)
+    # the progress timer must ride out the decode backlog: with roofline
+    # costs, execution (not agreement) is the bottleneck, and the
+    # pipeline cap throttles decisions behind it — a 20 ms timer would
+    # read a healthy-but-busy engine as a stalled leader and churn views
+    cfg = ConsensusConfig(t=16, window=32, slow_mode="always",
+                          ctb_fast_enabled=False,
+                          view_timeout_us=200_000.0,
+                          max_batch=4, pipeline_depth=4,
+                          max_request_bytes=4096)
+    plane = InferencePlane.build(
+        cm, SLOSpec(deadline_us=3_000.0),
+        admission=AdmissionConfig(queue_high=4, queue_accept=2),
+        cfg=cfg, substrate=Substrate(n_pools=2, seed=29), name="tok")
+    arrivals = flash_crowd_times(np.random.default_rng(13), base_rps=400.0,
+                                 peak_rps=3_000.0, t_start_us=8_000.0,
+                                 ramp_us=3_000.0, hold_us=6_000.0,
+                                 decay_us=3_000.0, duration_us=30_000.0)
+    trace = llm_session_trace(13, 30_000.0, session_times=arrivals,
+                              mean_turns=2.0, think_us=1_500.0,
+                              first_prompt_tokens=8, next_prompt_tokens=4,
+                              decode_tokens=4)
+    cluster = plane.cluster
+    victim = cluster.replicas[2]
+    # the outage stays within what the CTBcast 2t-message tails can
+    # replay on recovery — a mid-window straggler in epoch 0 cannot be
+    # repaired by state transfer (STATE_RESP only fp-verifies at the
+    # exact checkpoint boundary), so it must catch up from the wire
+    cluster.sim.at(9_000.0, victim.crash)
+    cluster.sim.at(12_500.0, victim.recover)
+    plane.run_trace(trace, drain_us=10_000_000.0)
+    cluster.sim.run(until=cluster.sim.now + 100_000.0)   # victim catch-up
+    snaps = {r.app.snapshot() for r in cluster.replicas}
+    assert len(snaps) == 1, "replicas (incl. the recovered one) diverged"
+    crc = zlib.crc32(repr(sorted(snaps)[0]).encode())
+    rep = plane.slo_report()
+    busy = {s["busy_replies"] for s in rep["admission"].values()}
+    assert len(busy) == 1, "BUSY replies not agreed across replicas"
+    lats = [lat for _t, lat, _ok in plane.outcomes]
+    return {
+        "digest": _digest(lats, [cluster.net.msgs_sent,
+                                 cluster.net.bytes_sent, rep["served"],
+                                 rep["shed"], busy.pop(), crc]),
+        "n": len(trace),
+        "served": rep["served"],
+        "shed": rep["shed"],
+        "session_crc": crc,
+        "msgs_sent": cluster.net.msgs_sent,
+        "bytes_sent": cluster.net.bytes_sent,
+    }
+
+
 SCENARIOS = {
     "throughput_mini": scenario_throughput_mini,
     "slow_path": scenario_slow_path,
@@ -329,6 +400,7 @@ SCENARIOS = {
     "shared_substrate": scenario_shared_substrate,
     "replica_replacement": scenario_replica_replacement,
     "sharded_service": scenario_sharded_service,
+    "token_server": scenario_token_server,
 }
 
 

@@ -1,0 +1,386 @@
+"""Replicated inference serving plane + workload library (ISSUE 9).
+
+Covers the tentpole and its invariants:
+
+* the workload library's generators are seeded-deterministic, and
+  ``ramp_times`` is draw-for-draw identical to the hand-rolled rush it
+  replaced in ``benchmarks/sharded.py`` (the split gate's byte-identical
+  schedules depend on it);
+* ``Workload(kind="trace")`` replays a precomputed schedule through the
+  scenario runner;
+* the roofline serving-cost model (analytic counts; the JAX-backed
+  ``from_arch`` constructor is slow-marked);
+* admission control invariants: BUSY replies are *agreed* — identical
+  result vectors and identical app state at every replica, never torn
+  against applied state — and a Byzantine leader over-shedding honest
+  requests under light load loses its view through the normal progress
+  timer;
+* the deferred execution engine (``App.cost_us``) keeps replicas
+  identical and survives a crash mid-decode (the completion timer is
+  swallowed; the recover hook re-enters the slot);
+* ``TokenServerApp`` snapshot/adopt: a joiner installed via
+  ``Cluster.replace_replica`` mid-generation adopts the session state
+  and continues decoding consistently.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.consensus import AdmissionConfig, ConsensusConfig
+from repro.core.smr import Cluster
+from repro.core.substrate import Substrate
+from repro.runtime.server import ReplicatedServer, TokenServerApp
+from repro.scenario import (AppSpec, ScenarioSpec, Workload, run_scenario)
+from repro.serve import (InferencePlane, ServingCostModel, SLOSpec,
+                         admission_for, greedy_decode_fn)
+from repro.workloads import (auction_day_trace, diurnal_times,
+                             flash_crowd_times, llm_session_trace,
+                             ramp_times)
+
+# --------------------------------------------------------------------------
+# Workload library
+# --------------------------------------------------------------------------
+KEYSPACE, THETA = 128, 1.2
+
+
+def test_ramp_times_matches_inline_recipe():
+    """Byte-for-byte the benchmarks/sharded.py rush — including leaving
+    the RNG stream positioned exactly where the inline recipe left it."""
+    duration_us, r0_rps, r1_rps = 30_000.0, 800_000.0, 1_400_000.0
+    rng = np.random.default_rng(11)
+    r0, r1 = r0_rps / 1e6, r1_rps / 1e6
+    slope = (r1 - r0) / duration_us
+    lam_total = (r0 + r1) / 2.0 * duration_us
+    lam = np.cumsum(rng.exponential(1.0, size=int(lam_total * 1.1) + 100))
+    lam = lam[lam <= lam_total]
+    t_old = (np.sqrt(r0 * r0 + 2.0 * slope * lam) - r0) / slope
+    p = np.arange(1, KEYSPACE + 1, dtype=float) ** -THETA
+    k_old = rng.choice(KEYSPACE, size=len(t_old), p=p / p.sum())
+
+    rng = np.random.default_rng(11)
+    t_new = ramp_times(rng, r0_rps, r1_rps, duration_us)
+    k_new = rng.choice(KEYSPACE, size=len(t_new), p=p / p.sum())
+    assert t_old.shape == t_new.shape
+    assert (t_old == t_new).all()
+    assert (k_old == k_new).all()      # stream state preserved
+
+
+def test_flash_crowd_spikes_and_is_deterministic():
+    kw = dict(base_rps=1_000.0, peak_rps=20_000.0, t_start_us=20_000.0,
+              ramp_us=5_000.0, hold_us=10_000.0, decay_us=5_000.0,
+              duration_us=60_000.0)
+    a = flash_crowd_times(np.random.default_rng(4), **kw)
+    b = flash_crowd_times(np.random.default_rng(4), **kw)
+    assert (a == b).all()
+    in_spike = ((a >= 25_000.0) & (a < 35_000.0)).sum() / 10_000.0
+    before = (a < 20_000.0).sum() / 20_000.0
+    assert in_spike > 5 * before       # the crowd actually arrives
+
+
+def test_diurnal_peak_to_trough():
+    rng = np.random.default_rng(9)
+    t = diurnal_times(rng, mean_rps=50_000.0, amplitude=0.8,
+                      period_us=100_000.0, duration_us=100_000.0,
+                      phase=np.pi / 2)       # peak at t=0, trough mid-period
+    peak = (t < 10_000.0).sum()
+    trough = ((t >= 45_000.0) & (t < 55_000.0)).sum()
+    assert peak > 3 * trough
+    with pytest.raises(ValueError):
+        diurnal_times(rng, 1000.0, 1.5, 1000.0, 1000.0)
+
+
+def test_auction_day_trace_shape():
+    tr = auction_day_trace(seed=2, duration_us=50_000.0, base_rps=2_000.0,
+                           open_peak_rps=40_000.0, close_peak_rps=30_000.0)
+    tr2 = auction_day_trace(seed=2, duration_us=50_000.0, base_rps=2_000.0,
+                            open_peak_rps=40_000.0, close_peak_rps=30_000.0)
+    assert tr == tr2
+    times = np.array([t for t, _ in tr])
+    assert all(len(p) == 32 for _, p in tr)   # order_req wire format
+    open_burst = (times < 5_000.0).sum()
+    midday = ((times >= 20_000.0) & (times < 25_000.0)).sum()
+    assert open_burst > 2 * midday            # U-shaped volume
+
+
+def test_llm_session_trace_multiturn():
+    tr = llm_session_trace(5, 50_000.0, session_rate_rps=2_000.0,
+                           mean_turns=3.0, think_us=1_000.0)
+    assert tr == llm_session_trace(5, 50_000.0, session_rate_rps=2_000.0,
+                                   mean_turns=3.0, think_us=1_000.0)
+    sessions = {}
+    for t, payload in tr:
+        msg = json.loads(payload.decode())
+        sessions.setdefault(msg["session"], []).append(msg)
+        assert msg["n"] >= 1 and len(msg["prompt"]) >= 1
+    assert any(len(v) > 1 for v in sessions.values())   # multi-turn
+    first = [v[0] for v in sessions.values()]
+    later = [m for v in sessions.values() for m in v[1:]]
+    if later:
+        avg = lambda ms: sum(len(m["prompt"]) for m in ms) / len(ms)
+        assert avg(first) > 2 * avg(later)   # long first prompts
+    with pytest.raises(ValueError):
+        llm_session_trace(0, 1000.0)         # needs an arrival process
+
+
+def test_trace_workload_kind_replays_schedule():
+    trace = llm_session_trace(3, 8_000.0, session_rate_rps=1_500.0,
+                              mean_turns=1.5, think_us=500.0,
+                              first_prompt_tokens=4, next_prompt_tokens=2,
+                              decode_tokens=2)
+    assert trace
+    spec = ScenarioSpec(apps=[AppSpec(
+        name="tok", app=lambda: TokenServerApp(greedy_decode_fn()),
+        cfg=ConsensusConfig(t=16, window=16, view_timeout_us=20_000.0),
+        workload=Workload(kind="trace", trace=trace))])
+    res = run_scenario(spec)
+    assert res.apps["tok"].issued == len(trace)
+    assert res.apps["tok"].completed == len(trace)
+    with pytest.raises(ValueError):
+        Workload(kind="trace")               # needs a non-empty trace
+
+
+# --------------------------------------------------------------------------
+# Serving cost model
+# --------------------------------------------------------------------------
+def test_cost_model_roofline_shape():
+    cm = ServingCostModel.from_counts("toy-1b", n_params=1e9,
+                                      kv_bytes_per_token=26_624, batch=32)
+    # small-batch decode is HBM-bound on the weight read:
+    # 2e9 B / 819 GB/s ≈ 2.44 ms per step, /32 ≈ 76 µs per token
+    per_tok = cm.decode_us_per_token(ctx=0)
+    assert 70.0 < per_tok < 85.0
+    assert cm.decode_us_per_token(ctx=4096) > per_tok   # KV read grows
+    big = ServingCostModel.from_counts("toy-1b", n_params=1e9,
+                                       kv_bytes_per_token=26_624, batch=256)
+    assert big.decode_us_per_token() < per_tok / 4      # batching amortizes
+    req = cm.request_us(n_prompt=16, n_decode=8)
+    assert req > 8 * per_tok                            # prefill is extra
+
+
+@pytest.mark.slow
+def test_cost_model_from_arch_gemma3():
+    cm = ServingCostModel.from_arch("gemma3-1b", batch=32)
+    n_params = cm.param_bytes / 2
+    assert 0.9e9 < n_params < 1.1e9                     # ~1B analytic count
+    assert 26 * 2 * 256 * 2 * 0.9 < cm.kv_bytes_per_token < 26 * 2 * 256 * 2 * 1.1
+    assert 50.0 < cm.decode_us_per_token() < 120.0
+
+
+# --------------------------------------------------------------------------
+# Admission control invariants
+# --------------------------------------------------------------------------
+def _serving_cfg(**kw):
+    base = dict(t=16, window=32, max_batch=4, pipeline_depth=8,
+                view_timeout_us=50_000.0, max_request_bytes=4096)
+    base.update(kw)
+    return ConsensusConfig(**base)
+
+
+def _flash_plane(queue_high=3, **cfg_kw):
+    cm = ServingCostModel.from_counts("toy-1b", n_params=1e9,
+                                      kv_bytes_per_token=26_624, batch=32)
+    adm = AdmissionConfig(queue_high=queue_high,
+                          queue_accept=max(1, queue_high // 2))
+    plane = InferencePlane.build(
+        cm, SLOSpec(deadline_us=3_000.0), admission=adm,
+        cfg=_serving_cfg(**cfg_kw))
+    return plane
+
+
+def _reply_map(replica):
+    """rid -> reply bytes over every executed slot (shed markers resolve
+    to their target rid)."""
+    out = {}
+    for s, batch in replica.decided.items():
+        if s > replica.exec_upto:
+            continue
+        for i, r in enumerate(batch):
+            rid = r[0]
+            if isinstance(rid, tuple) and len(rid) == 2 and rid[0] == "shed":
+                rid = rid[1]
+            out.setdefault(rid, []).append(replica.results[s][i])
+    return out
+
+
+def test_busy_replies_agreed_and_never_torn():
+    plane = _flash_plane(queue_high=3)
+    trace = llm_session_trace(7, 20_000.0, session_rate_rps=3_000.0,
+                              mean_turns=2.0, think_us=1_000.0,
+                              first_prompt_tokens=8, next_prompt_tokens=4,
+                              decode_tokens=4)
+    plane.run_trace(trace)
+    rep = plane.slo_report()
+    assert rep["shed"] > 0, "overload never tripped admission"
+    assert rep["served"] > 0
+    assert rep["served"] + rep["shed"] == rep["issued"] == len(trace)
+    replicas = plane.cluster.replicas
+    # every replica executed the identical schedule to the same state ...
+    assert (replicas[0].app.snapshot() == replicas[1].app.snapshot()
+            == replicas[2].app.snapshot())
+    # ... with identical per-slot result vectors (BUSY included)
+    maps = [_reply_map(r) for r in replicas]
+    assert maps[0] == maps[1] == maps[2]
+    busy = {rid for rid, reps in maps[0].items() if b"BUSY" in reps}
+    assert busy, "no shed marker executed"
+    applied = {rid for rid, reps in maps[0].items()
+               if any(rep not in (b"", b"BUSY") for rep in reps)}
+    # never torn: a BUSY rid is never also applied, on any replica
+    assert not busy & applied
+    # agreed stats: every replica sent the same number of BUSY replies
+    # (the lifetime counter — _reply_map only sees un-checkpointed slots)
+    stats = plane.cluster.stats()["admission"]
+    busies = {v["busy_replies"] for v in stats.values()}
+    assert len(busies) == 1
+    assert busies.pop() >= len(busy) > 0
+
+
+def test_shed_for_applied_rid_degrades_to_noop():
+    """A shed marker that loses the race to a real proposal must not
+    overwrite applied state — it executes as a no-op, identically
+    everywhere (exercised via _valid_batch/_execute_slot directly)."""
+    plane = _flash_plane(queue_high=3)
+    r0 = plane.cluster.replicas[0]
+    # a shed for an already-executed rid is valid on the wire ...
+    rid = ("c999", 0)
+    r0.executed_rids.add(rid)
+    batch = ((("shed", rid), "", b""),)
+    assert r0._valid_batch(batch) is not None
+    # ... and executes as a reply-less no-op (dup_sheds, result b"")
+    s = r0.exec_upto + 1
+    r0.decided[s] = batch
+    before = dict(r0.admission_stats)
+    r0._execute_slot(s)
+    assert r0.results[s] == (b"",)
+    assert r0.admission_stats["dup_sheds"] == before["dup_sheds"] + 1
+    assert r0.admission_stats["busy_replies"] == before["busy_replies"]
+
+
+def test_shed_markers_invalid_without_admission():
+    """Deployments without admission control reject shed markers at the
+    wire (a Byzantine leader cannot smuggle BUSYs into a classic
+    deployment)."""
+    sub = Substrate(n_pools=1, seed=0)
+    c = Cluster.attach(sub, lambda: TokenServerApp(greedy_decode_fn()),
+                       name="plain", cfg=_serving_cfg())
+    r0 = c.replicas[0]
+    batch = ((("shed", ("c0", 0)), "", b""),)
+    assert r0._valid_batch(batch) is None
+
+
+def test_byzantine_overshed_loses_view():
+    """A leader shedding honest requests under light load never collects
+    an honest certificate quorum: the progress timer fires and the view
+    moves — and the request is then served, not shed."""
+    plane = _flash_plane(queue_high=8, view_timeout_us=20_000.0)
+    cluster = plane.cluster
+    leader = cluster.replicas[0]
+    assert leader.is_leader()
+    # the leader alone runs a zero-threshold admission config: it sheds
+    # the very first request while every honest follower sees an empty
+    # queue (backlog far below their queue_accept floor of 4)
+    leader.cfg = dataclasses.replace(
+        leader.cfg, admission=AdmissionConfig(queue_high=-1, queue_accept=0))
+    client = cluster.new_client()
+    tokens, _lat = plane.server.generate(client, "s0", [1, 2, 3], 2,
+                                         timeout=2_000_000.0)
+    assert leader.admission_stats["shed"] >= 1   # it really tried
+    assert tokens is not None, "honest request was censored"
+    live_views = {r.view for r in cluster.replicas[1:]}
+    assert max(live_views) > 0, "over-shedding leader kept its view"
+
+
+# --------------------------------------------------------------------------
+# Deferred execution engine
+# --------------------------------------------------------------------------
+def test_costed_execution_defers_and_stays_deterministic():
+    """With a cost model, execution lags decision by the service time —
+    and replicas still converge to identical state."""
+    cm = ServingCostModel.from_counts("toy-1b", n_params=1e9,
+                                      kv_bytes_per_token=26_624, batch=32)
+    plane = InferencePlane.build(cm, SLOSpec(deadline_us=50_000.0),
+                                 admission=False, cfg=_serving_cfg())
+    cluster = plane.cluster
+    client = cluster.new_client()
+    t0 = cluster.sim.now
+    tokens, lat = plane.server.generate(client, "s", [1] * 16, 8)
+    assert tokens is not None and len(tokens) == 8
+    # the reply cannot arrive before the roofline service time elapsed
+    assert lat >= cm.request_us(16, 8) - 1e-6
+    assert cluster.sim.now - t0 >= cm.request_us(16, 8)
+    snaps = {r.app.snapshot() for r in cluster.replicas}
+    assert len(snaps) == 1
+
+
+def test_costed_engine_survives_crash_mid_decode():
+    """Node.timer swallows callbacks that fire while crashed: without
+    the recover hook, a replica crashing mid-service would wedge with
+    _exec_inflight set forever.  After recovery it must re-enter the
+    slot and converge."""
+    cm = ServingCostModel.from_counts("toy-1b", n_params=1e9,
+                                      kv_bytes_per_token=26_624, batch=32)
+    plane = InferencePlane.build(cm, SLOSpec(deadline_us=50_000.0),
+                                 admission=False, cfg=_serving_cfg())
+    cluster = plane.cluster
+    sim = cluster.sim
+    client = cluster.new_client()
+    victim = cluster.replicas[2]
+    done = {}
+    payload = json.dumps({"session": "s", "prompt": [1] * 16,
+                          "n": 8}).encode()
+    client.request(payload, lambda res, lat: done.setdefault("lat", lat))
+    # crash the victim the moment its decode engine is busy, stay down
+    # past the completion timer, then recover
+    sim.run_until(lambda: victim._exec_inflight is not None,
+                  timeout=1_000_000.0)
+    assert victim._exec_inflight is not None
+    victim.crash()
+    sim.run(until=sim.now + 3 * cm.request_us(16, 8))
+    victim.recover()
+    sim.run_until(lambda: "lat" in done, timeout=2_000_000.0)
+    assert "lat" in done
+    sim.run(until=sim.now + 200_000.0)
+    assert victim._exec_inflight is None or victim.exec_upto >= 0
+    sim.run_until(lambda: victim.app.snapshot() ==
+                  cluster.replicas[0].app.snapshot(), timeout=2_000_000.0)
+    assert victim.app.snapshot() == cluster.replicas[0].app.snapshot()
+
+
+# --------------------------------------------------------------------------
+# Snapshot/adopt: joiner mid-generation (satellite)
+# --------------------------------------------------------------------------
+def test_token_server_joiner_adopts_sessions_mid_generation():
+    """Replace a replica in the middle of a multi-turn generation run:
+    the joiner adopts the session/KV metadata via the pools and keeps
+    decoding bit-identically with the survivors."""
+    sub = Substrate(n_pools=2, seed=5)
+    server = ReplicatedServer.build(
+        greedy_decode_fn(), substrate=sub, name="tok",
+        cfg=ConsensusConfig(t=16, window=16, slow_mode="always",
+                            ctb_fast_enabled=False,
+                            view_timeout_us=20_000.0))
+    cluster = server.cluster
+    client = cluster.new_client()
+    expected = {}
+    for turn in range(4):
+        toks, _ = server.generate(client, "alice", [10 + turn], 3)
+        expected[turn] = toks
+    cluster.replicas[2].crash()
+    joiner = cluster.replace_replica(cluster.replicas[2].pid)
+    assert joiner is not None
+    # mid-generation continuation: more turns on the SAME session
+    for turn in range(4, 8):
+        toks, _ = server.generate(client, "alice", [10 + turn], 3)
+        expected[turn] = toks
+    cluster.sim.run(until=cluster.sim.now + 100_000.0)
+    # the joiner holds the full session history and matches the survivors
+    assert joiner.app.snapshot() == cluster.replicas[0].app.snapshot()
+    hist = joiner.app.sessions["alice"]
+    # history = per-turn [prompt, tok, tok, tok] in order
+    assert len(hist) == 8 * 4
+    for turn in range(8):
+        seg = hist[turn * 4: turn * 4 + 4]
+        assert seg[0] == 10 + turn
+        assert seg[1:] == expected[turn]
