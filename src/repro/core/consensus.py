@@ -2452,10 +2452,13 @@ class UbftReplica(Node):
             recent = dict(self.my_ctb.buf)
         else:
             recent = self.state[p].recent
-        window = tuple(sorted((kk, crypto.fingerprint_cached(m))
-                              for kk, m in recent.items()
-                              if k - self.cfg.t < kk <= k))
-        digest = crypto.fingerprint_cached(("sum", p, k, window))
+        # batch-digest the window (t entries; overlapping segment windows
+        # hit the memo) and digest the one-shot wrapper cache-free
+        lo = k - self.cfg.t
+        kks = sorted(kk for kk in recent if lo < kk <= k)
+        fps = crypto.fingerprint_batch_cached([recent[kk] for kk in kks])
+        window = tuple(zip(kks, fps))
+        digest = crypto.fingerprint_fresh(("sum", p, k, window))
         # bookkeeping signature → background task (§3), not the critical path
         self.background(lambda: self.async_sign(
             ("sum", p, k, digest),
@@ -2472,11 +2475,12 @@ class UbftReplica(Node):
         # append-only below k at this point, so the window is stable
         my_digest = self._summary_digests.get(k)
         if my_digest is None:
-            my_window = tuple(sorted((kk, crypto.fingerprint_cached(m))
-                                     for kk, m in self.my_ctb.buf.items()
-                                     if k - self.cfg.t < kk <= k))
-            my_digest = crypto.fingerprint_cached(("sum", self.pid, k,
-                                                   my_window))
+            buf = self.my_ctb.buf
+            lo = k - self.cfg.t
+            kks = sorted(kk for kk in buf if lo < kk <= k)
+            fps = crypto.fingerprint_batch_cached([buf[kk] for kk in kks])
+            my_digest = crypto.fingerprint_fresh(
+                ("sum", self.pid, k, tuple(zip(kks, fps))))
             self._summary_digests[k] = my_digest
             for old in [kk for kk in self._summary_digests
                         if kk <= k - self.cfg.t]:
@@ -2507,15 +2511,17 @@ class UbftReplica(Node):
 
     def _on_summary(self, origin: str, payload: tuple) -> None:
         k, digest, sigs, history = payload
-        window = tuple((kk, crypto.fingerprint_cached(m))
-                       for kk, m in history)
-        if crypto.fingerprint_cached(("sum", origin, k, window)) != digest:
+        window = tuple(zip(
+            (kk for kk, _ in history),
+            crypto.fingerprint_batch_cached([m for _, m in history])))
+        if crypto.fingerprint_fresh(("sum", origin, k, window)) != digest:
             return
         pids = {pid for pid, _ in sigs}
         if len(pids) < self.quorum:
             return
-        if not all(self.registry.verify(pid, ("sum", origin, k, digest), sig)
-                   for pid, sig in sigs):
+        share = ("sum", origin, k, digest)
+        if not all(self.registry.verify_batch(
+                [(pid, share, sig) for pid, sig in sigs])):
             return
         st = self.state.get(origin)
         if st is None or st.blocked or origin in self.retired:

@@ -203,18 +203,23 @@ class CTBcast:
         slot = self.locked[origin][i]
         if k > slot.k:                       # line 20
             slot.k, slot.m = k, m            # line 21
-        enc = None
+        mismatched = None
         for q in self.group:                 # line 22 (unanimity)
             s2 = self.locked[q][i]
             if s2.k != k:
                 return
             if s2.m is not m:
-                # honest LOCKEDs all carry the broadcaster's object by
-                # reference; fall back to encoding only on mismatch
-                if enc is None:
-                    enc = crypto.encode_cached(m)
-                if crypto.encode_cached(s2.m) != enc:
-                    return
+                if mismatched is None:
+                    mismatched = []
+                mismatched.append(s2.m)
+        if mismatched:
+            # honest LOCKEDs all carry the broadcaster's object by
+            # reference; fall back to encoding only on mismatch — one
+            # batch encode for every diverging slot at once
+            enc = crypto.encode_cached(m)
+            if any(e != enc
+                   for e in crypto.encode_batch_cached(mismatched)):
+                return
         self._deliver_once(k, m)             # line 23
 
     # ------------------------------------------------------------ slow path

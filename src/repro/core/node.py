@@ -49,6 +49,15 @@ class Node(Process):
             size = crypto.wire_size_shallow(body) + len(kind) + 16 + extra_bytes
         self._net_send(self.pid, dst, (kind, body), size)
 
+    def send_fanout(self, dsts: List[str], kind: str, body: Any,
+                    extra_bytes: int = 0, size: Optional[int] = None) -> None:
+        """Ship one body to many peers: size once, encode once, price and
+        schedule all deliveries in one network call (bit-identical to a
+        per-dst ``send`` loop — see ``NetworkModel.send_fanout``)."""
+        if size is None:
+            size = crypto.wire_size_shallow(body) + len(kind) + 16 + extra_bytes
+        self.net.send_fanout(self.pid, dsts, (kind, body), size)
+
     def handle(self, kind: str, fn: Callable[[str, Any], None]) -> None:
         self._dispatch[kind] = fn
 
@@ -112,8 +121,8 @@ class Node(Process):
         (pool contention), not n×verify — matches the paper's slow path
         adding ~30 µs per round, not ~90 µs.
         """
-        oks = [self.registry.verify(pid, payload, sig) for pid, payload, sig in items]
-        extra = 3.0 * max(0, len(items) - 1)
+        oks = self.registry.verify_batch(items)
+        extra = 3.0 * max(0, len(oks) - 1)
         self._async_done(self.netp.verify_us + extra, lambda: cb(oks))
 
     def _async_done(self, latency: float, cb: Callable[[], None]) -> None:

@@ -100,6 +100,31 @@ def _unpack(blob: Optional[bytes]) -> Optional[Tuple[int, bytes]]:
     return ts, value
 
 
+def _unpack_batch(blobs: List[Optional[bytes]]
+                  ) -> List[Optional[Tuple[int, bytes]]]:
+    """Batch :func:`_unpack`: validate a read quorum's worth of
+    sub-register blobs through one :func:`crypto.checksum_bytes_batch`
+    call.  Element-wise identical to mapping ``_unpack``."""
+    out: List[Optional[Tuple[int, bytes]]] = [None] * len(blobs)
+    idx: List[int] = []
+    bodies: List[bytes] = []
+    for i, blob in enumerate(blobs):
+        if blob and len(blob) >= BLOB_HEADER:
+            idx.append(i)
+            bodies.append(blob[8:])
+    if not idx:
+        return out
+    for i, body, csum in zip(idx, bodies,
+                             crypto.checksum_bytes_batch(bodies)):
+        if blobs[i][:8] != csum:
+            continue
+        ts, ln = struct.unpack_from("<qI", body, 0)
+        value = body[12:12 + ln]
+        if len(value) == ln:
+            out[i] = (ts, value)
+    return out
+
+
 @dataclass
 class _Cell:
     """One sub-register replica at one memory node, with write-window
@@ -720,8 +745,8 @@ class RegisterClient:
         self._pending[tok] = {"kind": "w", "acks": 0, "cb": cb, "done": False}
         body = (self.node.pid, reg, sub, blob, tok)
         size = crypto.wire_size_shallow(body) + 25  # len("REG_WRITE") + 16
-        for m in self.pool_for(self.node.pid, reg).members:
-            self.node.send(m, "REG_WRITE", body, size=size)
+        self.node.send_fanout(self.pool_for(self.node.pid, reg).members,
+                              "REG_WRITE", body, size=size)
 
     def _on_write_ack(self, src: str, body: Any) -> None:
         _reg, _sub, tok = body
@@ -762,8 +787,8 @@ class RegisterClient:
         }
         body = (owner, reg, tok)
         size = crypto.wire_size_shallow(body) + 24  # len("REG_READ") + 16
-        for m in self.pool_for(owner, reg, namespace).members:
-            self.node.send(m, "REG_READ", body, size=size)
+        self.node.send_fanout(self.pool_for(owner, reg, namespace).members,
+                              "REG_READ", body, size=size)
 
     def _on_read_ack(self, src: str, body: Any) -> None:
         owner, reg, tok, blobs = body
@@ -782,8 +807,13 @@ class RegisterClient:
         delta = self.node.netp.delta_us
         best: Optional[Tuple[int, bytes]] = None
         byz = False
-        for blobs in st["resps"]:
-            vals = [_unpack(b) for b in blobs]
+        resps = st["resps"]
+        # one checksum batch for the whole quorum (2 sub-registers × q acks)
+        flat = _unpack_batch([b for blobs in resps for b in blobs])
+        pos = 0
+        for blobs in resps:
+            vals = flat[pos:pos + len(blobs)]
+            pos += len(blobs)
             ok = [v for v in vals if v is not None]
             if len(ok) == 2 and ok[0][0] == ok[1][0]:
                 byz = True  # both sub-registers with the same timestamp

@@ -57,8 +57,7 @@ class Client(Node):
         }
         body = (rid, payload)
         size = crypto.wire_size_shallow(body) + 19  # len("REQ") + 16
-        for r in self.replicas:
-            self.send(r, "REQ", body, size=size)
+        self.send_fanout(self.replicas, "REQ", body, size=size)
         return rid
 
     def _on_reply(self, src: str, body: Any) -> None:
@@ -66,9 +65,15 @@ class Client(Node):
         st = self._outstanding.get(rid)
         if st is None or st["done"]:
             return
-        # replies are fresh bytes per replica — plain encode, no memo
+        # replies are fresh bytes per replica: group raw bytes results by
+        # value directly (domain-tagged so a crafted bytes result can never
+        # collide with the *encoding* of a structured one), encode anything
+        # else
         replies = st["replies"]
-        enc = crypto.encode(result)
+        if type(result) is bytes:
+            enc = (0, result)
+        else:
+            enc = (1, crypto.encode(result))
         who = replies.get(enc)
         if who is None:
             who = replies[enc] = set()
@@ -510,6 +515,20 @@ class Cluster:
             )
         if admission:
             out["admission"] = admission
+        # engine observability: wire-cache / digest-path counters (module
+        # global — shared by every app on the substrate) plus this
+        # fabric's fan-out accounting, so benchmarks can prove the batched
+        # paths are actually taken on the hot path
+        out["engine"] = {
+            "digests": crypto.digest_stats(),
+            "net": {
+                "msgs_sent": self.net.msgs_sent,
+                "bytes_sent": self.net.bytes_sent,
+                "fanout_msgs": self.net.fanout_msgs,
+                "coalesced_runs": self.net.coalesced_runs,
+            },
+            "events_processed": self.sim.events_processed,
+        }
         return out
 
     def memory_by_pool(self) -> Dict[str, int]:

@@ -122,12 +122,49 @@ class TBcastService:
     def broadcast(self, stream: str, k: int, payload: Any,
                   group: List[str]) -> None:
         """Broadcast (k, payload) on ``stream`` to ``group`` (may include self)."""
-        # wire size is identical for every destination — price it once
+        # wire size is identical for every destination — price it once.
+        # Shallow sizing: vote payloads are fresh per-broadcast tuples
+        # (their shared subtrees still hit the memo), so inserting the
+        # wrapper itself into the wire cache would be pure churn.
         # (38 = tuple header 4 + two int fields 16 + kind "TB" 2 + framing 16)
-        size = 38 + len(stream) + crypto.wire_size_cached(payload)
+        size = 38 + len(stream) + crypto.wire_size_shallow(payload)
         node = self.node
+        sim = node.sim
+        now = sim.now
+        rto = self.rto_us
+        # Consecutive wire destinations accumulate into one run shipped via
+        # send_fanout (guards + pricing hoisted, one heap entry when jitter
+        # permits).  A self-delivery flushes the run first, so every heap
+        # push happens in the same relative order as the per-dst loop this
+        # replaced.  Regrouping each run's sends before its RTO arms cannot
+        # create a (time, seq) tie: arrivals land ≤ ~6 µs out, RTO timers
+        # ≥ rto_us (60 µs) out — see DESIGN_PERF.md.
+        pend_dst: List[str] = []
+        pend_st: List[_SendState] = []
+
+        def _flush() -> None:
+            mk = pend_st[0].min_k
+            if all(st.min_k == mk for st in pend_st):
+                node.net.send_fanout(node.pid, pend_dst,
+                                     ("TB", (stream, k, mk, payload)), size)
+            else:   # window floors diverged (post-eviction): per-dst frames
+                for dst, st in zip(pend_dst, pend_st):
+                    node.net.send(node.pid, dst,
+                                  ("TB", (stream, k, st.min_k, payload)), size)
+            for dst, st in zip(pend_dst, pend_st):
+                # the second disjunct catches a stale long-backoff timer
+                # outliving an ack-progress reset: fresh traffic then
+                # supersedes it instead of waiting out the decay
+                if (not st.rto_pending or
+                        st.rto_at > now + rto * (1 << st.backoff)):
+                    self._arm_rto(stream, dst, st)
+            pend_dst.clear()
+            pend_st.clear()
+
         for dst in group:
             if dst == node.pid:
+                if pend_dst:
+                    _flush()
                 # Local self-delivery (no wire) — still costs a dispatch.
                 if not node.crashed:
                     done = node.occupy(node.handling_cost)
@@ -136,7 +173,7 @@ class TBcastService:
                         if not node.crashed:
                             self._deliver(node.pid, stream, kk, pl)
 
-                    node.sim.at(done, _self)
+                    sim.at(done, _self)
                 continue
             key = (stream, dst)
             st = self._send.get(key)
@@ -156,15 +193,10 @@ class TBcastService:
                 oldest = min(st.window)
                 del st.window[oldest]
                 st.min_k = min(st.window)
-            # inlined _ship + the _arm_rto guard (hot loop: one frame per
-            # destination otherwise).  The second disjunct catches a stale
-            # long-backoff timer outliving an ack-progress reset: fresh
-            # traffic then supersedes it instead of waiting out the decay.
-            node.net.send(node.pid, dst,
-                          ("TB", (stream, k, st.min_k, payload)), size)
-            if (not st.rto_pending or
-                    st.rto_at > node.sim.now + self.rto_us * (1 << st.backoff)):
-                self._arm_rto(stream, dst, st)
+            pend_dst.append(dst)
+            pend_st.append(st)
+        if pend_dst:
+            _flush()
 
     def drop_peer(self, pid: str) -> None:
         """Free every connection to/from a replica retired by an epoch
@@ -184,15 +216,6 @@ class TBcastService:
             del self._recv[key]
 
     # ----------------------------------------------------------------- wire
-    def _ship(self, stream: str, dst: str, st: _SendState, k: int,
-              payload: Any, size: Optional[int] = None) -> None:
-        if size is None:   # retransmission path
-            size = 38 + len(stream) + crypto.wire_size_cached(payload)
-        # straight to the network model: TB framing is fixed and this path
-        # carries every broadcast to every destination
-        self.node.net.send(self.node.pid, dst,
-                           ("TB", (stream, k, st.min_k, payload)), size)
-
     def _arm_rto(self, stream: str, dst: str,
                  st: Optional[_SendState] = None) -> None:
         if st is None:
@@ -225,8 +248,16 @@ class TBcastService:
                 return
             st.min_k = min(st.window) if st.window else st.next_k
             self.retx_fires[dst] = self.retx_fires.get(dst, 0) + 1
-            for k in sorted(live):
-                self._ship(stream, dst, st, k, live[k])
+            # batch-size the retransmission sweep: one sizing pass for the
+            # whole live window (payloads are long-lived — all memo hits)
+            ks = sorted(live)
+            sizes = crypto.wire_size_batch([live[kk] for kk in ks])
+            frame = 38 + len(stream)
+            send = self.node.net.send
+            pid = self.node.pid
+            mk = st.min_k
+            for kk, sz in zip(ks, sizes):
+                send(pid, dst, ("TB", (stream, kk, mk, live[kk])), frame + sz)
             # no ack progress since the last fire (an ack would have reset
             # the exponent): decay the next interval instead of flooding a
             # dead peer with a full-window resend every rto_us forever

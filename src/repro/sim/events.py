@@ -134,48 +134,64 @@ class Simulator:
             raise ValueError(f"duplicate pid {proc.pid}")
         self.processes[proc.pid] = proc
 
+    # -- batch scheduling -------------------------------------------------
+    def push_run(self, time: float, cbs: List[Callable[[], None]]) -> None:
+        """Enqueue a contiguous same-timestamp run of callbacks as ONE heap
+        entry (batch fan-out; see ``NetworkModel.send_fanout``).  The run
+        shares a single sequence number and executes back-to-back in list
+        order, which is exactly the ``(time, seq)`` order n individual
+        pushes made in the same loop would produce: the pushes would hold
+        consecutive seqs with nothing in between, so no other event can
+        sort into the middle of the run."""
+        if time < self.now:
+            time = self.now
+        self._seq += 1
+        heapq.heappush(self._heap, (time, self._seq, cbs))
+
     # -- main loop -------------------------------------------------------
-    def run(self, until: Optional[float] = None, max_events: int = 50_000_000) -> None:
+    def _drain(self, until: Optional[float], pred: Optional[Callable[[], bool]],
+               max_events: int) -> None:
+        """The one pop loop behind :meth:`run` and :meth:`run_until`.
+
+        Executes events in ``(time, seq)`` order until the heap drains,
+        the next event lies past ``until``, or ``pred()`` turns true
+        (sampled between events, exactly like the per-event loops this
+        replaced).  A heap entry whose callback slot holds a *list* is a
+        coalesced run from :meth:`push_run` — its callbacks execute
+        back-to-back under one heap pop, and each counts as one event."""
         heap = self._heap
         pop = heapq.heappop
         n = 0
         try:
             while heap:
+                if pred is not None and pred():
+                    return
                 if until is not None and heap[0][0] > until:
-                    self.now = until
                     return
                 time, _seq, cb = pop(heap)
                 self.now = time
-                cb()
-                n += 1
+                if cb.__class__ is list:
+                    for c in cb:
+                        c()
+                    n += len(cb)
+                else:
+                    cb()
+                    n += 1
                 if n >= max_events:
                     raise RuntimeError(
                         f"simulation exceeded {max_events} events at t={self.now}")
         finally:
             self.events_processed += n
+
+    def run(self, until: Optional[float] = None, max_events: int = 50_000_000) -> None:
+        self._drain(until, None, max_events)
         if until is not None:
             self.now = until
 
     def run_until(self, pred: Callable[[], bool], timeout: float = 10_000_000.0,
                   max_events: int = 50_000_000) -> bool:
         """Run until ``pred()`` is true.  Returns False on timeout."""
-        deadline = self.now + timeout
-        heap = self._heap
-        pop = heapq.heappop
-        n = 0
-        try:
-            while heap and not pred():
-                if heap[0][0] > deadline:
-                    return pred()
-                time, _seq, cb = pop(heap)
-                self.now = time
-                cb()
-                n += 1
-                if n >= max_events:
-                    raise RuntimeError(
-                        f"simulation exceeded {max_events} events at t={self.now}")
-        finally:
-            self.events_processed += n
+        self._drain(self.now + timeout, pred, max_events)
         return pred()
 
 

@@ -83,6 +83,10 @@ class NetworkModel:
         self.degraded: Dict[str, Tuple[float, float, random.Random]] = {}
         self.bytes_sent: int = 0
         self.msgs_sent: int = 0
+        #: messages that went through :meth:`send_fanout`
+        self.fanout_msgs: int = 0
+        #: same-timestamp delivery runs enqueued as one heap entry
+        self.coalesced_runs: int = 0
         self._jitter_buf = None
         self._jitter_idx = 0
         self._jitter_sigma = None   # sigma the buffer was drawn with
@@ -172,6 +176,88 @@ class NetworkModel:
         # inlined sim.after() — one call frame per message matters here
         sim._seq += 1
         heapq.heappush(sim._heap, (sim.now + lat, sim._seq, _arrive))
+
+    def send_fanout(self, src: str, dsts: Any, msg: Any, size: int) -> None:
+        """Fan ONE encoded message to many peers in one call.
+
+        Equivalent to ``for dst in dsts: send(src, dst, msg, size)`` —
+        bit-identical, because jitter factors are drawn per destination in
+        ``dsts`` order from the same pre-drawn block — but the guard
+        checks, accounting, and base-latency math are hoisted out of the
+        loop.  Whenever the fabric has *any* per-link state (partitions,
+        forced drops, degradations, link delays) it falls back to the
+        scalar path, which short-circuits drops before drawing jitter.
+
+        When the per-hop latency is fully deterministic (``jitter_sigma ==
+        0``), all n deliveries land on the same timestamp and are enqueued
+        as one coalesced heap run (``Simulator.push_run``), preserving
+        ``(time, seq)`` execution order exactly (the n individual pushes
+        would have held consecutive seqs)."""
+        if self.forced or self.partitioned or self.degraded or self.link_delay:
+            for dst in dsts:
+                self.send(src, dst, msg, size)
+            return
+        ndst = len(dsts)
+        self.bytes_sent += size * ndst
+        self.msgs_sent += ndst
+        self.fanout_msgs += ndst
+        p = self.p
+        base = p.base_us + size * p.per_byte_us
+        sim = self.sim
+        now = sim.now
+        procs = sim.processes
+        heap = sim._heap
+        sigma = p.jitter_sigma
+
+        if sigma > 0:
+            buf = self._jitter_buf
+            i = self._jitter_idx
+            for dst in dsts:
+                if buf is None or i >= len(buf) or \
+                        sigma != self._jitter_sigma:
+                    self._jitter_idx = i
+                    lat = base * self.jitter()
+                    buf = self._jitter_buf
+                    i = self._jitter_idx
+                else:
+                    lat = base * buf[i]
+                    i += 1
+                proc = procs.get(dst)
+                if proc is None or proc.crashed:
+                    continue
+
+                def _arrive(dst: str = dst) -> None:
+                    pr = procs.get(dst)
+                    if pr is not None:
+                        pr.deliver(src, msg, size)
+
+                sim._seq += 1
+                heapq.heappush(heap, (now + lat, sim._seq, _arrive))
+            self._jitter_idx = i
+            return
+
+        # deterministic latency: every delivery shares one timestamp
+        run = []
+        append = run.append
+        for dst in dsts:
+            proc = procs.get(dst)
+            if proc is None or proc.crashed:
+                continue
+
+            def _arrive(dst: str = dst) -> None:
+                pr = procs.get(dst)
+                if pr is not None:
+                    pr.deliver(src, msg, size)
+
+            append(_arrive)
+        if not run:
+            return
+        if len(run) == 1:
+            sim._seq += 1
+            heapq.heappush(heap, (now + base, sim._seq, run[0]))
+            return
+        self.coalesced_runs += 1
+        sim.push_run(now + base, run)
 
     # -- asynchrony / failure injection ------------------------------------
     def degrade_src(self, pid: str, delay_us: float = 0.0,
